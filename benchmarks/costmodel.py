@@ -1,0 +1,261 @@
+"""Analytic per-cell FLOP / HBM-traffic model for the roofline.
+
+Why analytic: XLA's ``cost_analysis()`` counts a while-loop body ONCE, so
+under scan-over-layers it underreports FLOPs by ~L and is useless for a
+roofline. This model counts the dense algebra of every family exactly
+(matmul 2mnk, attention 2BHS^2Dh causal-halved, SSD/RWKV chunk recurrences)
+and is cross-checked against HLO flops on an unrolled 2-layer probe
+(tests/test_costmodel.py).
+
+Conventions:
+  * flops are GLOBAL (whole mesh) per executed step;
+  * hbm bytes are PER DEVICE per step (params/opt/cache use the exact
+    sharded sizes recorded by the dry-run; activations are modeled);
+  * MODEL_FLOPS is the assignment's useful-compute definition
+    (6·N·D train / 2·N·D inference, N_active for MoE);
+  * COMPILED_FLOPS adds the remat recompute the compiled graph actually
+    executes, so MODEL/COMPILED exposes remat+redundancy waste.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+@dataclass
+class CellCost:
+    n_params: float
+    n_active: float  # per-token active params (MoE)
+    model_flops: float
+    fwd_flops: float  # forward pass, global
+    compiled_flops: float  # what the graph executes (remat included)
+    act_bytes_per_dev: float  # activation HBM traffic per device
+    attn_probs_bytes_per_dev: float  # ref-attention S^2 materialisation
+    notes: str = ""
+
+
+def _dense_layer_params(cfg: ModelConfig) -> float:
+    d, f = cfg.d_model, cfg.d_ff
+    dh = cfg.head_dim_
+    attn = d * cfg.n_heads * dh + 2 * d * cfg.n_kv_heads * dh \
+        + cfg.n_heads * dh * d
+    return attn + 3 * d * f
+
+
+def _mla_layer_params(cfg: ModelConfig) -> float:
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope, vd, r = (
+        cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    )
+    q = (d * cfg.q_lora_rank + cfg.q_lora_rank * h * (nope + rope)
+         if cfg.q_lora_rank else d * h * (nope + rope))
+    kv = d * (r + rope) + r * h * nope + r * h * vd
+    return q + kv + h * vd * d
+
+
+def _moe_layer_params(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.moe_d_ff
+    routed = cfg.moe_experts * 3 * d * f
+    shared = cfg.moe_shared * 3 * d * f
+    active = cfg.moe_top_k * 3 * d * f + shared
+    return routed + shared, active
+
+
+def _rwkv_layer_params(cfg: ModelConfig) -> float:
+    d, f = cfg.d_model, cfg.d_ff
+    tm = 5 * d * d + d * cfg.rwkv_lora_rank * 6 + d * cfg.rwkv_decay_lora_rank * 2
+    cm = 2 * d * f + d * d
+    return tm + cm
+
+
+def _zamba_layer_params(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = di // 64
+    return d * (2 * di + 2 * n + h) + di * d + cfg.ssm_conv * (di + 2 * n)
+
+
+def _zamba_shared_params(cfg: ModelConfig) -> float:
+    d2 = 2 * cfg.d_model
+    return 4 * d2 * d2 + 3 * d2 * cfg.d_ff + d2 * cfg.d_model
+
+
+def counts(cfg: ModelConfig) -> Dict[str, float]:
+    """Total and per-token-active parameter counts."""
+    d, v, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "dense":
+        body = L * _dense_layer_params(cfg)
+        return {"total": emb + body, "active": emb + body}
+    if cfg.family == "moe_mla":
+        n_moe = L - cfg.first_k_dense
+        attn = L * _mla_layer_params(cfg)
+        dense = cfg.first_k_dense * 3 * d * cfg.d_ff_dense
+        routed_tot, routed_act = _moe_layer_params(cfg)
+        total = emb + attn + dense + n_moe * routed_tot \
+            + n_moe * d * cfg.moe_experts
+        active = emb + attn + dense + n_moe * routed_act
+        if cfg.mtp:
+            mtp = 2 * d * d + _mla_layer_params(cfg) + 3 * d * cfg.d_ff
+            total += mtp
+            active += mtp
+        return {"total": total, "active": active}
+    if cfg.family == "rwkv6":
+        body = L * _rwkv_layer_params(cfg)
+        return {"total": emb + body, "active": emb + body}
+    if cfg.family == "hybrid":
+        n_inv = L // cfg.shared_attn_period
+        body = L * _zamba_layer_params(cfg) \
+            + cfg.n_shared_blocks * _zamba_shared_params(cfg)
+        active = L * _zamba_layer_params(cfg) \
+            + n_inv * _zamba_shared_params(cfg)  # shared weights reused
+        return {"total": emb + body, "active": emb + active}
+    if cfg.family == "vlm":
+        g = L // cfg.cross_attn_period
+        dh = cfg.head_dim_
+        x = g * (
+            d * cfg.n_heads * dh + 2 * d * cfg.n_kv_heads * dh
+            + cfg.n_heads * dh * d + 3 * d * cfg.d_ff
+        )
+        body = L * _dense_layer_params(cfg) + x
+        return {"total": emb + body, "active": emb + body}
+    if cfg.family == "encdec":
+        dh = cfg.head_dim_
+        attn = d * cfg.n_heads * dh + 2 * d * cfg.n_kv_heads * dh \
+            + cfg.n_heads * dh * d
+        enc = cfg.enc_layers * (attn + 2 * d * cfg.d_ff)
+        dec = cfg.dec_layers * (2 * attn + 2 * d * cfg.d_ff)
+        return {"total": emb + enc + dec, "active": emb + enc + dec}
+    raise ValueError(cfg.family)
+
+
+def _attn_flops(b, h, s_q, s_kv, dh, causal=True) -> float:
+    f = 4.0 * b * h * s_q * s_kv * dh  # scores + values, 2mnk each
+    return f / 2 if causal and s_q == s_kv else f
+
+
+def analyze(cfg: ModelConfig, shape: ShapeSpec, n_devices: int) -> CellCost:
+    c = counts(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    tokens = B * S
+    d, L = cfg.d_model, cfg.n_layers
+    dh = cfg.head_dim_
+    act_dt = 2 if cfg.compute_dtype == "bfloat16" else 4
+
+    if shape.kind == "decode":
+        # one token per stream against the cache
+        mat = 2.0 * B * c["active"]
+        if cfg.family in ("dense", "vlm"):
+            attn = L * _attn_flops(B, cfg.n_heads, 1, S, dh, causal=False)
+            if cfg.family == "vlm":
+                g = L // cfg.cross_attn_period
+                attn += g * _attn_flops(
+                    B, cfg.n_heads, 1, cfg.img_seq, dh, causal=False
+                )
+        elif cfg.family == "moe_mla":
+            r = cfg.kv_lora_rank + cfg.qk_rope_dim
+            attn = L * (2.0 * B * cfg.n_heads * S * r
+                        + 2.0 * B * cfg.n_heads * S * cfg.kv_lora_rank)
+        elif cfg.family == "rwkv6":
+            attn = L * 6.0 * B * d * cfg.rwkv_head_dim
+        elif cfg.family == "hybrid":
+            n_inv = L // cfg.shared_attn_period
+            w = min(cfg.attn_window or S, S)
+            attn = L * 6.0 * B * cfg.ssm_expand * d * cfg.ssm_state \
+                + n_inv * _attn_flops(B, cfg.n_heads, 1, w, 2 * d // cfg.n_heads,
+                                      causal=False)
+        elif cfg.family == "encdec":
+            s_src = max(16, int(S * cfg.src_seq_frac))
+            attn = cfg.dec_layers * (
+                _attn_flops(B, cfg.n_heads, 1, S, dh, causal=False)
+                + _attn_flops(B, cfg.n_heads, 1, s_src, dh, causal=False)
+            )
+        fwd = mat + attn
+        return CellCost(
+            n_params=c["total"], n_active=c["active"],
+            model_flops=2.0 * B * c["active"],
+            fwd_flops=fwd, compiled_flops=fwd,
+            act_bytes_per_dev=B * L * 12 * d * act_dt / n_devices,
+            attn_probs_bytes_per_dev=0.0,
+        )
+
+    # train / prefill: full sequences
+    mat = 2.0 * tokens * c["active"]
+    probs_bytes = 0.0
+    if cfg.family in ("dense", "vlm"):
+        attn = L * _attn_flops(B, cfg.n_heads, S, S, dh)
+        probs_bytes = L * B * cfg.n_heads * S * S * 4.0 / n_devices
+        if cfg.family == "vlm":
+            g = L // cfg.cross_attn_period
+            attn += g * _attn_flops(B, cfg.n_heads, S, cfg.img_seq, dh, False)
+            probs_bytes += g * B * cfg.n_heads * S * cfg.img_seq * 4.0 / n_devices
+    elif cfg.family == "moe_mla":
+        attn = L * _attn_flops(
+            B, cfg.n_heads, S, S, cfg.qk_nope_dim + cfg.qk_rope_dim
+        ) * 0.5 + L * _attn_flops(B, cfg.n_heads, S, S, cfg.v_head_dim) * 0.5
+        probs_bytes = L * B * cfg.n_heads * S * S * 4.0 / n_devices
+    elif cfg.family == "rwkv6":
+        ch = cfg.scan_chunk
+        # chunked: intra (C^2 K log-space, 3 passes) + inter state matmuls
+        attn = L * B * (cfg.d_model / cfg.rwkv_head_dim) * (
+            (S * ch) * cfg.rwkv_head_dim * 6.0
+            + S * cfg.rwkv_head_dim * cfg.rwkv_head_dim * 4.0
+        )
+    elif cfg.family == "hybrid":
+        n_inv = L // cfg.shared_attn_period
+        di, n = cfg.ssm_expand * d, cfg.ssm_state
+        ch = cfg.scan_chunk
+        attn = L * B * (
+            S * ch * (di / 64) * 2.0 + S * n * di * 4.0 + S * ch * n * 2.0
+        ) + n_inv * _attn_flops(B, cfg.n_heads, S, S, 2 * d // cfg.n_heads)
+        probs_bytes = n_inv * B * cfg.n_heads * S * S * 4.0 / n_devices
+    elif cfg.family == "encdec":
+        s_src = max(16, int(S * cfg.src_seq_frac))
+        b_src = B
+        attn = cfg.enc_layers * _attn_flops(b_src, cfg.n_heads, s_src, s_src,
+                                            dh, causal=False) \
+            + cfg.dec_layers * (
+                _attn_flops(B, cfg.n_heads, S, S, dh)
+                + _attn_flops(B, cfg.n_heads, S, s_src, dh, causal=False)
+            )
+        probs_bytes = (
+            cfg.enc_layers * b_src * cfg.n_heads * s_src * s_src
+            + cfg.dec_layers * B * cfg.n_heads * (S * S / 2 + S * s_src)
+        ) * 4.0 / n_devices
+
+    fwd = mat + attn
+    if shape.kind == "prefill":
+        act = tokens * L * 12 * d * act_dt / n_devices + probs_bytes
+        return CellCost(
+            n_params=c["total"], n_active=c["active"],
+            model_flops=2.0 * tokens * c["active"],
+            fwd_flops=fwd, compiled_flops=fwd,
+            act_bytes_per_dev=act,
+            attn_probs_bytes_per_dev=probs_bytes,
+        )
+    # train: bwd = 2x fwd matmul+attn; remat recomputes the fwd of each
+    # layer body. "full" policy replays the whole forward; "dots" saves
+    # matmul outputs (attention/elementwise redone + ~half the matmuls).
+    if not cfg.remat:
+        remat = 0.0
+    elif cfg.remat_policy == "full":
+        remat = fwd
+    else:
+        remat = 0.5 * mat + attn
+    compiled = 3.0 * fwd + remat
+    # activations: fwd write + bwd read (+ remat rewrite/read) of ~12
+    # values of width d per token per layer, plus ref-attn probs twice.
+    k = 2 + (2 if cfg.remat else 0)
+    act = tokens * L * 12 * d * act_dt * k / 2 / n_devices \
+        + probs_bytes * (2 if cfg.remat else 1)
+    return CellCost(
+        n_params=c["total"], n_active=c["active"],
+        model_flops=6.0 * tokens * c["active"],
+        fwd_flops=fwd, compiled_flops=compiled,
+        act_bytes_per_dev=act,
+        attn_probs_bytes_per_dev=probs_bytes,
+    )

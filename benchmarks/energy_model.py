@@ -1,0 +1,155 @@
+"""Figure-6 reproduction: system energy + memory across 7 configurations.
+
+Runs the EPIC pipeline on synthetic streams to obtain real activity
+counters, derives matched-accuracy schedules for the baseline systems
+(paper Section 6: GCS/SDS/TDS are configured to match EPIC's accuracy,
+which on the synthetic task corresponds to a ~4x larger retained budget —
+taken from the Table-1 sweep), and evaluates the analytical energy model
+for FVS / SDS / TDS / GCS / EPIC+GPU / EPIC+Acc / EPIC+Acc+InSensor.
+
+Headline checks vs the paper: EPIC+Acc+InSensor beats FVS by >=10x on
+both energy and memory (paper: 24.3x / 27.5x), and beats the
+accuracy-matched TDS/SDS/GCS by >=2x (paper: 2.4-3.1x energy).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as E
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+FRAME = 64
+PATCH = 16
+N_FRAMES = 240  # 24 s @ 10 FPS — long enough for temporal redundancy to bite
+N_STREAMS = 6
+# The simulator renders 64x64 (CPU budget); an AR glass sensor is ~1 Mpx.
+# Pixel-proportional terms (capture / MIPI / ISP / codec / patch storage &
+# reprojection) scale by RES_SCALE; the depth + HIR CNNs do NOT scale —
+# the paper resizes their input to 64x64 regardless of sensor resolution
+# (Section 3.2), which the simulation matches natively.
+TARGET_RES = 1024
+RES_SCALE = (TARGET_RES // FRAME) ** 2
+# Accuracy-matched budget multiplier for SDS/TDS/GCS (from the Table-1
+# sweep: baselines need ~4x EPIC's memory to reach its accuracy).
+MATCH_FACTOR = 4.0
+ENTRY_BYTES = PATCH * PATCH * 3 + PATCH * PATCH * 2 + 64
+
+
+def run(seed: int = 0) -> Dict:
+    key = jax.random.PRNGKey(seed)
+    # Realistic egocentric head dynamics: long quasi-static fixations
+    # (slow sway, little jitter) — this is exactly the regime the paper's
+    # Frame Bypass Check exploits ("short periods of head stability").
+    scfg = SYN.StreamConfig(
+        n_frames=N_FRAMES, hw=(FRAME, FRAME), n_obj=5,
+        motion_amp=0.12, motion_freq=0.006, walk_speed=0.003,
+        jitter=0.0008, gaze_jitter_px=1.0, n_segments=6,
+    )
+    ecfg = P.EPICConfig(
+        frame_hw=(FRAME, FRAME), patch=PATCH, capacity=48,
+        tau=0.10, gamma=0.03, theta=30, window=16,
+    )
+    comp = jax.jit(
+        lambda f, p, g, d: P.compress_stream(
+            f, p, g, ecfg, P.EPICModels(), depth_gt=d
+        )
+    )
+
+    counters = []
+    for i in range(N_STREAMS):
+        s, _ = SYN.generate_stream(jax.random.fold_in(key, i), scfg)
+        state, stats = comp(s.frames, s.poses, s.gazes, s.depth)
+        counters.append(P.stream_counters(ecfg, stats))
+
+    def avg(field):
+        return float(np.mean([getattr(c, field) for c in counters]))
+
+    s = RES_SCALE
+    frame_px = FRAME * FRAME * s
+    patch_px = PATCH * PATCH * s
+    video_bytes = N_FRAMES * frame_px * 3
+    epic_stored = avg("stored_bytes") * s
+
+    base = dict(n_frames=N_FRAMES, frame_px=frame_px, patch_px=patch_px)
+    epic_c = E.StreamCounters(
+        **base,
+        n_processed=int(avg("n_processed")),
+        depth_macs=int(avg("depth_macs")),  # 64x64 input by design (§3.2)
+        hir_macs=int(avg("hir_macs")),
+        n_bbox_checks=int(avg("n_bbox_checks")),
+        n_full_checks=int(avg("n_full_checks")),
+        stored_bytes=int(epic_stored),
+        dc_traffic_bytes=int(avg("dc_traffic_bytes") * s),
+    )
+    # FVS: every frame crosses MIPI/ISP and is H.264-encoded (energy), but
+    # the EFM-visible context is the raw buffered stream (memory — this is
+    # the "Mem." column of Table 1 and the red line of Figure 6).
+    fvs_c = E.StreamCounters(
+        **base, n_processed=N_FRAMES,
+        stored_bytes=video_bytes, h264=True,
+    )
+    matched = int(epic_stored * MATCH_FACTOR)
+    frac = matched / video_bytes
+    # TDS: frame subset at full res; SDS: all frames downsampled; GCS: all
+    # frames, cropped region. In all three the readout+codec work scales
+    # with the retained fraction; model it via effective processed frames.
+    tds_c = E.StreamCounters(
+        **base, n_processed=max(1, int(N_FRAMES * frac)),
+        stored_bytes=matched, h264=True,
+    )
+    sds_c = tds_c
+    gcs_c = tds_c  # same readout fraction at matched budget
+
+    systems = {
+        "FVS": ("FVS", fvs_c),
+        "TDS": ("TDS", tds_c),
+        "SDS": ("SDS", sds_c),
+        "GCS": ("GCS", gcs_c),
+        "EPIC+GPU": ("EPIC+GPU", epic_c),
+        "EPIC+Acc": ("EPIC+Acc", epic_c),
+        "EPIC+Acc+InSensor": ("EPIC+Acc+InSensor", epic_c),
+    }
+    rows = {}
+    for label, (sysname, c) in systems.items():
+        br = E.system_energy(sysname, c)
+        rows[label] = {
+            "energy_J": sum(br.values()),
+            "energy_breakdown": {k: round(v, 6) for k, v in br.items()},
+            "memory_bytes": E.memory_footprint_bytes(c),
+        }
+
+    e_epic = rows["EPIC+Acc+InSensor"]["energy_J"]
+    m_epic = rows["EPIC+Acc+InSensor"]["memory_bytes"]
+    ratios = {
+        f"{k}_vs_EPIC": {
+            "energy": round(v["energy_J"] / e_epic, 2),
+            "memory": round(v["memory_bytes"] / max(m_epic, 1), 2),
+        }
+        for k, v in rows.items()
+    }
+    out = {"systems": rows, "ratios": ratios}
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "energy_model.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    for k, v in rows.items():
+        print(
+            f"[energy] {k:18s} E={v['energy_J']*1e3:8.2f} mJ  "
+            f"mem={v['memory_bytes']/1e3:8.1f} kB  "
+            f"({ratios[f'{k}_vs_EPIC']['energy']:6.2f}x E, "
+            f"{ratios[f'{k}_vs_EPIC']['memory']:6.2f}x M vs EPIC)"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Optimized (beyond-paper) distribution recipes per (arch x shape-kind).
+
+Derived from the §Perf hillclimb (benchmarks/results/perf_iter.jsonl):
+
+  * small dense / rwkv6 / zamba2 / seamless (<4B params): tensor
+    parallelism is the wrong regime at 256 chips — pure DP + ZeRO-1
+    moments removes the per-layer activation all-reduces entirely
+    (olmo train: collective 2.31s -> 0.16s, bound-MFU 6.3% -> 75.8%).
+  * chunked (flash) attention: kills the O(S^2) probs materialisation
+    (olmo temp 28 GiB -> 10 GiB with full remat).
+  * deepseek MoE: shard_map expert-parallel all-to-all dispatch instead
+    of the GSPMD global-sort (v3 train: collective 259.7s -> 8.1s),
+    FSDP for the attention/embed weights, capacity factor 1.0.
+  * vlm (11B): FSDP (weights < activations per layer at B_loc=1).
+  * decode shapes: the flash-decoding partitioning fix lives in
+    layers.attention_decode and activates from the cache layout alone
+    (vlm decode: collective 1.63s -> 0.002s), so no override needed.
+
+The paper-faithful BASELINE numbers live in dryrun_baseline.jsonl; this
+table feeds the optimized sweep (dryrun --opt -> dryrun_opt.jsonl).
+"""
+
+DENSE_TRAIN = dict(
+    shard_strategy="dp", attn_backend="chunked", remat_policy="full"
+)
+DENSE_PREFILL = dict(shard_strategy="dp", attn_backend="chunked")
+
+OPT_OVERRIDES = {
+    "olmo-1b": {"train": DENSE_TRAIN, "prefill": DENSE_PREFILL},
+    "tinyllama-1.1b": {"train": DENSE_TRAIN, "prefill": DENSE_PREFILL},
+    "qwen2.5-3b": {"train": DENSE_TRAIN, "prefill": DENSE_PREFILL},
+    "phi4-mini-3.8b": {"train": DENSE_TRAIN, "prefill": DENSE_PREFILL},
+    "deepseek-v2-lite-16b": {
+        "train": dict(moe_impl="ep", attn_backend="chunked",
+                      remat_policy="full", moe_capacity_factor=1.0,
+                      shard_strategy="fsdp"),
+        # prefill batch (32) doesn't cover (data x model): EP layout 2
+        # (batch over data, seq over model) under plain TP weights
+        "prefill": dict(moe_impl="ep", attn_backend="chunked"),
+    },
+    "deepseek-v3-671b": {
+        "train": dict(moe_impl="ep", shard_strategy="fsdp",
+                      attn_backend="chunked", remat_policy="full",
+                      moe_capacity_factor=1.0, moe_a2a_quant=True),
+        "prefill": dict(moe_impl="ep", attn_backend="chunked",
+                        moe_capacity_factor=1.0, moe_a2a_quant=True),
+    },
+    "rwkv6-3b": {
+        "train": dict(shard_strategy="dp", remat_policy="full"),
+        "prefill": dict(shard_strategy="dp"),
+    },
+    "zamba2-2.7b": {
+        "train": dict(shard_strategy="dp", attn_backend="chunked",
+                      remat_policy="full"),
+        "prefill": dict(shard_strategy="dp", attn_backend="chunked"),
+    },
+    # vlm keeps TP weights: 21 GB bf16 cannot replicate (dp), and fsdp
+    # triggers a GSPMD activation-gather pathology on the square (D,D)
+    # projections at B_loc=1 (2.5 TB/dev measured; perf_iter.jsonl
+    # 'vlm-fsdp-diag'). Chunked attention + full remat fix its memory.
+    "llama-3.2-vision-11b": {
+        "train": dict(attn_backend="chunked", remat_policy="full"),
+        "prefill": dict(attn_backend="chunked"),
+    },
+    "seamless-m4t-large-v2": {
+        "train": dict(shard_strategy="dp", attn_backend="chunked",
+                      remat_policy="full"),
+        "prefill": dict(shard_strategy="dp", attn_backend="chunked"),
+    },
+}
+
+
+def overrides_for(arch: str, kind: str) -> dict:
+    return OPT_OVERRIDES.get(arch, {}).get(kind, {})

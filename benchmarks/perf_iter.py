@@ -1,0 +1,143 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+"""Perf-iteration harness: re-lower ONE cell with config overrides and
+report the roofline terms + the top collectives, for the §Perf hillclimb.
+
+  python -m benchmarks.perf_iter --arch olmo-1b --shape train_4k \
+      --set shard_strategy=dp --set compute_dtype=bfloat16 [--dump hlo.txt]
+
+Each invocation prints a compact before/after-comparable report and
+appends a JSONL record to benchmarks/results/perf_iter.jsonl.
+"""
+
+import argparse
+import json
+import re
+import time
+
+import jax
+
+from repro.configs import get_config, get_shapes
+from repro.launch.mesh import DCN_BW, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def parse_overrides(pairs):
+    out = {}
+    for p in pairs or ():
+        k, v = p.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "true"):
+            v = True
+        if v in ("False", "false"):
+            v = False
+        out[k] = v
+    return out
+
+
+def run_cell(arch, shape_name, multi_pod, overrides, label, dump=None):
+    import repro.launch.dryrun as DR
+    from benchmarks import costmodel
+    from benchmarks.roofline import _chips
+
+    cfg0 = get_config(arch)
+    cfg = cfg0.replace(**overrides) if overrides else cfg0
+
+    t0 = time.time()
+    lowered, aux = DR.lower_cell(arch, shape_name, multi_pod, overrides)
+    compiled = lowered.compile()
+    t1 = time.time()
+    from repro.launch.hloparse import analyze_collectives
+
+    txt = compiled.as_text()
+    if dump:
+        with open(dump, "w") as f:
+            f.write(txt)
+    coll = analyze_collectives(txt)
+
+    mesh = "2x16x16" if multi_pod else "16x16"
+    chips = _chips(mesh)
+    shape = next(s for s in get_shapes(arch) if s.name == shape_name)
+    cost = costmodel.analyze(cfg, shape, chips)
+
+    mem = compiled.memory_analysis()
+    temp = int(getattr(mem, "temp_size_in_bytes", 0)) if mem else 0
+
+    t_compute = cost.compiled_flops / (chips * PEAK_FLOPS_BF16)
+    pb = aux.get("param_bytes_per_device", 0)
+    ob = aux.get("opt_bytes_per_device", 0)
+    cb = aux.get("cache_bytes_per_device", 0)
+    if shape.kind == "train":
+        hbm = 3 * pb + 2 * ob + cost.act_bytes_per_dev
+    elif shape.kind == "prefill":
+        hbm = pb + cost.act_bytes_per_dev
+    else:
+        hbm = pb + cb + cost.act_bytes_per_dev
+    t_memory = hbm / HBM_BW
+    ici = dcn = 0.0
+    for det in coll["detail"]:
+        w = det.get("tpu_wire_bytes", det["wire_bytes"])
+        if mesh == "2x16x16" and det["group"] == 2:
+            dcn += w
+        else:
+            ici += w
+    t_coll = ici / ICI_BW + dcn / DCN_BW
+    t_bound = max(t_compute, t_memory, t_coll)
+    mfu = cost.model_flops / (chips * PEAK_FLOPS_BF16) / max(t_bound, 1e-12)
+
+    rec = {
+        "label": label,
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh,
+        "overrides": overrides,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bound_mfu": mfu,
+        "temp_bytes_per_dev": temp,
+        "compile_s": round(t1 - t0, 1),
+        "coll_by_op": coll["by_op"],
+        "coll_counts": coll["counts"],
+    }
+    print(
+        f"[{label}] {arch} {shape_name} {mesh} "
+        f"compute={t_compute:.3f}s memory={t_memory:.3f}s "
+        f"collective={t_coll:.3f}s -> bound-MFU {mfu*100:.1f}% "
+        f"(temp {temp/2**30:.1f} GiB/dev)"
+    )
+    for op, b in sorted(coll["by_op"].items(), key=lambda kv: -kv[1]):
+        if b > 0:
+            print(f"      {op:20s} {b:.3e} B ({coll['counts'][op]:.0f} ops)")
+    out_path = os.path.join(
+        os.path.dirname(__file__), "results", "perf_iter.jsonl"
+    )
+    with open(out_path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", dest="sets")
+    ap.add_argument("--label", default="iter")
+    ap.add_argument("--dump", default=None)
+    args = ap.parse_args()
+    run_cell(
+        args.arch, args.shape, args.multi_pod,
+        parse_overrides(args.sets), args.label, args.dump,
+    )
+
+
+if __name__ == "__main__":
+    main()

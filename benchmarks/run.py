@@ -1,0 +1,68 @@
+"""Benchmark aggregator: one sub-benchmark per paper table/figure.
+
+  table1   -> evu_accuracy      (EVU accuracy vs memory, 5 methods)
+  figure6  -> energy_model      (system energy + memory, 7 systems)
+  ablation -> compression_sweep (motion/bypass/depth ablations)
+  roofline -> roofline          (40-cell dry-run roofline terms)
+
+``python -m benchmarks.run [--quick] [--only NAME]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    summary = {}
+
+    def want(name):
+        return args.only in (None, name)
+
+    if want("figure6"):
+        from benchmarks import energy_model
+
+        r = energy_model.run()
+        summary["figure6_energy"] = r["ratios"]
+    if want("ablation"):
+        from benchmarks import compression_sweep
+
+        r = compression_sweep.run()
+        summary["ablation"] = {
+            "depth_int8_relative_diff": r["depth_ablation"]["relative_diff"]
+        }
+    if want("roofline"):
+        from benchmarks import roofline
+
+        rows = roofline.run()
+        summary["roofline_cells"] = len(rows)
+        summary["roofline_dominant"] = {}
+        for row in rows:
+            summary["roofline_dominant"].setdefault(row["dominant"], 0)
+            summary["roofline_dominant"][row["dominant"]] += 1
+    if want("table1"):
+        from benchmarks import evu_accuracy
+
+        r = evu_accuracy.run(quick=args.quick)
+        summary["table1"] = r["results"]
+
+    summary["wall_s"] = round(time.time() - t0, 1)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    print(json.dumps(summary, indent=1)[:2000])
+
+
+if __name__ == "__main__":
+    main()

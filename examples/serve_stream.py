@@ -1,0 +1,96 @@
+"""Serving example: EPIC-compressed patches as cross-attention context for
+a (reduced) llama-3.2-vision-style VLM — prefill then batched greedy
+decode, exactly the paper's Figure 1 deployment: the glasses compress, the
+EFM answers from the retained patches.
+
+Also demonstrates the serving-memory story per family: the same token
+budget is served against a dense-KV arch vs an O(1)-state arch (rwkv6).
+
+  PYTHONPATH=src python examples/serve_stream.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import packing
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+from repro.launch.serve import greedy_decode_loop
+from repro.models import build_model
+
+
+def compress(key):
+    scfg = SYN.StreamConfig(n_frames=40, hw=(64, 64), n_obj=5)
+    ecfg = P.EPICConfig(frame_hw=(64, 64), patch=16, capacity=16,
+                        tau=0.10, gamma=0.015, theta=8, window=16)
+    s, _ = SYN.generate_stream(key, scfg)
+    state, stats = P.compress_stream(
+        s.frames, s.poses, s.gazes, ecfg, P.EPICModels(), depth_gt=s.depth
+    )
+    ts = packing.pack_dc_buffer(state.buf, 16, 40.0, 64.0)
+    kept = int(ts.mask.sum())
+    print(f"EPIC retained {kept}/640 patches "
+          f"-> cross-attention context of {ts.tokens.shape[0]} tokens")
+    return ts
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    batch = 4
+    ts = compress(jax.random.fold_in(key, 0))
+
+    # --- VLM: EPIC patches ARE the cross-attn KV ---------------------------
+    cfg = get_smoke_config("llama-3.2-vision-11b")
+    model = build_model(cfg)
+    params = model.init(jax.random.fold_in(key, 1))
+    # project EPIC token features into the VLM embedding space (the stub
+    # modality frontend of the assignment)
+    proj = jax.random.normal(
+        jax.random.fold_in(key, 2), (packing.TOKEN_FEAT, cfg.d_model)
+    ) * 0.05
+    img_embed = jnp.tile((ts.tokens @ proj)[None], (batch, 1, 1))
+
+    prompt = jax.random.randint(
+        jax.random.fold_in(key, 3), (batch, 12), 0, cfg.vocab
+    )
+    t0 = time.time()
+    logits, cache = model.prefill(
+        params, {"tokens": prompt, "img_embed": img_embed}
+    )
+    # pad self-KV cache so decode can extend the context
+    new_len = 12 + 20
+
+    def pad(a):
+        if a.ndim >= 2 and a.shape[-2] == 12:
+            w = [(0, 0)] * a.ndim
+            w[-2] = (0, new_len - 12)
+            return jnp.pad(a, w)
+        return a
+
+    cache = jax.tree.map(pad, cache)
+    first = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    out, _ = greedy_decode_loop(model, params, cache, first, 12, 19)
+    dt = time.time() - t0
+    print(f"VLM: prefill(12) + 20-token greedy decode x batch {batch} "
+          f"in {dt:.1f}s -> tokens[0] = {np.asarray(out[0])[:8]}...")
+
+    # --- serving-memory story: KV-cache vs O(1) state ----------------------
+    for arch in ("qwen2.5-3b", "rwkv6-3b"):
+        cfg = get_smoke_config(arch)
+        m = build_model(cfg)
+        state = m.init_serve(batch, 4096)
+        nbytes = sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(state)
+        )
+        print(f"serve-state bytes @4k ctx, batch {batch}: "
+              f"{arch:12s} {nbytes/1e6:8.2f} MB "
+              f"({'O(ctx) KV cache' if arch.startswith('qwen') else 'O(1) recurrent state'})")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

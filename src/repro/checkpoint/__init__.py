@@ -1,0 +1,10 @@
+"""Checkpoint substrate: atomic sharded npz + async save + elastic restore."""
+
+from repro.checkpoint import store  # noqa: F401
+from repro.checkpoint.store import (  # noqa: F401
+    AsyncSaver,
+    gc_old,
+    latest_step,
+    restore,
+    save,
+)

@@ -1,0 +1,14 @@
+"""EPIC core algorithm: the paper's primary contribution in JAX.
+
+Modules:
+  geometry       — Eq.1 reprojection, bboxes, bilinear sampling
+  depth          — FastDepth-lite monocular depth (+ int8 PTQ)
+  hir            — Human Intention Refinement saliency CNN
+  dc_buffer      — Duplication-Check buffer (functional, fixed capacity)
+  tsrc           — Temporal-Spatial Redundancy Check
+  frame_bypass   — in-sensor Frame Bypass gate
+  pipeline       — streaming compressor (scan over frames)
+  baselines      — FV / SD / TD / GC comparison methods
+  packing        — retained patches -> EFM token stream
+  energy         — Figure-6 analytical energy/memory model
+"""

@@ -1,0 +1,150 @@
+"""Baseline video-compression methods from the paper's evaluation (Section 5).
+
+  * FV — Full Video: all frames at original FPS and resolution.
+  * SD — Spatial Downsample: original FPS, frames uniformly downsampled to a
+         target memory budget.
+  * TD — Temporal Downsample: original resolution, frames uniformly skipped
+         to the target memory budget.
+  * GC — Gaze Crop: a square region centred at the gaze point per frame,
+         sized to the target memory budget.
+
+Each baseline emits the same *retained-patch record* format as EPIC's DC
+buffer (patch pixels + timestamp + origin), so the downstream EFM tokenizer
+(`core/packing.py`) is method-agnostic and accuracy comparisons are
+apples-to-apples at matched memory budgets, as in Table 1.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class RetainedPatches(NamedTuple):
+    """Method-agnostic retained representation (fixed capacity, masked)."""
+
+    rgb: Array  # (N, P, P, 3)
+    t: Array  # (N,) frame timestamp
+    origin: Array  # (N, 2) patch top-left (row, col) in its frame
+    valid: Array  # (N,) bool
+
+    def memory_bytes(self) -> Array:
+        p = self.rgb.shape[1]
+        per = p * p * 3 + 16  # uint8 RGB + light metadata
+        return jnp.sum(self.valid.astype(jnp.int32)) * per
+
+
+def _grid_patches(frames: Array, patch: int) -> Tuple[Array, Array, Array]:
+    """All patches of all frames: (T*G*G, P, P, 3), t, origins."""
+    t, h, w, c = frames.shape
+    g = h // patch
+    x = frames[:, : g * patch, : g * patch]
+    x = x.reshape(t, g, patch, g, patch, c).transpose(0, 1, 3, 2, 4, 5)
+    patches = x.reshape(t * g * g, patch, patch, c)
+    oy, ox = jnp.meshgrid(
+        jnp.arange(g, dtype=jnp.float32) * patch,
+        jnp.arange(g, dtype=jnp.float32) * patch,
+        indexing="ij",
+    )
+    origins = jnp.tile(
+        jnp.stack([oy.ravel(), ox.ravel()], -1), (t, 1)
+    )
+    ts = jnp.repeat(jnp.arange(t, dtype=jnp.float32), g * g)
+    return patches, ts, origins
+
+
+def full_video(frames: Array, patch: int) -> RetainedPatches:
+    """FV: retain everything (the memory-unbounded reference)."""
+    patches, ts, origins = _grid_patches(frames, patch)
+    return RetainedPatches(
+        patches, ts, origins, jnp.ones((patches.shape[0],), bool)
+    )
+
+
+def temporal_downsample(
+    frames: Array, patch: int, budget_patches: int
+) -> RetainedPatches:
+    """TD: keep every k-th frame at full resolution, k set by the budget."""
+    t, h, w, _ = frames.shape
+    g = h // patch
+    per_frame = g * g
+    n_keep_frames = max(1, budget_patches // per_frame)
+    stride = max(1, t // n_keep_frames)
+    kept = frames[::stride][:n_keep_frames]
+    patches, ts, origins = _grid_patches(kept, patch)
+    ts = ts * stride  # restore original timestamps
+    return _pad_to(patches, ts, origins, budget_patches)
+
+
+def spatial_downsample(
+    frames: Array, patch: int, budget_patches: int
+) -> RetainedPatches:
+    """SD: keep all frames, downsample each so total patches fit the budget.
+
+    A frame downsampled by factor s contributes (G/s)^2 patches; we realise
+    this by resizing the frame and re-gridding.
+    """
+    t, h, w, _ = frames.shape
+    g = h // patch
+    per_frame_budget = max(1, budget_patches // t)
+    gg = max(1, int(math.floor(math.sqrt(per_frame_budget))))
+    gg = min(gg, g)
+    new_hw = gg * patch
+    small = jax.image.resize(
+        frames, (t, new_hw, new_hw, 3), method="bilinear"
+    )
+    patches, ts, origins = _grid_patches(small, patch)
+    scale = h / new_hw
+    return _pad_to(patches, ts, origins * scale, budget_patches)
+
+
+def gaze_crop(
+    frames: Array, gazes: Array, patch: int, budget_patches: int
+) -> RetainedPatches:
+    """GC: crop a square around the gaze point in every frame."""
+    t, h, w, _ = frames.shape
+    per_frame_budget = max(1, budget_patches // t)
+    gg = max(1, int(math.floor(math.sqrt(per_frame_budget))))
+    crop = gg * patch
+    crop = min(crop, h)
+
+    def one(frame, gaze):
+        cy = jnp.clip(gaze[1] - crop / 2, 0, h - crop).astype(jnp.int32)
+        cx = jnp.clip(gaze[0] - crop / 2, 0, w - crop).astype(jnp.int32)
+        region = jax.lax.dynamic_slice(frame, (cy, cx, 0), (crop, crop, 3))
+        return region, jnp.stack([cy, cx]).astype(jnp.float32)
+
+    regions, corners = jax.vmap(one)(frames, gazes)
+    patches, ts, origins = _grid_patches(regions, patch)
+    gg2 = crop // patch
+    per = gg2 * gg2
+    frame_corner = jnp.repeat(corners, per, axis=0)
+    return _pad_to(patches, ts, origins + frame_corner, budget_patches)
+
+
+def _pad_to(patches, ts, origins, budget) -> RetainedPatches:
+    """Pad/trim a patch list to exactly ``budget`` entries (masked)."""
+    n = patches.shape[0]
+    p = patches.shape[1]
+    if n >= budget:
+        return RetainedPatches(
+            patches[:budget], ts[:budget], origins[:budget],
+            jnp.ones((budget,), bool),
+        )
+    pad = budget - n
+    return RetainedPatches(
+        jnp.concatenate([patches, jnp.zeros((pad, p, p, 3))], 0),
+        jnp.concatenate([ts, jnp.zeros((pad,))], 0),
+        jnp.concatenate([origins, jnp.zeros((pad, 2))], 0),
+        jnp.concatenate([jnp.ones((n,), bool), jnp.zeros((pad,), bool)], 0),
+    )
+
+
+def from_dc_buffer(buf) -> RetainedPatches:
+    """Adapt an EPIC DC buffer to the common retained-patch record."""
+    return RetainedPatches(buf.rgb, buf.t, buf.origin, buf.valid)

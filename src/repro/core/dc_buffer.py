@@ -1,0 +1,222 @@
+"""Duplication Check (DC) buffer (EPIC paper, Sections 3.4 and 4.1.2).
+
+Each entry holds the six components from the paper:
+
+  * ``rgb``        — the RGB patch ``I_c``            (P, P, 3)
+  * ``t``          — capture timestamp ``t_c``
+  * ``pose``       — camera pose ``U_c``              (4, 4)
+  * ``depth``      — per-pixel depth map ``d_c``      (P, P)
+  * ``saliency``   — HIR saliency score ``S_c``
+  * ``popularity`` — match counter ``P_c``
+
+plus, needed for geometry, the patch's pixel ``origin`` (row, col) in its
+source frame, and a ``valid`` occupancy mask (functional stand-in for the
+ASIC's bank-occupancy bits).
+
+Hardware mapping (Section 4.1.2): the accelerator stores entries in a 4 MB
+scratchpad organised as 16 banks — 10 for RGB patches, 5 for depth maps, 1
+for metadata. Here the buffer is a fixed-capacity structure-of-arrays pytree
+so every operation is static-shaped, jit/vmap/scan-friendly, and shardable.
+Eviction is handled by the buffer-controller analogue
+(:func:`insert`): a branchless top-k over retention scores combining
+popularity and recency, exactly the paper's "popularity score serves as an
+importance indicator; the controller updates popularity scores, selects
+entries, and handles eviction".
+
+The *memory footprint accounting* (:func:`memory_bytes`) charges only valid
+entries at the ASIC storage precisions (RGB uint8, depth fp16, metadata),
+matching the paper's memory numbers rather than the float32 simulation
+arrays.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class DCBufferConfig(NamedTuple):
+    capacity: int = 256  # max entries N
+    patch: int = 32  # patch side P
+    w_popularity: float = 1.0  # retention score weight for P_c
+    w_recency: float = 0.1  # retention score weight for t_c (per frame)
+
+
+class DCBuffer(NamedTuple):
+    """Structure-of-arrays DC buffer state (a pytree; all ops functional)."""
+
+    rgb: Array  # (N, P, P, 3) float32
+    depth: Array  # (N, P, P) float32
+    pose: Array  # (N, 4, 4) float32
+    origin: Array  # (N, 2) float32 (row, col) in source frame
+    t: Array  # (N,) float32 capture timestamp
+    t_last: Array  # (N,) float32 last-use (match) timestamp — recency
+    saliency: Array  # (N,) float32
+    popularity: Array  # (N,) float32
+    valid: Array  # (N,) bool
+
+    @property
+    def capacity(self) -> int:
+        return self.rgb.shape[0]
+
+    @property
+    def patch_size(self) -> int:
+        return self.rgb.shape[1]
+
+
+def init(cfg: DCBufferConfig) -> DCBuffer:
+    n, p = cfg.capacity, cfg.patch
+    return DCBuffer(
+        rgb=jnp.zeros((n, p, p, 3), jnp.float32),
+        depth=jnp.ones((n, p, p), jnp.float32),
+        pose=jnp.broadcast_to(jnp.eye(4, dtype=jnp.float32), (n, 4, 4)),
+        origin=jnp.zeros((n, 2), jnp.float32),
+        t=jnp.full((n,), -1.0, jnp.float32),
+        t_last=jnp.full((n,), -1.0, jnp.float32),
+        saliency=jnp.zeros((n,), jnp.float32),
+        popularity=jnp.zeros((n,), jnp.float32),
+        valid=jnp.zeros((n,), bool),
+    )
+
+
+def retention_score(buf: DCBuffer, cfg: DCBufferConfig, t_now: Array) -> Array:
+    """Buffer-controller retention score: higher = keep.
+
+    Combines popularity (reusability) with recency (temporal organisation).
+    Invalid slots score -inf so they are always evicted/filled first.
+    """
+    age = t_now - buf.t_last  # recency of USE, not of capture
+    score = cfg.w_popularity * buf.popularity - cfg.w_recency * age
+    return jnp.where(buf.valid, score, -jnp.inf)
+
+
+def bump_popularity(
+    buf: DCBuffer, entry_idx: Array, mask: Array, t_now=None
+) -> DCBuffer:
+    """Increment ``P_c`` for matched entries (paper Section 3.4, step 3)
+    and refresh their last-use timestamp (recency, Section 4.1.2).
+
+    Args:
+      entry_idx: (M,) int32 — index of the matched buffer entry per patch.
+      mask: (M,) bool — whether that patch actually matched.
+      t_now: scalar — current frame time; None leaves recency unchanged.
+
+    Multiple patches matching the same entry accumulate (segment-sum).
+    """
+    inc = jnp.zeros_like(buf.popularity).at[entry_idx].add(
+        mask.astype(buf.popularity.dtype)
+    )
+    out = buf._replace(popularity=buf.popularity + inc)
+    if t_now is not None:
+        hit = jnp.zeros_like(buf.valid).at[entry_idx].max(mask)
+        out = out._replace(
+            t_last=jnp.where(hit, jnp.asarray(t_now, jnp.float32),
+                             out.t_last)
+        )
+    return out
+
+
+class NewEntries(NamedTuple):
+    """Candidate entries for insertion (all arrays leading dim M)."""
+
+    rgb: Array  # (M, P, P, 3)
+    depth: Array  # (M, P, P)
+    pose: Array  # (M, 4, 4) (typically the same current pose broadcast)
+    origin: Array  # (M, 2)
+    saliency: Array  # (M,)
+
+
+def insert(
+    buf: DCBuffer,
+    cfg: DCBufferConfig,
+    new: NewEntries,
+    insert_mask: Array,
+    t_now: Array,
+) -> DCBuffer:
+    """Insert masked new entries, evicting lowest-retention-score slots.
+
+    Branchless formulation: concatenate (existing, new) entries, keep the
+    top-``capacity`` by retention score. New entries are initialised with
+    ``P_t = 1`` (paper) and score as such; masked-out candidates score -inf.
+    Ties favour existing entries (stable ordering via index penalty).
+    """
+    n = buf.capacity
+    m = new.rgb.shape[0]
+    t_b = jnp.broadcast_to(t_now, (m,)).astype(jnp.float32)
+
+    cand = DCBuffer(
+        rgb=jnp.concatenate([buf.rgb, new.rgb], 0),
+        depth=jnp.concatenate([buf.depth, new.depth], 0),
+        pose=jnp.concatenate([buf.pose, new.pose], 0),
+        origin=jnp.concatenate([buf.origin, new.origin], 0),
+        t=jnp.concatenate([buf.t, t_b], 0),
+        t_last=jnp.concatenate([buf.t_last, t_b], 0),
+        saliency=jnp.concatenate([buf.saliency, new.saliency], 0),
+        popularity=jnp.concatenate([buf.popularity, jnp.ones((m,))], 0),
+        valid=jnp.concatenate([buf.valid, insert_mask], 0),
+    )
+    score = retention_score(cand, cfg, t_now)
+    # Stable tiebreak: prefer lower index (older residents) on equal scores.
+    idx_penalty = jnp.arange(n + m, dtype=jnp.float32) * 1e-7
+    _, keep = jax.lax.top_k(jnp.where(jnp.isneginf(score),
+                                      score, score - idx_penalty), n)
+    return jax.tree.map(lambda x: x[keep], cand)
+
+
+def count_valid(buf: DCBuffer) -> Array:
+    return jnp.sum(buf.valid.astype(jnp.int32))
+
+
+def memory_bytes(buf: DCBuffer) -> Array:
+    """Storage footprint at ASIC precisions, valid entries only.
+
+    RGB uint8 x3, depth fp16, metadata (t, pose 12 floats, origin, S, P)
+    ~ 64 B — mirroring the paper's 10:5:1 bank split.
+    """
+    p = buf.patch_size
+    per_entry = p * p * 3 * 1 + p * p * 2 + 64
+    return count_valid(buf) * per_entry
+
+
+def entry_bbox_inputs(buf: DCBuffer) -> Tuple[Array, Array]:
+    """Corner depths + origins for bbox reprojection of every entry.
+
+    Returns:
+      origin: (N, 2), corner_depths: (N, 4) sampled at [tl, tr, bl, br].
+    """
+    p = buf.patch_size
+    d = buf.depth
+    corners = jnp.stack(
+        [d[:, 0, 0], d[:, 0, p - 1], d[:, p - 1, 0], d[:, p - 1, p - 1]],
+        axis=-1,
+    )
+    return buf.origin, corners
+
+
+def newest_match(
+    match_ok: Array, entry_t: Array, entry_valid: Array
+) -> Tuple[Array, Array]:
+    """Pick, per patch, the newest matching entry (paper: DC buffer checked
+    'following temporal order from the closest timestep').
+
+    Dense-parallel equivalent of the ASIC's sequential early-exit scan: all
+    pair feasibilities are computed, then argmax over (feasible * timestamp)
+    returns the same entry the sequential newest-first scan would stop at.
+
+    Args:
+      match_ok: (N, M) bool feasibility of (entry, patch) pairs.
+      entry_t: (N,) entry timestamps.
+      entry_valid: (N,) entry occupancy.
+
+    Returns:
+      idx: (M,) chosen entry per patch; matched: (M,) bool.
+    """
+    feas = match_ok & entry_valid[:, None]
+    key = jnp.where(feas, entry_t[:, None], -jnp.inf)
+    idx = jnp.argmax(key, axis=0)
+    matched = jnp.any(feas, axis=0)
+    return idx, matched

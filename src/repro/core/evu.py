@@ -1,0 +1,176 @@
+"""EVU stand-in EFM: a small transformer that answers the synthetic
+multiple-choice question "which object was attended during segment s?"
+from a compressed token stream (any method's ``packing.TokenStream``).
+
+This is the offline-container counterpart of the paper's frozen
+Qwen2.5-VL: a sequence model consuming retained-patch tokens + a query
+token. Accuracy under different compressors at matched memory budgets is
+exactly the Table-1 experiment; the paper's EFM is swapped for a trainable
+probe because no 7B VLM ships in this container (DESIGN.md §validation).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import TOKEN_FEAT
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+class EVUConfig(NamedTuple):
+    d_model: int = 96
+    n_heads: int = 4
+    n_layers: int = 2
+    n_classes: int = 8
+    n_segments: int = 8
+    lr: float = 3e-3
+    steps: int = 400
+    batch: int = 32
+
+
+def _lin(key, i, o):
+    return (jax.random.normal(key, (i, o)) / math.sqrt(i)).astype(jnp.float32)
+
+
+def init_params(key: Array, cfg: EVUConfig) -> Params:
+    ks = jax.random.split(key, 4 + 6 * cfg.n_layers)
+    in_feat = TOKEN_FEAT + cfg.n_segments + 2  # + derived (see _augment)
+    p: Params = {
+        "in_proj": _lin(ks[0], in_feat, cfg.d_model),
+        "seg_embed": 0.02
+        * jax.random.normal(ks[1], (cfg.n_segments, cfg.d_model)),
+        "cls": 0.02 * jax.random.normal(ks[2], (cfg.d_model,)),
+        "out": _lin(ks[3], cfg.d_model, cfg.n_classes),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        o = 4 + 6 * i
+        p["layers"].append(
+            {
+                "wq": _lin(ks[o], cfg.d_model, cfg.d_model),
+                "wk": _lin(ks[o + 1], cfg.d_model, cfg.d_model),
+                "wv": _lin(ks[o + 2], cfg.d_model, cfg.d_model),
+                "wo": _lin(ks[o + 3], cfg.d_model, cfg.d_model),
+                "w1": _lin(ks[o + 4], cfg.d_model, 4 * cfg.d_model),
+                "w2": _lin(ks[o + 5], 4 * cfg.d_model, cfg.d_model),
+            }
+        )
+    return p
+
+
+def _norm(x):
+    mu = jnp.mean(x, -1, keepdims=True)
+    v = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(v + 1e-5)
+
+
+THUMB_FEAT = 8 * 8 * 3  # layout of packing.TokenStream features
+
+
+def _augment(tokens: Array, seg: Array, cfg: EVUConfig) -> Array:
+    """Derived features: per-token segment one-hot (from the timestamp
+    feature) and a query-match indicator — the retrieval structure a
+    7B EFM gets for free but a 2-layer probe needs spelled out."""
+    def seg_of(col):
+        t_norm = tokens[..., col]
+        return jnp.clip(
+            (t_norm * cfg.n_segments).astype(jnp.int32),
+            0, cfg.n_segments - 1,
+        )
+
+    seg_id = seg_of(THUMB_FEAT)  # capture time
+    seg_last = seg_of(THUMB_FEAT + 5)  # last-use time (EPIC dedup reuse)
+    seg_oh = jax.nn.one_hot(seg_id, cfg.n_segments)
+    match = (
+        (seg_id == seg[:, None]) | (seg_last == seg[:, None])
+    ).astype(jnp.float32)[..., None]
+    gaze = tokens[..., THUMB_FEAT + 3 : THUMB_FEAT + 4]
+    return jnp.concatenate(
+        [tokens, seg_oh, match, match * gaze], axis=-1
+    )
+
+
+def forward(
+    p: Params, tokens: Array, mask: Array, seg: Array, cfg: EVUConfig
+) -> Array:
+    """tokens (B, L, F), mask (B, L), seg (B,) -> (B, n_classes)."""
+    b, l, _ = tokens.shape
+    x = _augment(tokens, seg, cfg) @ p["in_proj"]
+    q_tok = (p["cls"] + p["seg_embed"][seg])[:, None, :]  # (B,1,D)
+    x = jnp.concatenate([q_tok, x], axis=1)
+    m = jnp.concatenate([jnp.ones((b, 1), bool), mask], axis=1)
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    for lp in p["layers"]:
+        xn = _norm(x)
+        qh = (xn @ lp["wq"]).reshape(b, l + 1, h, dh).transpose(0, 2, 1, 3)
+        kh = (xn @ lp["wk"]).reshape(b, l + 1, h, dh).transpose(0, 2, 1, 3)
+        vh = (xn @ lp["wv"]).reshape(b, l + 1, h, dh).transpose(0, 2, 1, 3)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(dh)
+        logits = jnp.where(m[:, None, None, :], logits, -1e30)
+        a = jax.nn.softmax(logits, -1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", a, vh)
+        o = o.transpose(0, 2, 1, 3).reshape(b, l + 1, cfg.d_model)
+        x = x + o @ lp["wo"]
+        x = x + jax.nn.gelu(_norm(x) @ lp["w1"]) @ lp["w2"]
+    return _norm(x[:, 0]) @ p["out"]
+
+
+def loss_fn(p, batch, cfg: EVUConfig) -> Array:
+    logits = forward(p, batch["tokens"], batch["mask"], batch["seg"], cfg)
+    lab = batch["label"]
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, lab[:, None], 1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def train_eval(
+    key: Array,
+    train: Dict[str, Array],
+    test: Dict[str, Array],
+    cfg: EVUConfig,
+) -> Tuple[float, Params]:
+    """Adam-train the probe on ``train``; return test accuracy."""
+    p = init_params(key, cfg)
+    m = jax.tree.map(jnp.zeros_like, p)
+    v = jax.tree.map(jnp.zeros_like, p)
+    n = train["label"].shape[0]
+
+    @jax.jit
+    def step(p, m, v, i, key):
+        idx = jax.random.randint(key, (cfg.batch,), 0, n)
+        batch = jax.tree.map(lambda x: x[idx], train)
+        g = jax.grad(loss_fn)(p, batch, cfg)
+        b1, b2 = 0.9, 0.999
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        t = i + 1.0
+        p = jax.tree.map(
+            lambda pp, mm, vv: pp
+            - cfg.lr
+            * (mm / (1 - b1**t))
+            / (jnp.sqrt(vv / (1 - b2**t)) + 1e-8),
+            p,
+            m,
+            v,
+        )
+        return p, m, v
+
+    for i in range(cfg.steps):
+        key, k = jax.random.split(key)
+        p, m, v = step(p, m, v, float(i), k)
+
+    @jax.jit
+    def acc(p, d):
+        logits = forward(p, d["tokens"], d["mask"], d["seg"], cfg)
+        return jnp.mean(
+            (jnp.argmax(logits, -1) == d["label"]).astype(jnp.float32)
+        )
+
+    return float(acc(p, test)), p

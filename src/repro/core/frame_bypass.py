@@ -1,0 +1,64 @@
+"""Frame Bypass Check (EPIC paper, Sections 3.5 and 4.2).
+
+A cheap pixel-wise RGB difference against a reference frame decides whether a
+frame can be skipped entirely before any TSRC work. A counter-based periodic
+safeguard guarantees at least one frame is processed within every ``theta``
+frames, so subtle slow changes are never missed.
+
+In the paper this runs *inside the image sensor* (Frame Bypass Unit, Section
+4.2): pixels are compared right after the ADC, and bypassed frames never
+cross MIPI/ISP/DRAM — the energy model (core/energy.py) charges them only
+the in-sensor comparator cost. There is no TPU analogue of in-sensor compute;
+algorithmically the gate is identical, so it lives here as the first stage of
+the streaming pipeline.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class BypassConfig(NamedTuple):
+    gamma: float = 0.02  # mean-abs RGB difference threshold
+    theta: int = 30  # max consecutive bypassed frames (safeguard)
+
+
+class BypassState(NamedTuple):
+    ref_frame: Array  # (H, W, 3) reference frame F_ref held in-sensor
+    counter: Array  # scalar int32 — consecutive bypasses c
+    initialized: Array  # scalar bool — first frame must always process
+
+
+def init(frame_hw: Tuple[int, int]) -> BypassState:
+    h, w = frame_hw
+    return BypassState(
+        ref_frame=jnp.zeros((h, w, 3), jnp.float32),
+        counter=jnp.zeros((), jnp.int32),
+        initialized=jnp.zeros((), bool),
+    )
+
+
+def check(
+    state: BypassState, frame: Array, cfg: BypassConfig
+) -> Tuple[BypassState, Array, Array]:
+    """Run the bypass gate on one frame.
+
+    Returns:
+      new_state, process (bool — frame goes to TSRC), diff (mean abs RGB).
+    """
+    diff = jnp.mean(jnp.abs(frame - state.ref_frame))
+    exceeded = diff > cfg.gamma
+    force = state.counter >= cfg.theta  # safeguard: c would exceed theta
+    process = exceeded | force | ~state.initialized
+    new_ref = jnp.where(process, frame, state.ref_frame)
+    new_counter = jnp.where(process, 0, state.counter + 1)
+    return (
+        BypassState(new_ref, new_counter, jnp.ones((), bool)),
+        process,
+        diff,
+    )

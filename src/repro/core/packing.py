@@ -1,0 +1,109 @@
+"""Adaptive patch storage -> EFM token stream (the EPIC/EFM bridge).
+
+Converts a retained-patch record (EPIC DC buffer or any baseline) into a
+fixed-length token sequence an Embodied Foundation Model consumes:
+
+  token_i = [ flattened 8x8x3 thumbnail of patch i | metadata features ]
+
+metadata = (normalised timestamp, origin row/col, saliency, log-popularity).
+Tokens are ordered by timestamp (the DC buffer is "organised temporally");
+invalid slots pack as zeros with a padding mask, so the EFM sees a dense
+(seq_len, feat) tensor + mask regardless of compression method.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+THUMB = 8  # thumbnail side for token content features
+TOKEN_FEAT = THUMB * THUMB * 3 + 6  # 198 (meta incl. t_last)
+
+
+class TokenStream(NamedTuple):
+    tokens: Array  # (L, TOKEN_FEAT) float32
+    mask: Array  # (L,) bool
+
+
+def _thumb(rgb: Array) -> Array:
+    """(N, P, P, 3) -> (N, THUMB, THUMB, 3) via average pooling."""
+    n, p, _, c = rgb.shape
+    assert p % THUMB == 0, (p, THUMB)
+    k = p // THUMB
+    return rgb.reshape(n, THUMB, k, THUMB, k, c).mean(axis=(2, 4))
+
+
+def pack(
+    rgb: Array,  # (N, P, P, 3)
+    t: Array,  # (N,)
+    origin: Array,  # (N, 2)
+    valid: Array,  # (N,)
+    seq_len: int,
+    *,
+    saliency: Array | None = None,
+    popularity: Array | None = None,
+    t_last: Array | None = None,
+    t_max: float = 1.0,
+    frame_size: float = 128.0,
+) -> TokenStream:
+    """Pack retained patches into a fixed-length, time-ordered token stream."""
+    n = rgb.shape[0]
+    if saliency is None:
+        saliency = jnp.ones((n,), jnp.float32)
+    if popularity is None:
+        popularity = jnp.ones((n,), jnp.float32)
+    if t_last is None:
+        t_last = t  # unmatched / baseline methods: last use = capture
+
+    thumbs = _thumb(rgb).reshape(n, -1)
+    meta = jnp.stack(
+        [
+            t / jnp.maximum(t_max, 1.0),
+            origin[:, 0] / frame_size,
+            origin[:, 1] / frame_size,
+            saliency,
+            jnp.log1p(popularity),
+            t_last / jnp.maximum(t_max, 1.0),
+        ],
+        axis=-1,
+    )
+    feats = jnp.concatenate([thumbs, meta], axis=-1)  # (N, TOKEN_FEAT)
+    feats = jnp.where(valid[:, None], feats, 0.0)
+
+    # Order by time; invalid entries sort last.
+    key = jnp.where(valid, t, jnp.inf)
+    order = jnp.argsort(key)
+    feats = feats[order]
+    valid_sorted = valid[order]
+
+    if n >= seq_len:
+        # uniform temporal subsample (truncation would drop the stream's
+        # tail and make late-segment questions unanswerable)
+        idx = jnp.round(jnp.linspace(0, n - 1, seq_len)).astype(jnp.int32)
+        return TokenStream(feats[idx], valid_sorted[idx])
+    pad = seq_len - n
+    return TokenStream(
+        jnp.concatenate([feats, jnp.zeros((pad, TOKEN_FEAT))], 0),
+        jnp.concatenate([valid_sorted, jnp.zeros((pad,), bool)], 0),
+    )
+
+
+def pack_dc_buffer(buf, seq_len: int, t_max: float, frame_size: float
+                   ) -> TokenStream:
+    return pack(
+        buf.rgb, buf.t, buf.origin, buf.valid, seq_len,
+        saliency=buf.saliency, popularity=buf.popularity,
+        t_last=buf.t_last, t_max=t_max, frame_size=frame_size,
+    )
+
+
+def pack_retained(rp, seq_len: int, t_max: float, frame_size: float
+                  ) -> TokenStream:
+    return pack(
+        rp.rgb, rp.t, rp.origin, rp.valid, seq_len,
+        t_max=t_max, frame_size=frame_size,
+    )

@@ -1,0 +1,269 @@
+"""EPIC streaming compressor — the full algorithm of paper Figure 3 (c).
+
+Processes an egocentric video stream frame-by-frame (``jax.lax.scan``):
+
+  Frame Bypass Check (light-gray steps 1-3)
+      -> [bypassed: nothing else happens]
+      -> depth estimation (once per processed frame; crops cached per entry)
+      -> HIR saliency (SRD)
+      -> TSRC against the DC buffer (dark-gray steps 1-3)
+
+The whole pipeline is a pure function of (stream, models, config): it can be
+jit'ed, vmapped over a *batch of streams* (the datacenter deployment mode —
+one TPU pod ingesting thousands of glasses streams), and differentiated
+through where meaningful.
+
+Oracle modes for ablations (paper Section 5 studies the int8/64x64 depth
+design): ground-truth depth maps and/or saliency can be supplied to isolate
+the contribution of each learned module.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dc_buffer as dcb
+from repro.core import depth as depth_mod
+from repro.core import frame_bypass, hir
+from repro.core import geometry as geo
+from repro.core import tsrc as tsrc_mod
+
+Array = jax.Array
+
+
+class EPICConfig(NamedTuple):
+    frame_hw: Tuple[int, int] = (128, 128)
+    patch: int = 16
+    capacity: int = 192
+    # TSRC thresholds
+    tau: float = 0.08
+    o_min: float = 0.5
+    c_min: float = 0.6
+    window: int = 32
+    backend: str = "ref"
+    # Frame bypass
+    gamma: float = 0.02
+    theta: int = 30
+    # DC buffer retention
+    w_popularity: float = 1.0
+    w_recency: float = 0.1
+    # Camera: focal length as a fraction of frame width
+    focal_frac: float = 0.8
+
+    @property
+    def grid(self) -> int:
+        g = self.frame_hw[0] // self.patch
+        assert self.frame_hw[0] == self.frame_hw[1], "square frames assumed"
+        return g
+
+    @property
+    def n_patches(self) -> int:
+        return self.grid * self.grid
+
+    def intrinsics(self) -> geo.Intrinsics:
+        h, w = self.frame_hw
+        return geo.Intrinsics.create(self.focal_frac * w, w / 2.0, h / 2.0)
+
+    def buffer_config(self) -> dcb.DCBufferConfig:
+        return dcb.DCBufferConfig(
+            capacity=self.capacity,
+            patch=self.patch,
+            w_popularity=self.w_popularity,
+            w_recency=self.w_recency,
+        )
+
+    def tsrc_config(self) -> tsrc_mod.TSRCConfig:
+        return tsrc_mod.TSRCConfig(
+            tau=self.tau,
+            o_min=self.o_min,
+            c_min=self.c_min,
+            window=self.window,
+            backend=self.backend,
+        )
+
+    def bypass_config(self) -> frame_bypass.BypassConfig:
+        return frame_bypass.BypassConfig(gamma=self.gamma, theta=self.theta)
+
+
+class EPICModels(NamedTuple):
+    depth_params: Any = None  # None -> ground-truth depth oracle mode
+    hir_params: Any = None  # None -> all-salient (pure temporal mode)
+
+
+class EPICState(NamedTuple):
+    bypass: frame_bypass.BypassState
+    buf: dcb.DCBuffer
+    t: Array  # frame index (float32 timestamp)
+
+
+class FrameStats(NamedTuple):
+    processed: Array  # bool — passed the bypass gate
+    bypass_diff: Array
+    n_salient: Array
+    n_matched: Array
+    n_inserted: Array
+    n_bbox_checks: Array
+    n_full_checks: Array
+    buffer_valid: Array
+
+
+def init_state(cfg: EPICConfig) -> EPICState:
+    return EPICState(
+        bypass=frame_bypass.init(cfg.frame_hw),
+        buf=dcb.init(cfg.buffer_config()),
+        t=jnp.zeros((), jnp.float32),
+    )
+
+
+def _zero_tsrc_stats(buf: dcb.DCBuffer) -> tsrc_mod.TSRCStats:
+    z = jnp.zeros((), jnp.int32)
+    return tsrc_mod.TSRCStats(z, z, z, z, z, dcb.count_valid(buf))
+
+
+def process_frame(
+    state: EPICState,
+    frame: Array,
+    pose: Array,
+    gaze: Array,
+    depth_gt: Optional[Array],
+    models: EPICModels,
+    cfg: EPICConfig,
+) -> Tuple[EPICState, FrameStats]:
+    """Run the full EPIC algorithm on a single frame."""
+    intr = cfg.intrinsics()
+    new_bypass, process, bdiff = frame_bypass.check(
+        state.bypass, frame, cfg.bypass_config()
+    )
+
+    def do_process(buf: dcb.DCBuffer):
+        # --- Depth (Section 3.2): once per processed frame. ----------------
+        if models.depth_params is not None:
+            dmap = depth_mod.predict_fullres(models.depth_params, frame)
+        else:
+            assert depth_gt is not None, "oracle mode requires depth_gt"
+            dmap = depth_gt
+        # --- SRD / HIR (Section 3.3). ---------------------------------------
+        if models.hir_params is not None:
+            rgb64 = depth_mod.resize_image(frame, hir.HIR_INPUT)
+            heat = hir.gaze_heatmap(gaze, hir.HIR_INPUT, cfg.frame_hw)
+            logits = hir.forward(
+                models.hir_params, rgb64[None], heat[None], cfg.grid
+            )[0].reshape(-1)
+            sal_mask = hir.binary_saliency(logits)
+            sal_score = jax.nn.sigmoid(logits)
+        else:
+            sal_mask = jnp.ones((cfg.n_patches,), bool)
+            sal_score = jnp.ones((cfg.n_patches,), jnp.float32)
+        # --- TSRC (Section 3.4). --------------------------------------------
+        return tsrc_mod.tsrc_step(
+            buf,
+            cfg.buffer_config(),
+            cfg.tsrc_config(),
+            frame,
+            dmap,
+            sal_mask,
+            sal_score,
+            pose,
+            state.t,
+            intr,
+        )
+
+    def skip(buf: dcb.DCBuffer):
+        return buf, _zero_tsrc_stats(buf)
+
+    buf, tstats = jax.lax.cond(process, do_process, skip, state.buf)
+
+    stats = FrameStats(
+        processed=process,
+        bypass_diff=bdiff,
+        n_salient=tstats.n_salient,
+        n_matched=tstats.n_matched,
+        n_inserted=tstats.n_inserted,
+        n_bbox_checks=tstats.n_bbox_checks,
+        n_full_checks=tstats.n_full_checks,
+        buffer_valid=tstats.buffer_valid,
+    )
+    return EPICState(new_bypass, buf, state.t + 1.0), stats
+
+
+def compress_stream(
+    frames: Array,  # (T, H, W, 3)
+    poses: Array,  # (T, 4, 4)
+    gazes: Array,  # (T, 2)
+    cfg: EPICConfig,
+    models: EPICModels = EPICModels(),
+    depth_gt: Optional[Array] = None,  # (T, H, W) oracle depth
+) -> Tuple[EPICState, FrameStats]:
+    """Compress a full stream. Returns final state + per-frame stat arrays."""
+    state = init_state(cfg)
+    use_gt = models.depth_params is None
+    if use_gt and depth_gt is None:
+        raise ValueError("need depth_gt when no depth model is given")
+
+    def step(state, xs):
+        if use_gt:
+            frame, pose, gaze, dgt = xs
+        else:
+            frame, pose, gaze = xs
+            dgt = None
+        return process_frame(state, frame, pose, gaze, dgt, models, cfg)
+
+    xs = (frames, poses, gazes, depth_gt) if use_gt else (frames, poses, gazes)
+    return jax.lax.scan(step, state, xs)
+
+
+# ---------------------------------------------------------------------------
+# Energy-model bridge.
+# ---------------------------------------------------------------------------
+
+
+def stream_counters(cfg: EPICConfig, stats: FrameStats, *, int8_depth=True):
+    """Convert scan stats into `energy.StreamCounters` for the cost model."""
+    from repro.core import energy
+
+    h, w = cfg.frame_hw
+    t = int(stats.processed.shape[0])
+    n_proc = int(jnp.sum(stats.processed.astype(jnp.int32)))
+    full_checks = int(jnp.sum(stats.n_full_checks))
+    bbox_checks = int(jnp.sum(stats.n_bbox_checks))
+    inserted = int(jnp.sum(stats.n_inserted))
+    final_valid = int(stats.buffer_valid[-1])
+    patch_bytes = cfg.patch * cfg.patch * 3
+    entry_bytes = patch_bytes + cfg.patch * cfg.patch * 2 + 64
+    return energy.StreamCounters(
+        n_frames=t,
+        frame_px=h * w,
+        n_processed=n_proc,
+        depth_macs=depth_mod_macs() * n_proc,
+        hir_macs=hir_macs() * n_proc,
+        n_bbox_checks=bbox_checks,
+        n_full_checks=full_checks,
+        patch_px=cfg.patch * cfg.patch,
+        stored_bytes=final_valid * entry_bytes,
+        dc_traffic_bytes=full_checks * patch_bytes + inserted * entry_bytes,
+    )
+
+
+def depth_mod_macs() -> int:
+    """Analytic MAC count of FastDepth-lite on a 64x64 input."""
+    macs = 0
+    res = 64
+    for _, kind, cin, cout, stride in depth_mod._ENCODER:
+        res //= stride
+        if kind == "conv":
+            macs += res * res * 9 * cin * cout
+        else:
+            macs += res * res * (9 * cin + cin * cout)
+    for _, kind, cin, cout, _ in depth_mod._DECODER:
+        res *= 2
+        macs += res * res * (9 * cin + cin * cout)
+    macs += res * res * 9 * 16 * 1  # head
+    return macs
+
+
+def hir_macs() -> int:
+    """Analytic MAC count of the 3-layer HIR CNN on a 64x64 input."""
+    return 32 * 32 * 9 * 4 * 16 + 16 * 16 * 9 * 16 * 32 + 16 * 16 * 9 * 32 * 1

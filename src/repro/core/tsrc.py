@@ -1,0 +1,217 @@
+"""Temporal-Spatial Redundancy Check (TSRC) — EPIC paper Section 3.4.
+
+Per processed frame:
+
+  1. SRD: the HIR module marks salient patches (Section 3.3).
+  2. TRD: every valid DC-buffer entry is warped into the current view
+     (Eq. 1, via the reproject-match op) and scored against the frame.
+  3. Bounding-box overlap (the accelerator's prefilter, Section 4.1.1)
+     associates warped entries with current-frame patches.
+  4. A current patch *matches* the newest entry whose warped content is
+     RGB-close (diff <= tau), sufficiently covering (coverage >= c_min) and
+     spatially overlapping (overlap >= o_min). Matches bump the entry's
+     popularity P_c; non-matching salient patches are inserted.
+
+The dense-parallel formulation computes all (entry x patch) pair scores and
+selects with masks — the TPU-native replacement for the ASIC's sequential
+newest-first early-exit scan (equivalence property-tested in
+tests/test_tsrc.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dc_buffer as dcb
+from repro.core import geometry as geo
+from repro.kernels.reproject_match.ops import reproject_match
+
+Array = jax.Array
+
+
+class TSRCConfig(NamedTuple):
+    tau: float = 0.08  # RGB-difference match threshold (paper's tau)
+    o_min: float = 0.5  # min bbox overlap fraction of a patch
+    c_min: float = 0.6  # min warped-pixel coverage of an entry
+    window: int = 64  # reproject-match sampling window
+    backend: str = "ref"  # reproject-match backend
+
+
+class TSRCStats(NamedTuple):
+    """Per-frame counters (also drive the energy model)."""
+
+    n_salient: Array  # patches passing SRD
+    n_matched: Array  # patches found redundant (popularity bumped)
+    n_inserted: Array  # new DC-buffer entries
+    n_bbox_checks: Array  # bbox reprojections performed (= valid entries)
+    n_full_checks: Array  # entries needing full pixel warp (bbox prefilter hit)
+    buffer_valid: Array  # occupancy after the step
+
+
+def extract_patches(frame: Array, patch: int) -> Tuple[Array, Array]:
+    """Split (H, W, 3) frame into non-overlapping PxP patches.
+
+    Returns:
+      patches: (G*G, P, P, 3); origins: (G*G, 2) top-left (row, col).
+    """
+    h, w, c = frame.shape
+    gy, gx = h // patch, w // patch
+    x = frame[: gy * patch, : gx * patch]
+    x = x.reshape(gy, patch, gx, patch, c).transpose(0, 2, 1, 3, 4)
+    patches = x.reshape(gy * gx, patch, patch, c)
+    oy, ox = jnp.meshgrid(
+        jnp.arange(gy, dtype=jnp.float32) * patch,
+        jnp.arange(gx, dtype=jnp.float32) * patch,
+        indexing="ij",
+    )
+    origins = jnp.stack([oy.ravel(), ox.ravel()], axis=-1)
+    return patches, origins
+
+
+def extract_depth_patches(depth: Array, patch: int) -> Array:
+    """Split (H, W) depth map into (G*G, P, P) crops (same order)."""
+    h, w = depth.shape
+    gy, gx = h // patch, w // patch
+    d = depth[: gy * patch, : gx * patch]
+    d = d.reshape(gy, patch, gx, patch).transpose(0, 2, 1, 3)
+    return d.reshape(gy * gx, patch, patch)
+
+
+def tsrc_step(
+    buf: dcb.DCBuffer,
+    buf_cfg: dcb.DCBufferConfig,
+    cfg: TSRCConfig,
+    frame: Array,
+    depth_map: Array,
+    saliency_mask: Array,
+    saliency_score: Array,
+    pose: Array,
+    t_now: Array,
+    intr: geo.Intrinsics,
+) -> Tuple[dcb.DCBuffer, TSRCStats]:
+    """One TSRC update (paper Figure 3 (c), dark-gray steps 1-3).
+
+    Args:
+      buf: DC buffer state.
+      frame: (H, W, 3) current frame F_t.
+      depth_map: (H, W) predicted depth for F_t (for inserted entries).
+      saliency_mask: (G*G,) bool S_t from HIR (SRD output).
+      saliency_score: (G*G,) float saliency strength (stored with entries).
+      pose: (4, 4) current camera pose U_t.
+      t_now: scalar timestamp.
+
+    Returns:
+      Updated buffer and per-frame stats.
+    """
+    patch = buf.patch_size
+    patches, origins = extract_patches(frame, patch)
+
+    # --- TRD: warp every buffered entry into the current view. -------------
+    t_rel = jax.vmap(lambda p: geo.relative_transform(p, pose))(buf.pose)
+    diff, coverage, bbox = reproject_match(
+        buf.rgb,
+        buf.depth,
+        buf.origin,
+        t_rel,
+        frame,
+        intr,
+        window=cfg.window,
+        backend=cfg.backend,
+    )
+
+    # --- Spatial association: warped-entry bbox vs patch grid. -------------
+    overlap = geo.bbox_overlap_fraction(
+        bbox[:, None, :], origins[None, :, :], patch
+    )  # (N, M)
+
+    entry_ok = (diff <= cfg.tau) & (coverage >= cfg.c_min) & buf.valid
+    match_ok = entry_ok[:, None] & (overlap >= cfg.o_min) & saliency_mask[None, :]
+    idx, matched = dcb.newest_match(match_ok, buf.t, buf.valid)
+
+    # --- Popularity bump for matches (step 3). ------------------------------
+    buf = dcb.bump_popularity(buf, idx, matched, t_now=t_now)
+
+    # --- Insert unmatched salient patches. ----------------------------------
+    insert_mask = saliency_mask & ~matched
+    new = dcb.NewEntries(
+        rgb=patches,
+        depth=extract_depth_patches(depth_map, patch),
+        pose=jnp.broadcast_to(pose, (patches.shape[0], 4, 4)),
+        origin=origins,
+        saliency=saliency_score,
+    )
+    buf = dcb.insert(buf, buf_cfg, new, insert_mask, t_now)
+
+    # Energy-model counters: the ASIC fully reprojects only entries whose
+    # bbox overlaps *some* salient patch (we compute densely; it doesn't).
+    any_overlap = jnp.any(
+        (overlap >= cfg.o_min) & saliency_mask[None, :], axis=1
+    )
+    stats = TSRCStats(
+        n_salient=jnp.sum(saliency_mask.astype(jnp.int32)),
+        n_matched=jnp.sum(matched.astype(jnp.int32)),
+        n_inserted=jnp.sum(insert_mask.astype(jnp.int32)),
+        n_bbox_checks=jnp.sum(buf.valid.astype(jnp.int32)),
+        n_full_checks=jnp.sum((any_overlap & buf.valid).astype(jnp.int32)),
+        buffer_valid=dcb.count_valid(buf),
+    )
+    return buf, stats
+
+
+def tsrc_step_sequential_oracle(
+    buf: dcb.DCBuffer,
+    buf_cfg: dcb.DCBufferConfig,
+    cfg: TSRCConfig,
+    frame: Array,
+    depth_map: Array,
+    saliency_mask: Array,
+    saliency_score: Array,
+    pose: Array,
+    t_now: Array,
+    intr: geo.Intrinsics,
+):
+    """Python-loop oracle of the ASIC's newest-first sequential scan.
+
+    Used only in tests to prove the dense-parallel `newest_match` is
+    equivalent to the paper's early-exit buffer walk.
+    """
+    import numpy as np
+
+    patch = buf.patch_size
+    patches, origins = extract_patches(frame, patch)
+    t_rel = jax.vmap(lambda p: geo.relative_transform(p, pose))(buf.pose)
+    diff, coverage, bbox = reproject_match(
+        buf.rgb, buf.depth, buf.origin, t_rel, frame, intr,
+        window=cfg.window, backend="ref",
+    )
+    overlap = np.asarray(
+        geo.bbox_overlap_fraction(bbox[:, None, :], origins[None, :, :], patch)
+    )
+    diff = np.asarray(diff)
+    coverage = np.asarray(coverage)
+    valid = np.asarray(buf.valid)
+    ts = np.asarray(buf.t)
+    sal = np.asarray(saliency_mask)
+
+    order = np.argsort(-ts)  # newest first, the ASIC walk order
+    m = patches.shape[0]
+    matched = np.zeros(m, bool)
+    chosen = np.zeros(m, np.int32)
+    for p in range(m):
+        if not sal[p]:
+            continue
+        for c in order:
+            if not valid[c]:
+                continue
+            if (
+                diff[c] <= cfg.tau
+                and coverage[c] >= cfg.c_min
+                and overlap[c, p] >= cfg.o_min
+            ):
+                matched[p] = True
+                chosen[p] = c
+                break  # early exit at the first (newest) hit
+    return chosen, matched

@@ -1,0 +1,155 @@
+"""Pallas TPU flash attention (blockwise online softmax).
+
+The EFM backbone's attention is the dominant compute of every dense
+transformer in the zoo; this kernel is the TPU-native realization:
+
+  grid = (B, Hq, S/bq, S/bk), kv innermost ("arbitrary" = sequential),
+  online-softmax running (m, l, acc) carried in VMEM scratch across the kv
+  axis, output written once on the last kv step.
+
+GQA is expressed *in the BlockSpec index map*: the k/v block for query head
+``h`` is head ``h // group`` — no materialised head repetition, so HBM
+traffic for kv is 1/group of the MHA equivalent (exactly why GQA exists).
+
+Causal masking: blocks entirely above the diagonal are skipped with
+``pl.when`` (zero compute on TPU, not just masked), the diagonal block is
+masked with broadcasted_iota position comparison. For seq 4k / block 512
+this removes ~46% of the matmul work.
+
+VMEM per step (bq=bk=512, D=128, fp32): q/k/v blocks 3*256 KiB + acc
+256 KiB + p (bq x bk) 1 MiB ~ 1.8 MiB — comfortable against 16 MiB/core.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, 1, bq, d)
+    k_ref,  # (1, 1, bk, d)
+    v_ref,  # (1, 1, bk, d)
+    o_ref,  # (1, 1, bq, d)
+    m_scr,  # (bq,) running max
+    l_scr,  # (bq,) running denominator
+    acc_scr,  # (bq, d) running numerator
+    *,
+    bq: int,
+    bk: int,
+    causal: bool,
+    scale: float,
+    kv_steps: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal: skip blocks strictly above the diagonal entirely.
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, _NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0, :, :] = (acc_scr[...] / safe_l[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> Array:
+    """Blockwise attention. q: (B, Hq, S, D); k/v: (B, Hkv, S, D)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    kv_steps = s // bk
+
+    kernel = functools.partial(
+        _flash_kernel,
+        bq=bq,
+        bk=bk,
+        causal=causal,
+        scale=float(scale),
+        kv_steps=kv_steps,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, s // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, d),
+                lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, d),
+                lambda bb, h, qi, ki, g=group: (bb, h // g, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, d), lambda bb, h, qi, ki: (bb, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,39 @@
+"""Dispatching wrapper for attention (ref | pallas)."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.ref import attention_ref
+
+Array = jax.Array
+
+
+@partial(
+    jax.jit, static_argnames=("causal", "scale", "backend", "interpret")
+)
+def attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    backend: str = "ref",
+    interpret: bool = True,
+) -> Array:
+    """GQA attention. q: (B, Hq, S, D); k/v: (B, Hkv, S, D)."""
+    if backend == "ref":
+        return attention_ref(q, k, v, causal=causal, scale=scale)
+    if backend == "pallas":
+        from repro.kernels.flash_attention.kernel import (
+            flash_attention_pallas,
+        )
+
+        return flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale, interpret=interpret
+        )
+    raise ValueError(f"unknown backend: {backend}")

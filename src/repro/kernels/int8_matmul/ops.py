@@ -1,0 +1,29 @@
+"""Dispatching wrapper for the int8 matmul op."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("backend", "interpret"))
+def int8_matmul(
+    a: Array, b: Array, *, backend: str = "ref", interpret: bool = True
+) -> Array:
+    """(M, K) int8 x (K, N) int8 -> (M, N) int32.
+
+    ``backend="ref"`` uses the XLA dot (CPU-safe); ``backend="pallas"`` the
+    tiled TPU kernel (interpret mode on CPU).
+    """
+    if backend == "ref":
+        return int8_matmul_ref(a, b)
+    if backend == "pallas":
+        from repro.kernels.int8_matmul.kernel import int8_matmul_pallas
+
+        return int8_matmul_pallas(a, b, interpret=interpret)
+    raise ValueError(f"unknown backend: {backend}")

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the int8 matmul op (depth-CNN / HIR int8 path).
+
+Contract: ``C = A @ B`` with ``A`` int8 (M, K), ``B`` int8 (K, N), exact
+int32 accumulation (no saturation; K is small enough that int32 never
+overflows: |a|,|b| <= 127 -> |sum| <= K * 16129, safe for K < 2^17).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def int8_matmul_ref(a: Array, b: Array) -> Array:
+    """(M, K) int8 x (K, N) int8 -> (M, N) int32, exact."""
+    return jax.lax.dot_general(
+        a,
+        b,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )

@@ -1,0 +1,82 @@
+"""Chunked (matmul-form) Mamba-2 SSD scan — TPU-native train/prefill path.
+
+The SSD recurrence with scalar-per-step decay a_t = exp(a_log_t) factors
+into dense matmuls over chunks of C tokens (this is exactly the "state
+space dual" block decomposition of the Mamba-2 paper, and the blocking the
+Pallas kernel implements):
+
+  intra:  y_t += sum_{s<=t} exp(A_t - A_s) (C_t . B_s) x_s
+  inter:  y_t += exp(A_t) * C_t @ S0
+  state:  S'   = exp(A_C) S0 + sum_s exp(A_C - A_s) B_s x_s^T
+
+A is the inclusive within-chunk cumsum of a_log (< 0); all exponents are
+<= 0 so fp32 is saturation-free.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def mamba2_ssd_chunked(
+    x: Array,  # (B, H, T, P)
+    a_log: Array,  # (B, H, T)
+    bm: Array,  # (B, T, N)
+    cm: Array,  # (B, T, N)
+    init_state: Optional[Array] = None,
+    *,
+    chunk: int = 64,
+) -> Tuple[Array, Array]:
+    b, h, t, p = x.shape
+    n = bm.shape[-1]
+    c = min(chunk, t)
+    t_pad = -(-t // c) * c
+    if t_pad != t:
+        # zero-x / zero-a_log padding steps are identities on the state
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, 0), (0, t_pad - t)))
+        bm = jnp.pad(bm, ((0, 0), (0, t_pad - t), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, t_pad - t), (0, 0)))
+    t_full, t = t, t_pad
+    nc = t // c
+    f32 = jnp.float32
+
+    xc = x.astype(f32).reshape(b, h, nc, c, p)
+    ac = a_log.astype(f32).reshape(b, h, nc, c)
+    bc = bm.astype(f32).reshape(b, nc, c, n)
+    cc = cm.astype(f32).reshape(b, nc, c, n)
+
+    acum = jnp.cumsum(ac, axis=-1)  # inclusive (B,H,nc,C)
+    # decay factors D[t,s] = exp(A_t - A_s), s <= t (else masked)
+    expo = jnp.minimum(acum[..., :, None] - acum[..., None, :], 0.0)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    d = jnp.where(mask, jnp.exp(expo), 0.0)  # (B,H,nc,C,C)
+    g = jnp.einsum("bntm,bnsm->bnts", cc, bc)  # (B,nc,C,C) shared heads
+    y_intra = jnp.einsum("bnts,bhnts,bhnsp->bhntp", g, d, xc)
+
+    a_last = acum[..., -1]  # (B,H,nc)
+    c_dec = cc[:, None] * jnp.exp(acum)[..., None]  # (B,H,nc,C,N)
+    b_hat = bc[:, None] * jnp.exp(a_last[..., None] - acum)[..., None]
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), f32)
+
+    def body(s, xs):
+        cd, bh, xx, al = xs
+        y_inter = jnp.einsum("bhtn,bhnp->bhtp", cd, s)
+        s_new = jnp.exp(al)[..., None, None] * s + jnp.einsum(
+            "bhtn,bhtp->bhnp", bh, xx
+        )
+        return s_new, y_inter
+
+    xs = tuple(
+        jnp.moveaxis(a, 2, 0) for a in (c_dec, b_hat, xc, a_last)
+    )
+    s_fin, y_inter = jax.lax.scan(body, init_state.astype(f32), xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 2)
+    return y.reshape(b, h, t, p)[:, :, :t_full], s_fin

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: chunked Mamba-2 SSD scan.
+
+Same chunked-matmul adaptation as the RWKV6 kernel but with *scalar*
+per-step decay (the Mamba-2 simplification that makes the duality exact):
+
+  ca       = inclusive cumsum of a_log          (C,)
+  M[t, s]  = (C_t . B_s) * exp(ca_t - ca_s)     for s <= t (else 0)
+  y        = M @ x + exp(ca) * (Cm @ h_prev)
+  h_new    = exp(ca_last) * h_prev + (Bm * exp(ca_last - ca))^T @ x
+
+Grid: (B, H, T/C), chunk axis sequential; state h (N, P) in VMEM scratch.
+All heavy ops are (C x N)(N x C) and (C x C)(C x P) matmuls -> MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, C, P)
+    a_ref,  # (1, 1, C) log-decay
+    b_ref,  # (1, C, N)
+    c_ref,  # (1, C, N)
+    y_ref,  # (1, 1, C, P)
+    h_out_ref,  # (1, 1, N, P)
+    h_scr,  # (N, P)
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (C, P)
+    a = a_ref[0, 0].astype(jnp.float32)  # (C,)
+    bm = b_ref[0].astype(jnp.float32)  # (C, N)
+    cm = c_ref[0].astype(jnp.float32)  # (C, N)
+    h = h_scr[...]
+
+    ca = jnp.cumsum(a)  # (C,) inclusive
+
+    scores = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)  # (C, C)
+    decay = jnp.exp(ca[:, None] - ca[None, :])
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    m = jnp.where(cols <= rows, scores * decay, 0.0)
+
+    y_state = jnp.exp(ca)[:, None] * jnp.dot(
+        cm, h, preferred_element_type=jnp.float32
+    )  # (C, P)
+    y = jnp.dot(m, x, preferred_element_type=jnp.float32) + y_state
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+
+    ca_last = ca[chunk - 1]
+    b_dec = bm * jnp.exp(ca_last - ca)[:, None]  # (C, N)
+    h_new = jnp.exp(ca_last) * h + jnp.dot(
+        b_dec.T, x, preferred_element_type=jnp.float32
+    )
+    h_scr[...] = h_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        h_out_ref[0, 0, :, :] = h_new.astype(h_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd_pallas(
+    x: Array,
+    a_log: Array,
+    bm: Array,
+    cm: Array,
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> Tuple[Array, Array]:
+    """Chunked SSD scan. Shapes as in ref.py; init state is zeros."""
+    b, h, t, p = x.shape
+    n = bm.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0, (t, c)
+    n_chunks = t // c
+
+    kernel = functools.partial(_ssd_kernel, chunk=c, n_chunks=n_chunks)
+    y, h_fin = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, p), lambda bb, hh, ci: (bb, hh, ci, 0)),
+            pl.BlockSpec((1, 1, c), lambda bb, hh, ci: (bb, hh, ci)),
+            pl.BlockSpec((1, c, n), lambda bb, hh, ci: (bb, ci, 0)),
+            pl.BlockSpec((1, c, n), lambda bb, hh, ci: (bb, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, p), lambda bb, hh, ci: (bb, hh, ci, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda bb, hh, ci: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(x, a_log, bm, cm)
+    return y, h_fin

@@ -1,0 +1,41 @@
+"""Dispatching wrapper for the Mamba-2 SSD scan op."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.mamba2_ssd.ref import mamba2_ssd_ref
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("backend", "chunk", "interpret"))
+def mamba2_ssd(
+    x: Array,
+    a_log: Array,
+    bm: Array,
+    cm: Array,
+    init_state: Optional[Array] = None,
+    *,
+    backend: str = "ref",
+    chunk: int = 64,
+    interpret: bool = True,
+) -> Tuple[Array, Array]:
+    """Mamba-2 SSD scan; returns (y, final_state)."""
+    if backend == "ref":
+        return mamba2_ssd_ref(x, a_log, bm, cm, init_state)
+    if backend == "chunked":
+        from repro.kernels.mamba2_ssd.chunked import mamba2_ssd_chunked
+
+        return mamba2_ssd_chunked(x, a_log, bm, cm, init_state, chunk=chunk)
+    if backend == "pallas":
+        assert init_state is None, "pallas path starts from zero state"
+        from repro.kernels.mamba2_ssd.kernel import mamba2_ssd_pallas
+
+        return mamba2_ssd_pallas(
+            x, a_log, bm, cm, chunk=chunk, interpret=interpret
+        )
+    raise ValueError(f"unknown backend: {backend}")

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space dual) scan.
+
+Per head, with scalar-per-step decay ``a_t = exp(a_log_t)`` (a_log < 0),
+input projection B_t and readout C_t (shared across heads, one group):
+
+  h_t[n, p] = a_t * h_{t-1}[n, p] + B_t[n] * x_t[p]
+  y_t[p]    = sum_n C_t[n] * h_t[n, p]
+
+Shapes:
+  x: (B, H, T, P); a_log: (B, H, T); Bm, Cm: (B, T, N);
+  returns y: (B, H, T, P) and final state (B, H, N, P).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def mamba2_ssd_ref(
+    x: Array,
+    a_log: Array,
+    bm: Array,
+    cm: Array,
+    init_state: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    b, h, t, p = x.shape
+    n = bm.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def head_scan(x_h, a_h, bm_b, cm_b, h0):
+        def step(s, xs):
+            xt, at, bt, ct = xs
+            s_new = jnp.exp(at) * s + bt[:, None] * xt[None, :]  # (N, P)
+            y = ct @ s_new  # (P,)
+            return s_new, y
+
+        s_fin, y = jax.lax.scan(step, h0, (x_h, a_h, bm_b, cm_b))
+        return y, s_fin
+
+    fn = jax.vmap(  # over batch
+        jax.vmap(head_scan, in_axes=(0, 0, None, None, 0)),
+        in_axes=(0, 0, 0, 0, 0),
+    )
+    return fn(x, a_log, bm, cm, init_state)

@@ -1,0 +1,69 @@
+"""Dispatching wrapper for the reproject-match op.
+
+``backend="ref"`` — pure-jnp oracle (default; used by the streaming pipeline
+on CPU and inside SPMD lowering, where a TPU Pallas custom call cannot lower).
+
+``backend="pallas"`` — the Pallas TPU kernel (``kernel.py``), validated in
+interpret mode on CPU; on real TPU hardware this is the deployed hot path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+
+from repro.core import geometry as geo
+from repro.kernels.reproject_match.ref import reproject_match_ref
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("window", "backend", "interpret"))
+def reproject_match(
+    entry_rgb: Array,
+    entry_depth: Array,
+    entry_origin: Array,
+    t_rel: Array,
+    frame: Array,
+    intr: geo.Intrinsics,
+    *,
+    window: int = 64,
+    backend: str = "ref",
+    interpret: bool = True,
+) -> Tuple[Array, Array, Array]:
+    """Warp buffered patches into the current view and score redundancy.
+
+    Args:
+      entry_rgb: (N, P, P, 3) buffered patch pixels I_c.
+      entry_depth: (N, P, P) buffered per-pixel depth d_c.
+      entry_origin: (N, 2) patch top-left (row, col) in the source frame.
+      t_rel: (N, 4, 4) source->current camera transforms.
+      frame: (H, W, 3) current frame F_t.
+      intr: camera intrinsics.
+      window: sampling window side (op semantics; see ref.py).
+      backend: "ref" | "pallas".
+      interpret: run the Pallas kernel in interpret mode (CPU validation).
+
+    Returns:
+      diff (N,), coverage (N,), bbox (N, 4).
+    """
+    if backend == "ref":
+        return reproject_match_ref(
+            entry_rgb, entry_depth, entry_origin, t_rel, frame, intr, window
+        )
+    if backend == "pallas":
+        from repro.kernels.reproject_match.kernel import reproject_match_pallas
+
+        return reproject_match_pallas(
+            entry_rgb,
+            entry_depth,
+            entry_origin,
+            t_rel,
+            frame,
+            intr,
+            window=window,
+            interpret=interpret,
+        )
+    raise ValueError(f"unknown backend: {backend}")

@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for the reproject-match op (EPIC TRD hot-spot).
+
+Op contract (shared by this reference and the Pallas kernel)
+------------------------------------------------------------
+For each buffered DC-buffer entry, warp its PxP pixel grid into the current
+view (Eq. 1 of the paper), bilinearly sample the current frame inside a
+``window x window`` region centred on the warped bounding box, and reduce the
+masked mean-absolute RGB difference against the entry's stored pixels.
+
+The *window* is part of the op semantics: it is the TPU-native analogue of
+the EPIC accelerator's bounding-box prefilter (Section 4.1.1) — instead of
+skipping non-overlapping patches (irregular control flow), we dynamic-slice a
+bounded region so the gather working set is a fixed VMEM tile. Warped pixels
+falling outside the window are conservatively *invalid* (not covered), which
+can only cause extra insertions, never false matches.
+
+Outputs per entry:
+  * ``diff``     — masked mean |I_c - F_t(warp(.))| over valid pixels
+                   (1.0 where nothing valid, i.e. "no match possible"),
+  * ``coverage`` — fraction of the entry's pixels that warped to a valid
+                   in-window location,
+  * ``bbox``     — warped corner bounding box (vmin, umin, vmax, umax) for
+                   the spatial overlap test against current-frame patches.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry as geo
+
+Array = jax.Array
+
+
+def window_origin(bbox: Array, window: int, frame_hw: Tuple[int, int]) -> Array:
+    """Top-left (row, col) of the sampling window, clamped inside the frame.
+
+    Centred on the warped bbox centre; integer-valued float32.
+    """
+    h, w = frame_hw
+    cy = 0.5 * (bbox[..., 0] + bbox[..., 2])
+    cx = 0.5 * (bbox[..., 1] + bbox[..., 3])
+    oy = jnp.clip(jnp.floor(cy - window / 2.0), 0.0, float(h - window))
+    ox = jnp.clip(jnp.floor(cx - window / 2.0), 0.0, float(w - window))
+    return jnp.stack([oy, ox], axis=-1)
+
+
+def _one_entry(
+    entry_rgb: Array,  # (P, P, 3)
+    entry_depth: Array,  # (P, P)
+    entry_origin: Array,  # (2,) row, col
+    t_rel: Array,  # (4, 4)
+    frame: Array,  # (H, W, 3)
+    intr: geo.Intrinsics,
+    window: int,
+) -> Tuple[Array, Array, Array]:
+    patch = entry_rgb.shape[0]
+    h, w = frame.shape[0], frame.shape[1]
+
+    coords, in_front = geo.warp_patch_coords(
+        entry_origin, entry_depth, intr, t_rel, patch
+    )  # (P, P, 2), (P, P)
+
+    # Corner-based warped bbox (what the reprojection engine computes first).
+    corner_d = jnp.stack(
+        [
+            entry_depth[0, 0],
+            entry_depth[0, patch - 1],
+            entry_depth[patch - 1, 0],
+            entry_depth[patch - 1, patch - 1],
+        ]
+    )
+    bbox, bbox_valid = geo.reproject_bbox(
+        entry_origin, corner_d, intr, t_rel, patch
+    )
+
+    worig = window_origin(bbox, window, (h, w))  # (2,) row, col
+    win = jax.lax.dynamic_slice(
+        frame,
+        (worig[0].astype(jnp.int32), worig[1].astype(jnp.int32), 0),
+        (window, window, 3),
+    )
+    local = coords - jnp.stack([worig[1], worig[0]])  # (u, v) local
+    sampled, in_win = geo.bilinear_sample(win, local)
+    valid = in_front & in_win
+    nvalid = jnp.sum(valid)
+    denom = jnp.maximum(nvalid, 1)
+    absdiff = jnp.mean(jnp.abs(sampled - entry_rgb), axis=-1)  # (P, P)
+    diff = jnp.sum(jnp.where(valid, absdiff, 0.0)) / denom
+    diff = jnp.where(nvalid > 0, diff, 1.0)
+    coverage = nvalid / float(patch * patch)
+    coverage = jnp.where(bbox_valid, coverage, 0.0)
+    return diff, coverage, bbox
+
+
+def reproject_match_ref(
+    entry_rgb: Array,  # (N, P, P, 3)
+    entry_depth: Array,  # (N, P, P)
+    entry_origin: Array,  # (N, 2)
+    t_rel: Array,  # (N, 4, 4)
+    frame: Array,  # (H, W, 3)
+    intr: geo.Intrinsics,
+    window: int,
+) -> Tuple[Array, Array, Array]:
+    """Vectorised oracle over N entries. Returns (diff, coverage, bbox)."""
+    fn = jax.vmap(_one_entry, in_axes=(0, 0, 0, 0, None, None, None))
+    return fn(entry_rgb, entry_depth, entry_origin, t_rel, frame, intr, window)

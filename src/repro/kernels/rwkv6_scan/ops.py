@@ -1,0 +1,42 @@
+"""Dispatching wrapper for the RWKV6 scan op."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("backend", "chunk", "interpret"))
+def rwkv6_scan(
+    r: Array,
+    k: Array,
+    v: Array,
+    w_log: Array,
+    u: Array,
+    init_state: Optional[Array] = None,
+    *,
+    backend: str = "ref",
+    chunk: int = 64,
+    interpret: bool = True,
+) -> Tuple[Array, Array]:
+    """RWKV6 linear-attention scan; returns (o, final_state)."""
+    if backend == "ref":
+        return rwkv6_scan_ref(r, k, v, w_log, u, init_state)
+    if backend == "chunked":
+        from repro.kernels.rwkv6_scan.chunked import rwkv6_scan_chunked
+
+        return rwkv6_scan_chunked(r, k, v, w_log, u, init_state, chunk=chunk)
+    if backend == "pallas":
+        assert init_state is None, "pallas path starts from zero state"
+        from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_pallas
+
+        return rwkv6_scan_pallas(
+            r, k, v, w_log, u, chunk=chunk, interpret=interpret
+        )
+    raise ValueError(f"unknown backend: {backend}")

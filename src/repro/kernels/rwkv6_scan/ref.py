@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) linear-attention scan.
+
+Per head, the RWKV6 recurrence with data-dependent per-channel decay
+``w_t = exp(w_log_t)`` (w_log < 0) and bonus ``u`` is:
+
+  o_t[j]   = sum_i r_t[i] * ( S_{t-1}[i, j] + u[i] k_t[i] v_t[j] )
+  S_t[i,j] = w_t[i] * S_{t-1}[i, j] + k_t[i] v_t[j]
+
+Shapes:
+  r, k, w_log: (B, H, T, K); v: (B, H, T, V); u: (H, K);
+  returns o: (B, H, T, V) and final state (B, H, K, V).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rwkv6_scan_ref(
+    r: Array,
+    k: Array,
+    v: Array,
+    w_log: Array,
+    u: Array,
+    init_state: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def head_scan(r_h, k_h, v_h, w_h, u_h, s0):
+        def step(s, xs):
+            rt, kt, vt, wt = xs
+            kv = kt[:, None] * vt[None, :]  # (K, V)
+            o = rt @ (s + u_h[:, None] * kv)  # (V,)
+            s_new = jnp.exp(wt)[:, None] * s + kv
+            return s_new, o
+
+        s_fin, o = jax.lax.scan(step, s0, (r_h, k_h, v_h, w_h))
+        return o, s_fin
+
+    fn = jax.vmap(  # over batch
+        jax.vmap(head_scan, in_axes=(0, 0, 0, 0, 0, 0)),
+        in_axes=(0, 0, 0, 0, None, 0),
+    )
+    return fn(r, k, v, w_log, u, init_state)

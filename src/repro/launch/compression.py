@@ -1,0 +1,34 @@
+"""EF-int8 gradient exchange over a named axis (shard_map context).
+
+Used for the cross-pod hop where DCN bandwidth (~6 GB/s) is the gradient
+all-reduce bottleneck: each pod compresses its pod-local gradient to int8
+(+ fp32 scale), all-gathers the 4x-smaller payload over 'pod', and
+decompresses/averages locally. Error feedback would carry the residual
+across steps; inside a single jitted step we expose the stateless variant
+(residual returned for the caller to thread) plus this convenience
+all-reduce whose quantization error is unbiased-ish per step and vanishes
+as grads shrink — the EF-threaded path is exercised in tests via
+repro.optim.compress.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_int8_allreduce(grads: Any, axis: str) -> Any:
+    """int8-compressed mean-all-reduce over ``axis`` (inside shard_map)."""
+
+    def one(g):
+        gf = g.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        qs = jax.lax.all_gather(q, axis)  # (n_pods, ...) int8 on the wire
+        ss = jax.lax.all_gather(scale, axis)
+        rec = (qs.astype(jnp.float32) * ss.reshape((-1,) + (1,) * g.ndim))
+        return jnp.mean(rec, axis=0).astype(g.dtype)
+
+    return jax.tree.map(one, grads)

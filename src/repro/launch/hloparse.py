@@ -1,0 +1,207 @@
+"""Post-SPMD HLO text analysis: collective bytes with loop trip counts.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE (scan-over-layers
+makes that a ~L-fold undercount), so the dry-run parses the optimized HLO
+itself:
+
+  * split the module into computations;
+  * per computation, record every collective op's output bytes and
+    replica-group size;
+  * walk the call graph from ENTRY, multiplying by
+    ``backend_config.known_trip_count`` at each while — the layer scan,
+    accumulation loops and remat loops are thereby counted exactly;
+  * report bytes per (op kind, group size), total, and the ICI wire-time
+    using op-specific ring factors:
+        all-reduce       2(n-1)/n  x buffer
+        all-gather       (n-1)/n   x buffer (output)
+        reduce-scatter   (n-1)/n   x input  (= output x n)
+        all-to-all       (n-1)/n   x buffer
+        collective-permute 1       x buffer
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_SHAPE_PAT = r"(?:pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[[0-9,]*\]"
+_COLL_PAT = re.compile(
+    r"= (?P<shape>\(?.*?\)?) "
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<async>-start|-done)?\((?P<args>%?[\w\.\-]*)"
+)
+_WHILE_PAT = re.compile(
+    r"while\(.*?body=%?(?P<body>[\w\.\-]+)"
+)
+_TRIP_PAT = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUP_PAT = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_LIST_PAT = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_COND_PAT = re.compile(
+    r"conditional\(.*?(?:branch_computations=\{([^}]*)\}|"
+    r"true_computation=%?([\w\.\-]+), false_computation=%?([\w\.\-]+))"
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in re.finditer(_SHAPE_PAT, shape_str):
+        s = m.group(0)
+        dt = s[: s.index("[")]
+        dims = s[s.index("[") + 1 : -1]
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_PAT.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_PAT.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 0  # unknown -> world
+
+
+def split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = re.match(r"^(?:ENTRY )?%?([\w\.\-]+)(?:\.[\d]+)? \(.*\{", line)
+        if line.startswith("ENTRY"):
+            name = re.match(r"^ENTRY %?([\w\.\-]+)", line).group(1)
+            cur = "__entry__"
+            comps[cur] = []
+            comps["__entry_name__"] = [name]
+            continue
+        if m and not line.startswith(" "):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def analyze_collectives(text: str) -> Dict:
+    comps = split_computations(text)
+    comps.pop("__entry_name__", None)
+
+    # per computation: collectives and child loops
+    coll: Dict[str, List[Tuple[str, int, int]]] = defaultdict(list)
+    children: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            cm = _COLL_PAT.search(line)
+            if cm and cm.group("async") != "-done":
+                # XLA CPU float-normalization upcasts bf16 collectives to
+                # f32 (a convert fusion feeds them); TPU runs them native
+                # bf16, so the TPU wire estimate halves those bytes.
+                upcast = (
+                    "f32[" in cm.group("shape")
+                    and "convert" in cm.group("args")
+                )
+                coll[name].append(
+                    (
+                        cm.group("op"),
+                        _shape_bytes(cm.group("shape")),
+                        _group_size(line),
+                        0.5 if upcast else 1.0,
+                    )
+                )
+            wm = _WHILE_PAT.search(line)
+            if wm:
+                tm = _TRIP_PAT.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                children[name].append((wm.group("body"), trip))
+            cnd = _COND_PAT.search(line)
+            if cnd:
+                branches = []
+                if cnd.group(1):
+                    branches = re.findall(r"%?([\w\.\-]+)", cnd.group(1))
+                else:
+                    branches = [cnd.group(2), cnd.group(3)]
+                for b in branches:
+                    if b in comps:
+                        children[name].append((b, 1))
+
+    # multipliers via DFS from entry
+    mult: Dict[str, float] = defaultdict(float)
+    mult["__entry__"] = 1.0
+    stack = ["__entry__"]
+    seen_edges = set()
+    while stack:
+        cur = stack.pop()
+        for child, trip in children.get(cur, ()):  # bodies
+            key = (cur, child)
+            mult[child] += mult[cur] * trip
+            if key not in seen_edges:
+                seen_edges.add(key)
+                stack.append(child)
+
+    by_key: Dict[Tuple[str, int], float] = defaultdict(float)
+    by_key_tpu: Dict[Tuple[str, int], float] = defaultdict(float)
+    counts: Dict[str, float] = defaultdict(float)
+    for name, ops in coll.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0 and name != "__entry__":
+            # computation not reachable through a parsed while: count once
+            m = 1.0
+        for op, nbytes, gsize, dt_factor in ops:
+            by_key[(op, gsize)] += m * nbytes
+            by_key_tpu[(op, gsize)] += m * nbytes * dt_factor
+            counts[op] += m
+
+    ring = {
+        "all-reduce": lambda n: 2.0 * (n - 1) / n if n > 1 else 0.0,
+        "all-gather": lambda n: (n - 1) / n if n > 1 else 0.0,
+        "reduce-scatter": lambda n: (n - 1) / n if n > 1 else 0.0,
+        "all-to-all": lambda n: (n - 1) / n if n > 1 else 0.0,
+        "collective-permute": lambda n: 1.0,
+    }
+    total = 0.0
+    wire = 0.0
+    wire_tpu = 0.0
+    by_op: Dict[str, float] = defaultdict(float)
+    detail = []
+    for (op, gsize), nbytes in sorted(by_key.items()):
+        n = gsize if gsize > 0 else 2
+        total += nbytes
+        w = ring[op](n) * nbytes
+        wt = ring[op](n) * by_key_tpu[(op, gsize)]
+        wire += w
+        wire_tpu += wt
+        by_op[op] += nbytes
+        detail.append(
+            {"op": op, "group": gsize, "bytes": nbytes, "wire_bytes": w,
+             "tpu_wire_bytes": wt}
+        )
+    return {
+        "total_bytes": total,
+        "wire_bytes": wire,
+        "tpu_wire_bytes": wire_tpu,
+        "by_op": dict(by_op),
+        "counts": dict(counts),
+        "detail": detail,
+    }
+
+
+if __name__ == "__main__":
+    import sys
+
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyze_collectives(f.read()), indent=2))

@@ -1,0 +1,317 @@
+"""Logical-axis sharding rules (MaxText lineage) for every family.
+
+Rules (baseline — §Perf iterates on the three chosen cells):
+
+  params
+    * embedding table (V, D)          -> vocab over "model"
+    * column-parallel projections     -> output dim over "model"
+      (wq/wk/wv/wg/wr, gate/up, wq_b/wk_b/wv_b, in_proj, lm_head)
+      ... except K/V projections when n_kv_heads % model != 0, which stay
+      replicated (they are small; sharding them fractionally per-head
+      forces reshards in the attention einsum).
+    * row-parallel projections        -> input dim over "model"
+      (wo, down, out_proj, out)
+    * MoE expert stacks (L, E, D, F)  -> E over "model" (EP), or over
+      ("data","model") when cfg.ep_axes == "dp_model" (deepseek-v3: the
+      only way 670B of expert weights fit a 256-chip pod).
+    * everything else (norms, biases, LoRA/router/conv, rwkv mixing
+      vectors) -> replicated.
+  optimizer moments (ZeRO-1)
+    * the param spec plus "data" on the largest still-unsharded dim that
+      divides — optimizer state is what breaks the memory budget at scale,
+      params stay model-sharded for cheap forward all-gathers.
+  batches   -> batch dim over all DP axes ("pod","data").
+  KV caches -> kv-head dim over "model" when divisible, else cache seq
+               over "model" (flash-decoding style partial-softmax layout);
+               batch over "data" when divisible (not for long_500k B=1).
+
+Stack prefixes: layer-scanned params carry leading (L,) — vision
+self_layers carry (G, P) — which the rules skip via ``n_stack``.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+COL_NAMES = {
+    "wq", "wk", "wv", "wg", "wr", "gate", "up", "wq_b", "wk_b", "wv_b",
+    "in_proj", "lm_head",
+}
+ROW_NAMES = {"wo", "down", "out_proj", "out"}
+EXPERT_NAMES = {"gate_w", "up_w", "down_w"}
+STACK1 = (
+    "layers", "moe_layers", "dense_layers", "enc_layers", "dec_layers",
+    "xattn_layers", "shared",
+)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _n_stack(ps: str) -> int:
+    if "self_layers" in ps:
+        return 2
+    if any(re.search(rf"(^|/){s}(/|$)", ps) for s in STACK1):
+        return 1
+    return 0
+
+
+def param_spec(
+    cfg: ModelConfig, path_str: str, shape: Tuple[int, ...], mesh: Mesh
+) -> P:
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    ns = _n_stack(path_str)
+    if cfg.shard_strategy == "dp":
+        return P()  # replicated weights; batch over every mesh axis
+    if cfg.shard_strategy == "fsdp":
+        # embeddings keep the vocab->model TP rule: sharding vocab over
+        # (data, model) makes the unembed matmul's output sharding clash
+        # with batch-over-(data,model) activations and GSPMD all-gathers
+        # the GLOBAL activation tensor (measured 2.5 TB/dev on the vlm
+        # train cell; EXPERIMENTS.md §Perf).
+        parts_ = path_str.split("/")
+        name_ = parts_[-1]
+        owner_ = parts_[-2] if len(parts_) >= 2 and name_ in ("w", "b") else name_
+        if owner_ == "embed" or name_ == "table":
+            return P("model", None) if shape[0] % model == 0 else P()
+        if owner_ == "lm_head":
+            return P(None, "model") if shape[-1] % model == 0 else P()
+        # shard the largest dim over ("data","model") combined when it
+        # divides, else one dim per axis; weights all-gather per layer.
+        body = shape[ns:]
+        order = sorted(range(len(body)), key=lambda i: -body[i])
+        spec = [None] * len(shape)
+        both = data * model
+        for i in order:
+            if body[i] % both == 0:
+                spec[ns + i] = ("data", "model")
+                return P(*spec)
+        placed = []
+        for ax, size in (("data", data), ("model", model)):
+            for i in order:
+                if ns + i not in placed and body[i] % size == 0:
+                    spec[ns + i] = ax
+                    placed.append(ns + i)
+                    break
+        return P(*spec)
+    body = shape[ns:]
+    parts = path_str.split("/")
+    # leaf tensors are .../<module>/w|b or a bare named tensor
+    name = parts[-1]
+    owner = parts[-2] if len(parts) >= 2 and name in ("w", "b") else name
+
+    def spec(*tail):
+        return P(*((None,) * ns + tail))
+
+    # --- embeddings -------------------------------------------------------
+    if owner == "embed" or name == "table":
+        if shape[0] % model == 0:
+            return P("model", None)
+        return P()
+    # --- MoE expert stacks (E, D, F) / (E, F, D) --------------------------
+    if owner in EXPERT_NAMES or name in EXPERT_NAMES:
+        ep: Any = ("data", "model") if cfg.ep_axes == "dp_model" else "model"
+        ep_size = model * (data if cfg.ep_axes == "dp_model" else 1)
+        if body[0] % max(ep_size, 1) == 0:
+            return spec(ep, None, None)
+        return spec("model", None, None) if body[0] % model == 0 else P()
+    if name == "b" and owner in COL_NAMES:
+        # bias of a column-parallel projection: sharded like the output
+        if owner in ("wk", "wv") and cfg.n_kv_heads % model != 0:
+            return P()
+        if body[-1] % model == 0:
+            return spec("model")
+        return P()
+    if len(body) != 2 or name == "b":
+        return P()  # norms, scalars, conv, LoRA, router, mixing vectors
+    d_in, d_out = body
+    if owner in COL_NAMES:
+        if owner in ("wk", "wv") and cfg.n_kv_heads % model != 0:
+            return P()  # fractional kv-head shards force attention reshards
+        if d_out % model == 0:
+            return spec(None, "model")
+        return P()
+    if owner in ROW_NAMES:
+        if d_in % model == 0:
+            return spec("model", None)
+        return P()
+    return P()
+
+
+def param_specs(cfg: ModelConfig, params_tree: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree for a parameter (shape) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = [
+        param_spec(cfg, _path_str(p), tuple(l.shape), mesh) for p, l in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Add 'data' (ZeRO-1) on the largest unsharded, divisible dim."""
+    data = _axis_size(mesh, "data")
+    if data == 1:
+        return spec
+    cur = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in cur:
+        if e is None:
+            continue
+        used.update(e if isinstance(e, tuple) else (e,))
+    if "data" in used:
+        return spec  # already data-sharded (e.g. EP over (data, model))
+    best, best_size = None, 0
+    for i in range(len(shape) - 1, -1, -1):
+        if cur[i] is None and shape[i] % data == 0 and shape[i] > best_size:
+            best, best_size = i, shape[i]
+    if best is None:
+        return spec
+    cur[best] = "data"
+    return P(*cur)
+
+
+def opt_specs(cfg: ModelConfig, params_tree: Any, mesh: Mesh) -> Any:
+    """AdamWState spec: step replicated; mu/nu = param spec + ZeRO-1."""
+    from repro.optim.adamw import AdamWState
+
+    pspecs = param_specs(cfg, params_tree, mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    fspecs = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+    moments = jax.tree_util.tree_unflatten(
+        treedef,
+        [
+            zero1_spec(s, tuple(l.shape), mesh)
+            for (p, l), s in zip(flat, fspecs)
+        ],
+    )
+    return AdamWState(step=P(), mu=moments, nu=moments)
+
+
+# ---------------------------------------------------------------------------
+# Batches / caches
+# ---------------------------------------------------------------------------
+
+
+def _dp(
+    mesh: Mesh, n: int, *, include_model: bool = False
+) -> Optional[Tuple[str, ...]]:
+    """DP axes whose product divides n (largest usable prefix)."""
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    axes = [a for a in names if a in mesh.axis_names]
+    # try full product first, then drop outer axes
+    for start in range(len(axes)):
+        use = tuple(axes[start:])
+        size = int(np.prod([mesh.shape[a] for a in use]))
+        if n % size == 0:
+            return use
+    return None
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Any:
+    dp = _dp(
+        mesh, shape.global_batch,
+        include_model=cfg.shard_strategy in ("dp", "fsdp"),
+    )
+    bspec = dp if dp else None
+    out = {"tokens": P(bspec, None)}
+    if cfg.family == "vlm":
+        out["img_embed"] = P(bspec, None, None)
+    if cfg.family == "encdec":
+        out["src_embed"] = P(bspec, None, None)
+    return out
+
+
+def cache_spec_for(
+    cfg: ModelConfig, path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+    batch: int,
+) -> P:
+    """Serve-state sharding. Handles every family's cache layout."""
+    model = _axis_size(mesh, "model")
+    dp = _dp(mesh, batch)
+    name = path_str.split("/")[-1]
+    nd = len(shape)
+
+    def find_batch_dim():
+        for i, s in enumerate(shape):
+            if s == batch:
+                return i
+        return None
+
+    bdim = find_batch_dim()
+    spec = [None] * nd
+    if dp and bdim is not None:
+        spec[bdim] = dp
+
+    if name in ("k", "v", "xk", "xv"):
+        # (..., B, Hkv, S, Dh)
+        hdim, sdim = nd - 3, nd - 2
+        if shape[hdim] % model == 0:
+            spec[hdim] = "model"
+        elif shape[sdim] % model == 0:
+            spec[sdim] = "model"  # flash-decoding style seq shard
+    elif name in ("c_kv", "k_rope"):
+        # MLA latent cache (L, B, S, r): seq over model
+        sdim = nd - 2
+        if shape[sdim] % model == 0:
+            spec[sdim] = "model"
+    elif name == "wkv":
+        # rwkv6 state (L, B, H, K, V): K over model if divisible else none
+        if shape[3] % model == 0:
+            spec[3] = "model"
+    elif name == "ssm":
+        # zamba2 ssd state (L, B, H, N, P): heads over model
+        if shape[2] % model == 0:
+            spec[2] = "model"
+    elif name in ("shift_tm", "shift_cm"):
+        if shape[-1] % model == 0:
+            spec[-1] = "model"
+    elif name == "conv":
+        if shape[-1] % model == 0:
+            spec[-1] = "model"
+    elif name == "slot_pos":
+        pass  # tiny int32 (n_inv, B, W): replicate
+    return P(*spec)
+
+
+def serve_specs(
+    cfg: ModelConfig, state_tree: Any, mesh: Mesh, batch: int
+) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef,
+        [
+            cache_spec_for(cfg, _path_str(p), tuple(l.shape), mesh, batch)
+            for p, l in flat
+        ],
+    )
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,3 @@
+"""EFM model zoo — unified via :func:`repro.models.model.build_model`."""
+
+from repro.models.model import Model, build_model  # noqa: F401

@@ -1,0 +1,230 @@
+"""DeepSeek V2-Lite / V3 decoder: MLA attention + MoE FFN (+ MTP head).
+
+Stack layout (faithful to the released configs):
+  * layers [0, first_k_dense): MLA attention + dense SwiGLU of d_ff_dense;
+  * layers [first_k_dense, L): MLA attention + routed MoE (+ shared experts);
+  * optional MTP module (V3): one extra transformer block that predicts
+    token t+2 from [h_t ; emb(t_{t+1})] through the shared unembedding —
+    included in the train loss with weight ``mtp_loss_coef``.
+
+Both stacks are scan-over-layers; the dense prefix is scanned separately
+from the MoE stack so the two parameter pytrees stay homogeneous.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _init_dense_block(key: Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.pdt),
+        "attn": MLA.init_mla(k1, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdt),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff_dense, dtype=cfg.pdt),
+    }
+
+
+def _init_moe_block(key: Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.pdt),
+        "attn": MLA.init_mla(k1, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdt),
+        "moe": MOE.init_moe(k2, cfg),
+    }
+
+
+def init(key: Array, cfg: ModelConfig) -> Params:
+    ke, kd, km, kt = jax.random.split(key, 4)
+    n_moe = cfg.n_layers - cfg.first_k_dense
+    p: Params = {
+        "embed": L.init_embedding(ke, cfg.vocab, cfg.d_model, cfg.pdt),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.pdt),
+    }
+    if cfg.first_k_dense:
+        dk = jax.random.split(kd, cfg.first_k_dense)
+        p["dense_layers"] = jax.vmap(
+            lambda k: _init_dense_block(k, cfg)
+        )(dk)
+    mk = jax.random.split(km, n_moe)
+    p["moe_layers"] = jax.vmap(lambda k: _init_moe_block(k, cfg))(mk)
+    if cfg.mtp:
+        k1, k2 = jax.random.split(kt)
+        p["mtp"] = {
+            "proj": L.init_linear(
+                k1, 2 * cfg.d_model, cfg.d_model, dtype=cfg.pdt
+            ),
+            "block": _init_dense_block(k2, cfg.replace(d_ff_dense=cfg.d_ff)),
+            "norm_h": L.init_rmsnorm(cfg.d_model, cfg.pdt),
+            "norm_e": L.init_rmsnorm(cfg.d_model, cfg.pdt),
+        }
+    return p
+
+
+def _dense_block(cfg: ModelConfig, lp: Params, x: Array) -> Array:
+    x = x + MLA.mla_full(lp["attn"], L.rmsnorm(lp["ln1"], x), cfg).astype(
+        x.dtype
+    )
+    x = x + L.mlp(lp["mlp"], L.rmsnorm(lp["ln2"], x), cfg.cdt).astype(x.dtype)
+    return x
+
+
+def _moe_block(
+    cfg: ModelConfig, lp: Params, x: Array
+) -> Tuple[Array, Array]:
+    x = x + MLA.mla_full(lp["attn"], L.rmsnorm(lp["ln1"], x), cfg).astype(
+        x.dtype
+    )
+    y, aux = MOE.moe_ffn(lp["moe"], L.rmsnorm(lp["ln2"], x), cfg)
+    return x + y.astype(x.dtype), aux
+
+
+def _backbone(p: Params, x: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Run the full stack; returns (hidden, total aux loss)."""
+
+    def dense_body(x, lp):
+        return _dense_block(cfg, lp, x), None
+
+    def moe_body(x, lp):
+        x, aux = _moe_block(cfg, lp, x)
+        return x, aux
+
+    if cfg.remat:
+        dense_body = L.remat_wrap(cfg, dense_body)
+        moe_body = L.remat_wrap(cfg, moe_body)
+
+    if "dense_layers" in p:
+        x, _ = jax.lax.scan(dense_body, x, p["dense_layers"])
+    x, auxes = jax.lax.scan(moe_body, x, p["moe_layers"])
+    return x, jnp.mean(auxes)
+
+
+def forward(
+    p: Params, tokens: Array, cfg: ModelConfig
+) -> Tuple[Array, Array]:
+    """Returns (logits, moe aux loss)."""
+    x = L.embed(p["embed"], tokens, cfg.cdt)
+    x, aux = _backbone(p, x, cfg)
+    x = L.rmsnorm(p["final_norm"], x)
+    return L.unembed(p["embed"], x, cfg.cdt), aux
+
+
+def loss_fn(p: Params, batch: Dict[str, Array], cfg: ModelConfig) -> Array:
+    tokens = batch["tokens"]
+    x = L.embed(p["embed"], tokens, cfg.cdt)
+    h, aux = _backbone(p, x, cfg)
+    logits = L.unembed(p["embed"], L.rmsnorm(p["final_norm"], h), cfg.cdt)
+    loss = L.next_token_loss(logits, tokens, batch.get("mask"))
+    loss = loss + cfg.moe_aux_coef * aux
+
+    if cfg.mtp:
+        # MTP: from h_t and emb(t_{t+1}), predict token t+2 (V3, one module).
+        mp = p["mtp"]
+        h_in = L.rmsnorm(mp["norm_h"], h[:, :-2])
+        e_in = L.rmsnorm(
+            mp["norm_e"], L.embed(p["embed"], tokens[:, 1:-1], cfg.cdt)
+        )
+        z = L.linear(mp["proj"], jnp.concatenate([h_in, e_in], -1), cfg.cdt)
+        z = _dense_block(cfg.replace(d_ff_dense=cfg.d_ff), mp["block"], z)
+        mtp_logits = L.unembed(p["embed"], z, cfg.cdt)
+        tgt = tokens[:, 2:]
+        logz = jax.nn.logsumexp(mtp_logits, axis=-1)
+        gold = jnp.take_along_axis(mtp_logits, tgt[..., None], axis=-1)[..., 0]
+        loss = loss + cfg.mtp_loss_coef * jnp.mean(logz - gold)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    cache: Dict[str, Any] = {
+        "moe": MLA.init_mla_cache(
+            cfg, cfg.n_layers - cfg.first_k_dense, batch, max_seq
+        )
+    }
+    if cfg.first_k_dense:
+        cache["dense"] = MLA.init_mla_cache(
+            cfg, cfg.first_k_dense, batch, max_seq
+        )
+    return cache
+
+
+def prefill(
+    p: Params, tokens: Array, cfg: ModelConfig
+) -> Tuple[Array, Dict[str, Any]]:
+    x = L.embed(p["embed"], tokens, cfg.cdt)
+    cache: Dict[str, Any] = {}
+
+    def dense_body(x, lp):
+        c = MLA.mla_prefill_cache(lp["attn"], L.rmsnorm(lp["ln1"], x), cfg)
+        return _dense_block(cfg, lp, x), c
+
+    def moe_body(x, lp):
+        c = MLA.mla_prefill_cache(lp["attn"], L.rmsnorm(lp["ln1"], x), cfg)
+        x, _ = _moe_block(cfg, lp, x)
+        return x, c
+
+    if "dense_layers" in p:
+        x, cache["dense"] = jax.lax.scan(dense_body, x, p["dense_layers"])
+    x, cache["moe"] = jax.lax.scan(moe_body, x, p["moe_layers"])
+    logits = L.unembed(
+        p["embed"], L.rmsnorm(p["final_norm"], x[:, -1:]), cfg.cdt
+    )
+    return logits, cache
+
+
+def decode_step(
+    p: Params,
+    cache: Dict[str, Any],
+    token: Array,
+    pos: Array,
+    cfg: ModelConfig,
+) -> Tuple[Array, Dict[str, Any]]:
+    x = L.embed(p["embed"], token, cfg.cdt)
+    new_cache: Dict[str, Any] = {}
+
+    def dense_body(x, xs):
+        lp, c = xs
+        a, c = MLA.mla_decode(
+            lp["attn"], L.rmsnorm(lp["ln1"], x), c, pos, cfg
+        )
+        x = x + a.astype(x.dtype)
+        x = x + L.mlp(lp["mlp"], L.rmsnorm(lp["ln2"], x), cfg.cdt).astype(
+            x.dtype
+        )
+        return x, c
+
+    def moe_body(x, xs):
+        lp, c = xs
+        a, c = MLA.mla_decode(
+            lp["attn"], L.rmsnorm(lp["ln1"], x), c, pos, cfg
+        )
+        x = x + a.astype(x.dtype)
+        y, _ = MOE.moe_ffn(lp["moe"], L.rmsnorm(lp["ln2"], x), cfg)
+        return x + y.astype(x.dtype), c
+
+    if "dense_layers" in p:
+        x, new_cache["dense"] = jax.lax.scan(
+            dense_body, x, (p["dense_layers"], cache["dense"])
+        )
+    x, new_cache["moe"] = jax.lax.scan(
+        moe_body, x, (p["moe_layers"], cache["moe"])
+    )
+    logits = L.unembed(p["embed"], L.rmsnorm(p["final_norm"], x), cfg.cdt)
+    return logits, new_cache

@@ -1,0 +1,512 @@
+"""Zamba2 hybrid: Mamba-2 (SSD) backbone + shared attention blocks.
+
+Faithful to the Zamba2 layout (arXiv:2411.15242): a stack of Mamba-2
+layers; every ``cfg.shared_attn_period`` layers, one of
+``cfg.n_shared_blocks`` *weight-shared* transformer blocks runs on the
+concatenation ``[x ; x_emb0]`` (current residual + original embedding,
+width 2*D), and a per-invocation linear projects its output back to D.
+The shared blocks alternate (ABAB...), matching the released 2.7B model.
+
+Mamba-2 block (per layer): in_proj -> (z, x, B, C, dt); causal depthwise
+conv over (x,B,C); SSD scan (``kernels/mamba2_ssd``; chunked matmul form
+for train/prefill, O(1) recurrent state for decode); gated RMSNorm; out
+projection.
+
+Serving state: per-layer (conv_state (B, W-1, conv_ch), ssm (B, H, N, P))
+plus a KV cache per shared-block *invocation*. When the target context
+exceeds ``cfg.attn_window`` the shared attention becomes sliding-window
+(slot = pos % window with absolute-position tags) — this is what makes
+``long_500k`` deployable for this arch while the pure-attention archs
+skip it.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.mamba2_ssd.ops import mamba2_ssd
+from repro.models import layers as L
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+HEAD_P = 64  # Mamba-2 head width (P); heads = d_inner // HEAD_P
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // HEAD_P
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_ch, cfg.ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(key: Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    d_inner, h, conv_ch, n = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    pdt = cfg.pdt
+    # in_proj emits [z, x, B, C, dt]
+    d_proj = 2 * d_inner + 2 * n + h
+    return {
+        "ln": L.init_rmsnorm(d, pdt),
+        "in_proj": L.init_linear(ks[0], d, d_proj, dtype=pdt),
+        "conv_w": (
+            jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+            * (1.0 / math.sqrt(cfg.ssm_conv))
+        ).astype(pdt),
+        "conv_b": jnp.zeros((conv_ch,), pdt),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) = -1
+        "dt_bias": jnp.log(
+            jnp.expm1(jnp.full((h,), 0.01, jnp.float32))
+        ),  # softplus^-1(0.01)
+        "d_skip": jnp.ones((h,), pdt),
+        "gn": L.init_rmsnorm(d_inner, pdt),
+        "out_proj": L.init_linear(ks[2], d_inner, d, dtype=pdt),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: Array):
+    d_inner, h, _, n = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xin = zxbcdt[..., d_inner : 2 * d_inner]
+    bm = zxbcdt[..., 2 * d_inner : 2 * d_inner + n]
+    cm = zxbcdt[..., 2 * d_inner + n : 2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n :]
+    return z, xin, bm, cm, dt
+
+
+def mamba_block(
+    p: Params,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    backend: str = "chunked",
+    return_state: bool = False,
+):
+    """Full-sequence Mamba-2 mixer. x: (B, S, D) -> (B, S, D) [, states]."""
+    b, s, d = x.shape
+    d_inner, h, conv_ch, n = _dims(cfg)
+    cdt = cfg.cdt
+    xn = L.rmsnorm(p["ln"], x)
+    z, xin, bm, cm, dt = _split_proj(cfg, L.linear(p["in_proj"], xn, cdt))
+
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([xin, bm, cm], axis=-1)  # (B,S,conv_ch)
+    pad = jnp.pad(xbc, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + s] * p["conv_w"][i].astype(cdt)
+        for i in range(cfg.ssm_conv)
+    ) + p["conv_b"].astype(cdt)
+    conv = jax.nn.silu(conv)
+    xin = conv[..., :d_inner]
+    bm = conv[..., d_inner : d_inner + n].astype(jnp.float32)
+    cm = conv[..., d_inner + n :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"]
+    )  # (B,S,H) > 0
+    a = -jnp.exp(p["a_log"])  # (H,) < 0
+    a_log_t = (dt * a).transpose(0, 2, 1)  # (B,H,S)
+    xh = xin.astype(jnp.float32).reshape(b, s, h, HEAD_P)
+    xh = (xh * dt[..., None]).transpose(0, 2, 1, 3)  # (B,H,S,P)
+
+    y, s_fin = mamba2_ssd(
+        xh, a_log_t, bm, cm, backend=backend, chunk=cfg.scan_chunk
+    )
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None, None]
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d_inner).astype(cdt)
+    y = L.rmsnorm(p["gn"], y * jax.nn.silu(z))
+    out = L.linear(p["out_proj"], y, cdt)
+    if return_state:
+        conv_state = xbc[:, s - (cfg.ssm_conv - 1) :].astype(jnp.float32)
+        return out, conv_state, s_fin
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block (runs on [x ; x_emb0], width 2*D)
+# ---------------------------------------------------------------------------
+
+
+def init_shared_block(key: Array, cfg: ModelConfig) -> Params:
+    d2 = 2 * cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    head_dim = d2 // cfg.n_heads
+    return {
+        "ln1": L.init_rmsnorm(d2, cfg.pdt),
+        "attn": L.init_attention(
+            k1, d2, cfg.n_heads, cfg.n_kv_heads, head_dim, dtype=cfg.pdt
+        ),
+        "ln2": L.init_rmsnorm(d2, cfg.pdt),
+        "mlp": L.init_mlp(k2, d2, cfg.d_ff, dtype=cfg.pdt),
+        "out": L.init_linear(k3, d2, cfg.d_model, dtype=cfg.pdt),
+    }
+
+
+def shared_block(
+    p: Params,
+    x: Array,
+    emb0: Array,
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+) -> Array:
+    """Shared transformer block on concat input; returns a D-wide delta."""
+    h = jnp.concatenate([x, emb0], axis=-1)
+    h = h + L.attention_full(
+        p["attn"],
+        L.rmsnorm(p["ln1"], h),
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        rope_base=cfg.rope_base,
+        backend=cfg.attn_backend,
+        compute_dtype=cfg.cdt,
+        window=window,
+    ).astype(h.dtype)
+    h = h + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h), cfg.cdt).astype(h.dtype)
+    return L.linear(p["out"], h, cfg.cdt)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def n_shared_invocations(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_period
+
+
+def init(key: Array, cfg: ModelConfig) -> Params:
+    ke, km, ks = jax.random.split(key, 3)
+    mk = jax.random.split(km, cfg.n_layers)
+    sk = jax.random.split(ks, cfg.n_shared_blocks)
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab, cfg.d_model, cfg.pdt),
+        "layers": jax.vmap(lambda k: init_mamba_block(k, cfg))(mk),
+        "shared": jax.vmap(lambda k: init_shared_block(k, cfg))(sk),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.pdt),
+    }
+
+
+def _serve_window(cfg: ModelConfig, max_seq: int) -> Optional[int]:
+    if cfg.attn_window is not None and max_seq > cfg.attn_window:
+        return cfg.attn_window
+    return None
+
+
+def forward(p: Params, tokens: Array, cfg: ModelConfig) -> Array:
+    x = L.embed(p["embed"], tokens, cfg.cdt)
+    emb0 = x
+    period = cfg.shared_attn_period
+    n_inv = n_shared_invocations(cfg)
+
+    def mamba_body(x, lp):
+        return x + mamba_block(lp, x, cfg).astype(x.dtype), None
+
+    if cfg.remat:
+        mamba_body = L.remat_wrap(cfg, mamba_body)
+
+    # scan over "groups": `period` mamba layers then one shared block.
+    lay = jax.tree.map(
+        lambda a: a.reshape((n_inv, period) + a.shape[1:]), p["layers"]
+    )
+
+    def group_body(x, xs):
+        glayers, gi = xs
+        x, _ = jax.lax.scan(mamba_body, x, glayers)
+        # alternate shared blocks (ABAB...): pick block gi % n_shared
+        bi = gi % cfg.n_shared_blocks
+        sp = jax.tree.map(lambda a: a[bi], p["shared"])
+        x = x + shared_block(sp, x, emb0, cfg).astype(x.dtype)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, (lay, jnp.arange(n_inv)))
+    x = L.rmsnorm(p["final_norm"], x)
+    return L.unembed(p["embed"], x, cfg.cdt)
+
+
+def loss_fn(p: Params, batch: Dict[str, Array], cfg: ModelConfig) -> Array:
+    logits = forward(p, batch["tokens"], cfg)
+    return L.next_token_loss(logits, batch["tokens"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    d_inner, h, conv_ch, n = _dims(cfg)
+    n_inv = n_shared_invocations(cfg)
+    w = _serve_window(cfg, max_seq) or max_seq
+    d2 = 2 * cfg.d_model
+    head_dim = d2 // cfg.n_heads
+    return {
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch), jnp.float32
+        ),
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, n, HEAD_P), jnp.float32),
+        "k": jnp.zeros(
+            (n_inv, batch, cfg.n_kv_heads, w, head_dim), cfg.cachedt
+        ),
+        "v": jnp.zeros(
+            (n_inv, batch, cfg.n_kv_heads, w, head_dim), cfg.cachedt
+        ),
+        "slot_pos": jnp.full((n_inv, batch, w), -1, jnp.int32),
+    }
+
+
+def prefill(
+    p: Params, tokens: Array, cfg: ModelConfig
+) -> Tuple[Array, Dict[str, Any]]:
+    """Ingest a prefix; returns (last-token logits, serve cache).
+
+    The shared-attention KV caches keep the last ``window`` positions in
+    modular (slot = pos %% window) layout so decode can continue from
+    ``pos = S`` seamlessly.
+    """
+    b, s = tokens.shape
+    x = L.embed(p["embed"], tokens, cfg.cdt)
+    emb0 = x
+    period = cfg.shared_attn_period
+    n_inv = n_shared_invocations(cfg)
+    cache = init_cache(cfg, b, s)
+    w = cache["k"].shape[3]
+
+    lay = jax.tree.map(
+        lambda a: a.reshape((n_inv, period) + a.shape[1:]), p["layers"]
+    )
+
+    # positions kept in the windowed cache and their modular slots
+    keep0 = max(0, s - w)
+    kept = jnp.arange(keep0, s)
+    slots = jnp.mod(kept, w)
+
+    def group_body(x, xs):
+        glayers, gi = xs
+
+        def mamba_body(x, lp):
+            y, cst, sst = mamba_block(lp, x, cfg, return_state=True)
+            return x + y.astype(x.dtype), (cst, sst)
+
+        x, (gconv, gssm) = jax.lax.scan(mamba_body, x, glayers)
+        bi = gi % cfg.n_shared_blocks
+        sp = jax.tree.map(lambda a: a[bi], p["shared"])
+        h = jnp.concatenate([x, emb0], axis=-1)
+        hn = L.rmsnorm(sp["ln1"], h)
+        kv = L.attention_prefill_cache(
+            sp["attn"],
+            hn,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            rope_base=cfg.rope_base,
+            compute_dtype=cfg.cdt,
+            cache_dtype=cfg.cachedt,
+        )
+        win = None if w >= s else cfg.attn_window
+        hh = h + L.attention_full(
+            sp["attn"],
+            hn,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            rope_base=cfg.rope_base,
+            compute_dtype=cfg.cdt,
+            window=win,
+        ).astype(h.dtype)
+        hh = hh + L.mlp(sp["mlp"], L.rmsnorm(sp["ln2"], hh), cfg.cdt).astype(
+            hh.dtype
+        )
+        x = x + L.linear(sp["out"], hh, cfg.cdt).astype(x.dtype)
+        # scatter the kept suffix into modular slots
+        kc = jnp.zeros((b, cfg.n_kv_heads, w, kv["k"].shape[-1]), cfg.cachedt)
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, :, slots].set(kv["k"][:, :, kept])
+        vc = vc.at[:, :, slots].set(kv["v"][:, :, kept])
+        spos = jnp.full((b, w), -1, jnp.int32).at[:, slots].set(
+            kept.astype(jnp.int32)[None]
+        )
+        return x, (gconv, gssm, kc, vc, spos)
+
+    x, (conv_g, ssm_g, kc, vc, spos) = jax.lax.scan(
+        group_body, x, (lay, jnp.arange(n_inv))
+    )
+    x = L.rmsnorm(p["final_norm"], x[:, -1:])
+    logits = L.unembed(p["embed"], x, cfg.cdt)
+    new_cache = {
+        "conv": conv_g.reshape(cache["conv"].shape),
+        "ssm": ssm_g.reshape(cache["ssm"].shape),
+        "k": kc,
+        "v": vc,
+        "slot_pos": spos,
+    }
+    return logits, new_cache
+
+
+def _mamba_step(
+    p: Params,
+    x: Array,  # (B, D)
+    conv_state: Array,  # (B, W-1, conv_ch)
+    ssm: Array,  # (B, H, N, P)
+    cfg: ModelConfig,
+) -> Tuple[Array, Array, Array]:
+    b, d = x.shape
+    d_inner, h, conv_ch, n = _dims(cfg)
+    cdt = cfg.cdt
+    xn = L.rmsnorm(p["ln"], x)
+    z, xin, bm, cm, dt = _split_proj(cfg, L.linear(p["in_proj"], xn, cdt))
+    xbc = jnp.concatenate([xin, bm, cm], axis=-1)  # (B, conv_ch)
+    win = jnp.concatenate(
+        [conv_state.astype(cdt), xbc[:, None]], axis=1
+    )  # (B, W, ch)
+    conv = (
+        jnp.einsum("bwc,wc->bc", win, p["conv_w"].astype(cdt))
+        + p["conv_b"].astype(cdt)
+    )
+    conv = jax.nn.silu(conv)
+    new_conv_state = win[:, 1:].astype(jnp.float32)
+
+    xin = conv[..., :d_inner].astype(jnp.float32)
+    bm = conv[..., d_inner : d_inner + n].astype(jnp.float32)
+    cm = conv[..., d_inner + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)  # (B, H)
+    xh = xin.reshape(b, h, HEAD_P) * dt[..., None]
+    ssm_new = (
+        decay[..., None, None] * ssm
+        + bm[:, None, :, None] * xh[:, :, None, :]
+    )  # (B,H,N,P)
+    y = jnp.einsum("bn,bhnp->bhp", cm, ssm_new) + xh * p["d_skip"].astype(
+        jnp.float32
+    )[None, :, None]
+    y = y.reshape(b, d_inner).astype(cdt)
+    y = L.rmsnorm(p["gn"], y * jax.nn.silu(z))
+    return L.linear(p["out_proj"], y, cdt), new_conv_state, ssm_new
+
+
+def _shared_decode(
+    p: Params,
+    x: Array,  # (B, 1, D)
+    emb0: Array,  # (B, 1, D)
+    k_c: Array,
+    v_c: Array,
+    slot_pos: Array,  # (B, W)
+    pos: Array,
+    cfg: ModelConfig,
+) -> Tuple[Array, Array, Array, Array]:
+    b = x.shape[0]
+    d2 = 2 * cfg.d_model
+    head_dim = d2 // cfg.n_heads
+    w = k_c.shape[2]
+    cdt = cfg.cdt
+    h = jnp.concatenate([x, emb0], axis=-1)
+    hn = L.rmsnorm(p["ln1"], h)
+    ap = p["attn"]
+    q = L.linear(ap["wq"], hn, cdt).reshape(b, 1, cfg.n_heads, head_dim)
+    q = q.transpose(0, 2, 1, 3)
+    k_new = L.linear(ap["wk"], hn, cdt).reshape(
+        b, 1, cfg.n_kv_heads, head_dim
+    ).transpose(0, 2, 1, 3)
+    v_new = L.linear(ap["wv"], hn, cdt).reshape(
+        b, 1, cfg.n_kv_heads, head_dim
+    ).transpose(0, 2, 1, 3)
+    cos, sin = L.rope_cos_sin(pos[None], head_dim, cfg.rope_base)
+    q = L.apply_rope(q, cos, sin)
+    k_new = L.apply_rope(k_new, cos, sin)
+
+    slot = jnp.mod(pos, w)
+    k_c = jax.lax.dynamic_update_slice(
+        k_c, k_new.astype(k_c.dtype), (0, 0, slot, 0)
+    )
+    v_c = jax.lax.dynamic_update_slice(
+        v_c, v_new.astype(v_c.dtype), (0, 0, slot, 0)
+    )
+    slot_pos = jax.lax.dynamic_update_slice(
+        slot_pos, jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32), (0, slot)
+    )
+    group = cfg.n_heads // cfg.n_kv_heads
+    kr = jnp.repeat(k_c.astype(cdt), group, axis=1)
+    vr = jnp.repeat(v_c.astype(cdt), group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32)
+    logits = logits / math.sqrt(head_dim)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(cdt)
+    o = jnp.einsum("bhqk,bhkd->bhqd", probs, vr)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, d2)
+    h = h + L.linear(ap["wo"], o, cdt).astype(h.dtype)
+    h = h + L.mlp(p["mlp"], L.rmsnorm(p["ln2"], h), cdt).astype(h.dtype)
+    return L.linear(p["out"], h, cdt), k_c, v_c, slot_pos
+
+
+def decode_step(
+    p: Params,
+    cache: Dict[str, Any],
+    token: Array,  # (B, 1)
+    pos: Array,
+    cfg: ModelConfig,
+) -> Tuple[Array, Dict[str, Any]]:
+    x = L.embed(p["embed"], token, cfg.cdt)  # (B,1,D)
+    emb0 = x
+    period = cfg.shared_attn_period
+    n_inv = n_shared_invocations(cfg)
+
+    lay = jax.tree.map(
+        lambda a: a.reshape((n_inv, period) + a.shape[1:]), p["layers"]
+    )
+    conv_g = cache["conv"].reshape(
+        (n_inv, period) + cache["conv"].shape[1:]
+    )
+    ssm_g = cache["ssm"].reshape((n_inv, period) + cache["ssm"].shape[1:])
+
+    def group_body(x, xs):
+        glayers, gconv, gssm, k_c, v_c, spos, gi = xs
+
+        def mamba_body(x, ys):
+            lp, cst, sst = ys
+            dx, cst, sst = _mamba_step(lp, x[:, 0], cst, sst, cfg)
+            return x + dx[:, None].astype(x.dtype), (cst, sst)
+
+        x, (gconv, gssm) = jax.lax.scan(
+            mamba_body, x, (glayers, gconv, gssm)
+        )
+        bi = gi % cfg.n_shared_blocks
+        sp = jax.tree.map(lambda a: a[bi], p["shared"])
+        dx, k_c, v_c, spos = _shared_decode(
+            sp, x, emb0, k_c, v_c, spos, pos, cfg
+        )
+        return x + dx.astype(x.dtype), (gconv, gssm, k_c, v_c, spos)
+
+    x, (conv_g, ssm_g, k_c, v_c, spos) = jax.lax.scan(
+        group_body,
+        x,
+        (
+            lay,
+            conv_g,
+            ssm_g,
+            cache["k"],
+            cache["v"],
+            cache["slot_pos"],
+            jnp.arange(n_inv),
+        ),
+    )
+    x = L.rmsnorm(p["final_norm"], x)
+    logits = L.unembed(p["embed"], x, cfg.cdt)
+    new_cache = {
+        "conv": conv_g.reshape(cache["conv"].shape),
+        "ssm": ssm_g.reshape(cache["ssm"].shape),
+        "k": k_c,
+        "v": v_c,
+        "slot_pos": spos,
+    }
+    return logits, new_cache

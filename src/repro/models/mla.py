@@ -1,0 +1,218 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+MLA compresses the KV cache into a low-rank latent ``c_kv`` of width
+``kv_lora_rank`` plus one shared RoPE key of width ``qk_rope_dim`` — the
+cache is (S, kv_lora + rope) per token instead of (S, 2*H*Dh).
+
+Two execution forms (mathematically identical; property-tested):
+
+  * decompressed (train / prefill): up-project c_kv to per-head K/V and run
+    ordinary attention — best for MXU utilisation over long sequences.
+  * absorbed (decode): fold W_UK into the query and W_UV into the output so
+    attention runs directly against the compressed cache — this is the whole
+    point of MLA at serve time (27x smaller cache for v3).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def init_mla(key: Array, cfg: ModelConfig) -> Params:
+    h, nope, rope_d, vdim = (
+        cfg.n_heads,
+        cfg.qk_nope_dim,
+        cfg.qk_rope_dim,
+        cfg.v_head_dim,
+    )
+    keys = jax.random.split(key, 8)
+    p: Params = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = L.init_linear(keys[0], cfg.d_model, cfg.q_lora_rank, dtype=cfg.pdt)
+        p["q_norm"] = L.init_rmsnorm(cfg.q_lora_rank, cfg.pdt)
+        p["wq_b"] = L.init_linear(
+            keys[1], cfg.q_lora_rank, h * (nope + rope_d), dtype=cfg.pdt
+        )
+    else:
+        p["wq"] = L.init_linear(keys[0], cfg.d_model, h * (nope + rope_d), dtype=cfg.pdt)
+    p["wkv_a"] = L.init_linear(
+        keys[2], cfg.d_model, cfg.kv_lora_rank, dtype=cfg.pdt
+    )
+    p["kv_norm"] = L.init_rmsnorm(cfg.kv_lora_rank, cfg.pdt)
+    p["wk_rope"] = L.init_linear(keys[3], cfg.d_model, rope_d, dtype=cfg.pdt)
+    p["wk_b"] = L.init_linear(
+        keys[4], cfg.kv_lora_rank, h * nope, dtype=cfg.pdt
+    )
+    p["wv_b"] = L.init_linear(
+        keys[5], cfg.kv_lora_rank, h * vdim, dtype=cfg.pdt
+    )
+    p["wo"] = L.init_linear(keys[6], h * vdim, cfg.d_model, dtype=cfg.pdt)
+    return p
+
+
+def _queries(
+    p: Params, x: Array, cfg: ModelConfig, positions: Array
+) -> Tuple[Array, Array]:
+    """Project + rope queries. Returns (q_nope (B,H,S,nope), q_rope (B,H,S,rope))."""
+    b, s, _ = x.shape
+    h, nope, rope_d = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        q = L.linear(
+            p["wq_b"],
+            L.rmsnorm(p["q_norm"], L.linear(p["wq_a"], x, cfg.cdt)),
+            cfg.cdt,
+        )
+    else:
+        q = L.linear(p["wq"], x, cfg.cdt)
+    q = q.reshape(b, s, h, nope + rope_d).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = L.rope_cos_sin(positions, rope_d, cfg.rope_base)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _latents(
+    p: Params, x: Array, cfg: ModelConfig, positions: Array
+) -> Tuple[Array, Array]:
+    """Compressed latents: c_kv (B,S,r) normalised, k_rope (B,S,rope) roped."""
+    c_kv = L.rmsnorm(p["kv_norm"], L.linear(p["wkv_a"], x, cfg.cdt))
+    k_rope = L.linear(p["wk_rope"], x, cfg.cdt)
+    cos, sin = L.rope_cos_sin(positions, cfg.qk_rope_dim, cfg.rope_base)
+    k_rope = L.apply_rope(k_rope, cos, sin)
+    return c_kv, k_rope
+
+
+def mla_full(
+    p: Params,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    positions: Optional[Array] = None,
+) -> Array:
+    """Decompressed full-sequence MLA (train / prefill). (B,S,D) -> (B,S,D)."""
+    b, s, _ = x.shape
+    h, nope, rope_d, vdim = (
+        cfg.n_heads,
+        cfg.qk_nope_dim,
+        cfg.qk_rope_dim,
+        cfg.v_head_dim,
+    )
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c_kv, k_rope = _latents(p, x, cfg, positions)
+
+    k_nope = (
+        L.linear(p["wk_b"], c_kv, cfg.cdt)
+        .reshape(b, s, h, nope)
+        .transpose(0, 2, 1, 3)
+    )
+    v = (
+        L.linear(p["wv_b"], c_kv, cfg.cdt)
+        .reshape(b, s, h, vdim)
+        .transpose(0, 2, 1, 3)
+    )
+    q = jnp.concatenate(
+        [q_nope, q_rope], axis=-1
+    )  # (B,H,S,nope+rope)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None], (b, h, s, rope_d))], axis=-1
+    )
+    if cfg.attn_backend == "chunked":
+        o = L.attention_chunked(q, k, v, causal=True)
+    else:
+        scale = 1.0 / math.sqrt(nope + rope_d)
+        logits = (
+            jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+        )
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(cfg.cdt)
+        o = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * vdim)
+    return L.linear(p["wo"], o, cfg.cdt)
+
+
+def mla_prefill_cache(
+    p: Params, x: Array, cfg: ModelConfig
+) -> Dict[str, Array]:
+    """Compressed cache for a prefix: c_kv (B,S,r) + k_rope (B,S,rope)."""
+    s = x.shape[1]
+    c_kv, k_rope = _latents(p, x, cfg, jnp.arange(s))
+    return {
+        "c_kv": c_kv.astype(cfg.cachedt),
+        "k_rope": k_rope.astype(cfg.cachedt),
+    }
+
+
+def init_mla_cache(
+    cfg: ModelConfig, n_layers: int, batch: int, max_seq: int
+) -> Dict[str, Array]:
+    return {
+        "c_kv": jnp.zeros(
+            (n_layers, batch, max_seq, cfg.kv_lora_rank), cfg.cachedt
+        ),
+        "k_rope": jnp.zeros(
+            (n_layers, batch, max_seq, cfg.qk_rope_dim), cfg.cachedt
+        ),
+    }
+
+
+def mla_decode(
+    p: Params,
+    x: Array,  # (B, 1, D)
+    cache: Dict[str, Array],  # c_kv (B,S,r), k_rope (B,S,rope)
+    pos: Array,
+    cfg: ModelConfig,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Absorbed one-token MLA decode against the compressed cache."""
+    b = x.shape[0]
+    h, nope, rope_d, vdim, r = (
+        cfg.n_heads,
+        cfg.qk_nope_dim,
+        cfg.qk_rope_dim,
+        cfg.v_head_dim,
+        cfg.kv_lora_rank,
+    )
+    q_nope, q_rope = _queries(p, x, cfg, pos[None])  # (B,H,1,*)
+    c_new, kr_new = _latents(p, x, cfg, pos[None])  # (B,1,r), (B,1,rope)
+
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0)
+    )
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0)
+    )
+    skv = c_kv.shape[1]
+
+    # Absorb W_UK into q: q_abs[b,h,r] = sum_n q_nope[b,h,n] W_UK[r, h, n].
+    wk_b = p["wk_b"]["w"].astype(cfg.cdt).reshape(r, h, nope)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, :, 0], wk_b)  # (B,H,r)
+
+    ckv_f = c_kv.astype(cfg.cdt)
+    kr_f = k_rope.astype(cfg.cdt)
+    scores = jnp.einsum("bhr,bsr->bhs", q_abs, ckv_f) + jnp.einsum(
+        "bhd,bsd->bhs", q_rope[:, :, 0], kr_f
+    )
+    scores = scores.astype(jnp.float32) / math.sqrt(nope + rope_d)
+    mask = jnp.arange(skv) <= pos
+    scores = jnp.where(mask[None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cfg.cdt)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs, ckv_f)  # (B,H,r)
+
+    # Absorb W_UV on the way out: o[b,h,v] = sum_r ctx[b,h,r] W_UV[r, h, v].
+    wv_b = p["wv_b"]["w"].astype(cfg.cdt).reshape(r, h, vdim)
+    o = jnp.einsum("bhr,rhv->bhv", ctx, wv_b).reshape(b, 1, h * vdim)
+    out = L.linear(p["wo"], o, cfg.cdt)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,179 @@
+"""Unified model API: ``build_model(cfg)`` dispatches on ``cfg.family``.
+
+Every family exposes the same surface so the trainer / server / dry-run
+never branch on architecture:
+
+  * ``init(key)                      -> params``
+  * ``loss_fn(params, batch)         -> scalar loss``
+  * ``forward(params, batch)         -> logits``       (family-shaped batch)
+  * ``prefill(params, batch)         -> (logits, serve_state)``
+  * ``init_serve(batch, max_seq)     -> serve_state``  (zeros; spec-able)
+  * ``decode_step(params, state, token, pos) -> (logits, state)``
+  * ``batch_spec(shape)   -> {name: ShapeDtypeStruct}`` train/prefill inputs
+  * ``token_spec(batch)   -> ShapeDtypeStruct``         decode-step token
+
+Batch layouts by family:
+  dense / moe_mla / rwkv6 / hybrid : {"tokens": (B, S) i32}
+  vlm                              : + {"img_embed": (B, img_seq, D) f32}
+  encdec                           : + {"src_embed": (B, S_src, D) f32}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Array], Params]
+    loss_fn: Callable[[Params, Dict[str, Array]], Array]
+    forward: Callable[[Params, Dict[str, Array]], Array]
+    prefill: Callable[[Params, Dict[str, Array]], Any]
+    init_serve: Callable[[int, int], Any]
+    decode_step: Callable[[Params, Any, Array, Array], Any]
+    batch_spec: Callable[[ShapeSpec], Dict[str, jax.ShapeDtypeStruct]]
+
+    def param_spec(self) -> Params:
+        """Shape/dtype pytree of the parameters (no allocation)."""
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def serve_spec(self, batch: int, max_seq: int) -> Any:
+        # close over the ints: they are static shape arguments, not tracers
+        return jax.eval_shape(lambda: self.init_serve(batch, max_seq))
+
+    def token_spec(self, batch: int) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+
+
+def _tokens_spec(shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {
+        "tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32
+        )
+    }
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam == "dense":
+        from repro.models import transformer as M
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: M.init(key, cfg),
+            loss_fn=lambda p, b: M.loss_fn(p, b, cfg),
+            forward=lambda p, b: M.forward(p, b["tokens"], cfg),
+            prefill=lambda p, b: M.prefill(p, b["tokens"], cfg),
+            init_serve=lambda bs, s: M.init_cache(cfg, bs, s),
+            decode_step=lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            batch_spec=_tokens_spec,
+        )
+    if fam == "moe_mla":
+        from repro.models import deepseek as M
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: M.init(key, cfg),
+            loss_fn=lambda p, b: M.loss_fn(p, b, cfg),
+            forward=lambda p, b: M.forward(p, b["tokens"], cfg)[0],
+            prefill=lambda p, b: M.prefill(p, b["tokens"], cfg),
+            init_serve=lambda bs, s: M.init_cache(cfg, bs, s),
+            decode_step=lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            batch_spec=_tokens_spec,
+        )
+    if fam == "rwkv6":
+        from repro.models import rwkv6 as M
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: M.init(key, cfg),
+            loss_fn=lambda p, b: M.loss_fn(p, b, cfg),
+            forward=lambda p, b: M.forward(p, b["tokens"], cfg),
+            prefill=lambda p, b: M.prefill(p, b["tokens"], cfg, backend="chunked"),
+            init_serve=lambda bs, s: M.init_state(cfg, bs),
+            decode_step=lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            batch_spec=_tokens_spec,
+        )
+    if fam == "hybrid":
+        from repro.models import mamba2 as M
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: M.init(key, cfg),
+            loss_fn=lambda p, b: M.loss_fn(p, b, cfg),
+            forward=lambda p, b: M.forward(p, b["tokens"], cfg),
+            prefill=lambda p, b: M.prefill(p, b["tokens"], cfg),
+            init_serve=lambda bs, s: M.init_cache(cfg, bs, s),
+            decode_step=lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            batch_spec=_tokens_spec,
+        )
+    if fam == "vlm":
+        from repro.models import vision as M
+
+        def vlm_spec(shape: ShapeSpec):
+            sp = _tokens_spec(shape)
+            sp["img_embed"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, cfg.img_seq, cfg.d_model), jnp.float32
+            )
+            return sp
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: M.init(key, cfg),
+            loss_fn=lambda p, b: M.loss_fn(p, b, cfg),
+            forward=lambda p, b: M.forward(p, b["tokens"], b["img_embed"], cfg),
+            prefill=lambda p, b: M.prefill(
+                p, b["tokens"], b["img_embed"], cfg
+            ),
+            init_serve=lambda bs, s: M.init_cache(cfg, bs, s),
+            decode_step=lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            batch_spec=vlm_spec,
+        )
+    if fam == "encdec":
+        from repro.models import encdec as M
+
+        def ed_spec(shape: ShapeSpec):
+            sp = _tokens_spec(shape)
+            sp["src_embed"] = jax.ShapeDtypeStruct(
+                (
+                    shape.global_batch,
+                    M.src_len(cfg, shape.seq_len),
+                    cfg.d_model,
+                ),
+                jnp.float32,
+            )
+            return sp
+
+        def ed_prefill(p, b):
+            xk, xv = M.precompute_cross_cache(p, b["src_embed"], cfg)
+            s = b["tokens"].shape[1]
+            cache = M.init_cache(cfg, b["tokens"].shape[0], s, xk.shape[3])
+            cache["xk"], cache["xv"] = xk, xv
+            return None, cache
+
+        def ed_init_serve(bs, s):
+            return M.init_cache(cfg, bs, s, M.src_len(cfg, s))
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: M.init(key, cfg),
+            loss_fn=lambda p, b: M.loss_fn(p, b, cfg),
+            forward=lambda p, b: M.forward(
+                p, b["src_embed"], b["tokens"], cfg
+            ),
+            prefill=ed_prefill,
+            init_serve=ed_init_serve,
+            decode_step=lambda p, c, t, pos: M.decode_step(p, c, t, pos, cfg),
+            batch_spec=ed_spec,
+        )
+    raise ValueError(f"unknown family: {fam}")

@@ -1,0 +1,309 @@
+"""RWKV6 "Finch" language model (attention-free, data-dependent decay).
+
+Block = TimeMix (the RWKV6 linear-attention with per-channel dynamic decay,
+computed by the chunked ``rwkv6_scan`` op) + ChannelMix (squared-ReLU FFN
+with token-shift), both with the RWKV6 "ddlerp" dynamic token-shift mixing:
+
+  delta_t  = x_{t-1} - x_t
+  xx       = x + delta * mu_x
+  mix_i    = mu_i + tanh(xx @ A) @ B_i          (low-rank, per branch i)
+  x_i      = x + delta * mix_i                  for i in {r, k, v, w, g}
+
+Decay: w_log = -exp(w0 + tanh(x_w @ Aw) @ Bw)   (always < 0, data-dependent)
+
+Serving state per layer: (shift_tm (B, D), shift_cm (B, D), wkv (B, H, K, V))
+— O(1) in context length, which is why this arch runs the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+from repro.models import layers as L
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+_TM_BRANCHES = 5  # r, k, v, w, g
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_block(key: Array, cfg: ModelConfig) -> Params:
+    d, r = cfg.d_model, cfg.rwkv_lora_rank
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d)
+    pdt = cfg.pdt
+
+    def lin(k, din, dout, sc=None):
+        return L.init_linear(k, din, dout, dtype=pdt, scale=sc)
+
+    return {
+        "ln1": L.init_layernorm(d, dtype=pdt),
+        "tm": {
+            "mu_x": jnp.zeros((d,), pdt),
+            "mu": jnp.zeros((_TM_BRANCHES, d), pdt),
+            "lora_a": (jax.random.normal(ks[0], (d, r), jnp.float32) * s).astype(pdt),
+            "lora_b": jnp.zeros((_TM_BRANCHES, r, d), pdt),
+            "w0": jnp.full((d,), -2.0, pdt),  # base decay ~ exp(-exp(-2))
+            "decay_a": (
+                jax.random.normal(ks[1], (d, cfg.rwkv_decay_lora_rank), jnp.float32) * s
+            ).astype(pdt),
+            "decay_b": jnp.zeros((cfg.rwkv_decay_lora_rank, d), pdt),
+            "u": (jax.random.normal(ks[2], (h, hd), jnp.float32) * 0.3).astype(pdt),
+            "wr": lin(ks[3], d, d),
+            "wk": lin(ks[4], d, d),
+            "wv": lin(ks[5], d, d),
+            "wg": lin(ks[6], d, d),
+            "gn_scale": jnp.ones((h, hd), pdt),  # per-head groupnorm
+            "gn_bias": jnp.zeros((h, hd), pdt),
+            "wo": lin(ks[7], d, d),
+        },
+        "ln2": L.init_layernorm(d, dtype=pdt),
+        "cm": {
+            "mu_k": jnp.zeros((d,), pdt),
+            "mu_r": jnp.zeros((d,), pdt),
+            "wk": lin(ks[8], d, cfg.d_ff),
+            "wv": lin(ks[9], cfg.d_ff, d),
+            "wr": lin(ks[10], d, d),
+        },
+    }
+
+
+def _ddlerp(tm: Params, x: Array, x_prev: Array, cdt) -> Tuple[Array, ...]:
+    """RWKV6 dynamic token-shift mixing -> (x_r, x_k, x_v, x_w, x_g)."""
+    delta = x_prev - x
+    xx = x + delta * tm["mu_x"].astype(cdt)
+    low = jnp.tanh(jnp.dot(xx, tm["lora_a"].astype(cdt)))  # (..., r)
+    d = x.shape[-1]
+    mu = tm["mu"].astype(cdt).reshape(
+        (_TM_BRANCHES,) + (1,) * (x.ndim - 1) + (d,)
+    )
+    mixes = mu + jnp.einsum(
+        "...r,brd->b...d", low, tm["lora_b"].astype(cdt)
+    )  # (5, ..., d)
+    outs = tuple(x + delta * mixes[i] for i in range(_TM_BRANCHES))
+    return outs
+
+
+def _decay_log(tm: Params, x_w: Array, cdt) -> Array:
+    """Data-dependent per-channel log decay (< 0)."""
+    dyn = jnp.dot(
+        jnp.tanh(jnp.dot(x_w, tm["decay_a"].astype(cdt))),
+        tm["decay_b"].astype(cdt),
+    )
+    return -jnp.exp(tm["w0"].astype(cdt) + dyn)
+
+
+def _group_norm(tm: Params, o: Array, eps: float = 1e-5) -> Array:
+    """Per-head layernorm of the wkv output. o: (B, T, H, hd)."""
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    y = (o - mu) * jax.lax.rsqrt(var + eps)
+    return y * tm["gn_scale"].astype(o.dtype) + tm["gn_bias"].astype(o.dtype)
+
+
+def time_mix(
+    tm: Params,
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    backend: str = "ref",
+    return_state: bool = False,
+):
+    """Full-sequence TimeMix. x: (B, T, D) -> (B, T, D) [, final wkv state]."""
+    b, t, d = x.shape
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    cdt = cfg.cdt
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    x_r, x_k, x_v, x_w, x_g = _ddlerp(tm, x, x_prev, cdt)
+
+    r = L.linear(tm["wr"], x_r, cdt).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = L.linear(tm["wk"], x_k, cdt).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = L.linear(tm["wv"], x_v, cdt).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(L.linear(tm["wg"], x_g, cdt))
+    w_log = (
+        _decay_log(tm, x_w, cdt).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    )
+
+    o, s_fin = rwkv6_scan(
+        r,
+        k,
+        v,
+        w_log,
+        tm["u"].astype(cdt),
+        backend=backend,
+        chunk=cfg.scan_chunk,
+    )  # (B, H, T, hd)
+    o = o.astype(cdt).transpose(0, 2, 1, 3)  # (B, T, H, hd)
+    o = _group_norm(tm, o).reshape(b, t, d)
+    out = L.linear(tm["wo"], o * g, cdt)
+    if return_state:
+        return out, s_fin
+    return out
+
+
+def channel_mix(cm: Params, x: Array, cfg: ModelConfig) -> Array:
+    cdt = cfg.cdt
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    delta = x_prev - x
+    x_k = x + delta * cm["mu_k"].astype(cdt)
+    x_r = x + delta * cm["mu_r"].astype(cdt)
+    k = jnp.square(jax.nn.relu(L.linear(cm["wk"], x_k, cdt)))
+    r = jax.nn.sigmoid(L.linear(cm["wr"], x_r, cdt))
+    return r * L.linear(cm["wv"], k, cdt)
+
+
+def block_apply(cfg: ModelConfig, lp: Params, x: Array) -> Array:
+    x = x + time_mix(
+        lp["tm"], L.layernorm(lp["ln1"], x), cfg, backend="ref"
+    ).astype(x.dtype)
+    x = x + channel_mix(lp["cm"], L.layernorm(lp["ln2"], x), cfg).astype(
+        x.dtype
+    )
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def init(key: Array, cfg: ModelConfig) -> Params:
+    ke, kl = jax.random.split(key)
+    lk = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab, cfg.d_model, cfg.pdt),
+        "ln_in": L.init_layernorm(cfg.d_model, dtype=cfg.pdt),
+        "layers": jax.vmap(lambda k: init_block(k, cfg))(lk),
+        "final_norm": L.init_layernorm(cfg.d_model, dtype=cfg.pdt),
+    }
+
+
+def forward(p: Params, tokens: Array, cfg: ModelConfig) -> Array:
+    x = L.embed(p["embed"], tokens, cfg.cdt)
+    x = L.layernorm(p["ln_in"], x)
+
+    body = lambda x, lp: (block_apply(cfg, lp, x), None)
+    if cfg.remat:
+        body = L.remat_wrap(cfg, body)
+    x, _ = jax.lax.scan(body, x, p["layers"])
+    x = L.layernorm(p["final_norm"], x)
+    return L.unembed(p["embed"], x, cfg.cdt)
+
+
+def loss_fn(p: Params, batch: Dict[str, Array], cfg: ModelConfig) -> Array:
+    logits = forward(p, batch["tokens"], cfg)
+    return L.next_token_loss(logits, batch["tokens"], batch.get("mask"))
+
+
+def prefill(
+    p: Params, tokens: Array, cfg: ModelConfig, *, backend: str = "ref"
+) -> Tuple[Array, Dict[str, Array]]:
+    """Ingest a prefix; returns (last-token logits, recurrent serve state)."""
+    x = L.embed(p["embed"], tokens, cfg.cdt)
+    x = L.layernorm(p["ln_in"], x)
+
+    def body(x, lp):
+        h1 = L.layernorm(lp["ln1"], x)
+        a, wkv = time_mix(lp["tm"], h1, cfg, backend=backend, return_state=True)
+        x = x + a.astype(x.dtype)
+        h2 = L.layernorm(lp["ln2"], x)
+        x = x + channel_mix(lp["cm"], h2, cfg).astype(x.dtype)
+        return x, (h1[:, -1], h2[:, -1], wkv)
+
+    x, (sh_tm, sh_cm, wkv) = jax.lax.scan(body, x, p["layers"])
+    x = L.layernorm(p["final_norm"], x[:, -1:])
+    logits = L.unembed(p["embed"], x, cfg.cdt)
+    state = {
+        "shift_tm": sh_tm.astype(jnp.float32),
+        "shift_cm": sh_cm.astype(jnp.float32),
+        "wkv": wkv.astype(jnp.float32),
+    }
+    return logits, state
+
+
+# ---------------------------------------------------------------------------
+# Serving: O(1) recurrent state
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, Array]:
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    return {
+        "shift_tm": jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.float32),
+        "shift_cm": jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.float32),
+        "wkv": jnp.zeros((cfg.n_layers, batch, h, hd, hd), jnp.float32),
+    }
+
+
+def _tm_step(
+    tm: Params, x: Array, shift: Array, wkv: Array, cfg: ModelConfig
+) -> Tuple[Array, Array]:
+    """One-token TimeMix. x: (B, D); wkv: (B, H, K, V)."""
+    b, d = x.shape
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    cdt = cfg.cdt
+    x_r, x_k, x_v, x_w, x_g = _ddlerp(tm, x, shift, cdt)
+    r = L.linear(tm["wr"], x_r, cdt).reshape(b, h, hd)
+    k = L.linear(tm["wk"], x_k, cdt).reshape(b, h, hd)
+    v = L.linear(tm["wv"], x_v, cdt).reshape(b, h, hd)
+    g = jax.nn.silu(L.linear(tm["wg"], x_g, cdt))
+    w_log = _decay_log(tm, x_w, cdt).reshape(b, h, hd)
+    u = tm["u"].astype(cdt)
+
+    kv = k[..., None] * v[..., None, :]  # (B, H, K, V)
+    o = jnp.einsum("bhk,bhkv->bhv", r, wkv + u[None, :, :, None] * kv)
+    wkv_new = jnp.exp(w_log)[..., None] * wkv + kv
+    o = _group_norm(tm, o[:, None])[:, 0]  # (B, H, hd)
+    o = o.reshape(b, d)
+    return L.linear(tm["wo"], o * g, cdt), wkv_new
+
+
+def decode_step(
+    p: Params,
+    state: Dict[str, Array],
+    token: Array,  # (B, 1)
+    pos: Array,  # unused (stateful arch); kept for API parity
+    cfg: ModelConfig,
+) -> Tuple[Array, Dict[str, Array]]:
+    x = L.embed(p["embed"], token[:, 0], cfg.cdt)
+    x = L.layernorm(p["ln_in"], x)
+
+    def body(x, xs):
+        lp, sh_tm, sh_cm, wkv = xs
+        h1 = L.layernorm(lp["ln1"], x)
+        a, wkv_new = _tm_step(lp["tm"], h1, sh_tm.astype(cfg.cdt), wkv, cfg)
+        x = x + a.astype(x.dtype)
+        h2 = L.layernorm(lp["ln2"], x)
+        # one-token channel mix
+        delta = sh_cm.astype(cfg.cdt) - h2
+        x_k = h2 + delta * lp["cm"]["mu_k"].astype(cfg.cdt)
+        x_r = h2 + delta * lp["cm"]["mu_r"].astype(cfg.cdt)
+        kk = jnp.square(jax.nn.relu(L.linear(lp["cm"]["wk"], x_k, cfg.cdt)))
+        rr = jax.nn.sigmoid(L.linear(lp["cm"]["wr"], x_r, cfg.cdt))
+        x = x + (rr * L.linear(lp["cm"]["wv"], kk, cfg.cdt)).astype(x.dtype)
+        return x, (h1, h2, wkv_new)
+
+    x, (sh_tm, sh_cm, wkv) = jax.lax.scan(
+        body,
+        x,
+        (p["layers"], state["shift_tm"], state["shift_cm"], state["wkv"]),
+    )
+    x = L.layernorm(p["final_norm"], x)
+    logits = L.unembed(p["embed"], x, cfg.cdt)[:, None, :]
+    return logits, {
+        "shift_tm": sh_tm.astype(jnp.float32),
+        "shift_cm": sh_cm.astype(jnp.float32),
+        "wkv": wkv.astype(jnp.float32),
+    }

@@ -1,0 +1,215 @@
+"""Dense decoder-only transformer (olmo / tinyllama / qwen2.5 / phi4 family).
+
+Layer stack is scan-over-layers: params carry a leading L axis so the HLO
+stays O(1) in depth; ``cfg.remat`` wraps the block in jax.checkpoint with a
+dots-saveable policy for the train_4k memory budget.
+
+Three entry points (the dry-run lowers each):
+  * ``forward``      — full-sequence logits (training).
+  * ``prefill``      — full-sequence logits + per-layer KV cache.
+  * ``decode_step``  — one token against the cache (serving).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+def _norm_init(cfg: ModelConfig):
+    if cfg.norm == "rmsnorm":
+        return lambda: L.init_rmsnorm(cfg.d_model, cfg.pdt)
+    if cfg.norm == "layernorm":
+        return lambda: L.init_layernorm(cfg.d_model, parametric=True, dtype=cfg.pdt)
+    if cfg.norm == "layernorm_nonparam":
+        return lambda: L.init_layernorm(cfg.d_model, parametric=False)
+    raise ValueError(cfg.norm)
+
+
+def norm_apply(cfg: ModelConfig, p: Params, x: Array) -> Array:
+    if cfg.norm == "rmsnorm":
+        return L.rmsnorm(p, x)
+    return L.layernorm(p, x)
+
+
+def init_block(key: Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    mk_norm = _norm_init(cfg)
+    return {
+        "ln1": mk_norm(),
+        "attn": L.init_attention(
+            k1,
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            cfg.head_dim_,
+            qkv_bias=cfg.qkv_bias,
+            dtype=cfg.pdt,
+        ),
+        "ln2": mk_norm(),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype=cfg.pdt),
+    }
+
+
+def block_apply(
+    cfg: ModelConfig, p: Params, x: Array, *, window: Optional[int] = None
+) -> Array:
+    h = norm_apply(cfg, p["ln1"], x)
+    x = x + L.attention_full(
+        p["attn"],
+        h,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        rope_base=cfg.rope_base,
+        backend=cfg.attn_backend,
+        compute_dtype=cfg.cdt,
+        window=window,
+    ).astype(x.dtype)
+    h = norm_apply(cfg, p["ln2"], x)
+    x = x + L.mlp(p["mlp"], h, cfg.cdt).astype(x.dtype)
+    return x
+
+
+def block_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: Array,
+    cache: Dict[str, Array],
+    pos: Array,
+    *,
+    window: Optional[int] = None,
+) -> Tuple[Array, Dict[str, Array]]:
+    h = norm_apply(cfg, p["ln1"], x)
+    a, cache = L.attention_decode(
+        p["attn"],
+        h,
+        cache,
+        pos,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        rope_base=cfg.rope_base,
+        compute_dtype=cfg.cdt,
+        window=window,
+    )
+    x = x + a.astype(x.dtype)
+    h = norm_apply(cfg, p["ln2"], x)
+    x = x + L.mlp(p["mlp"], h, cfg.cdt).astype(x.dtype)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def init(key: Array, cfg: ModelConfig) -> Params:
+    ke, kl, ku = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    p: Params = {
+        "embed": L.init_embedding(ke, cfg.vocab, cfg.d_model, cfg.pdt),
+        "layers": stacked,
+        "final_norm": _norm_init(cfg)(),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.init_linear(ku, cfg.d_model, cfg.vocab, dtype=cfg.pdt)
+    return p
+
+
+def _logits(cfg: ModelConfig, p: Params, x: Array) -> Array:
+    x = norm_apply(cfg, p["final_norm"], x)
+    if "lm_head" in p:
+        return L.linear(p["lm_head"], x, cfg.cdt).astype(jnp.float32)
+    return L.unembed(p["embed"], x, cfg.cdt)
+
+
+def forward(p: Params, tokens: Array, cfg: ModelConfig) -> Array:
+    """(B, S) int32 -> (B, S, V) fp32 logits."""
+    x = L.embed(p["embed"], tokens, cfg.cdt)
+
+    body = lambda x, lp: (block_apply(cfg, lp, x), None)
+    if cfg.remat:
+        body = L.remat_wrap(cfg, body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, p["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], p["layers"])
+            x, _ = body(x, lp)
+    return _logits(cfg, p, x)
+
+
+def loss_fn(p: Params, batch: Dict[str, Array], cfg: ModelConfig) -> Array:
+    logits = forward(p, batch["tokens"], cfg)
+    return L.next_token_loss(logits, batch["tokens"], batch.get("mask"))
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int
+) -> Dict[str, Array]:
+    """Stacked per-layer KV cache (L, B, Hkv, S, Dh)."""
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, cfg.head_dim_)
+    return {
+        "k": jnp.zeros(shape, cfg.cachedt),
+        "v": jnp.zeros(shape, cfg.cachedt),
+    }
+
+
+def prefill(
+    p: Params, tokens: Array, cfg: ModelConfig
+) -> Tuple[Array, Dict[str, Array]]:
+    """Full-context forward that also returns the stacked KV cache."""
+    x = L.embed(p["embed"], tokens, cfg.cdt)
+
+    def body(x, lp):
+        h = norm_apply(cfg, lp["ln1"], x)
+        cache_l = L.attention_prefill_cache(
+            lp["attn"],
+            h,
+            cfg.n_heads,
+            cfg.n_kv_heads,
+            rope_base=cfg.rope_base,
+            compute_dtype=cfg.cdt,
+            cache_dtype=cfg.cachedt,
+        )
+        return block_apply(cfg, lp, x), cache_l
+
+    if cfg.scan_layers:
+        x, cache = jax.lax.scan(body, x, p["layers"])
+    else:
+        caches = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], p["layers"])
+            x, c = body(x, lp)
+            caches.append(c)
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    return _logits(cfg, p, x[:, -1:]), cache
+
+
+def decode_step(
+    p: Params,
+    cache: Dict[str, Array],
+    token: Array,  # (B, 1) int32
+    pos: Array,  # scalar int32
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+) -> Tuple[Array, Dict[str, Array]]:
+    """One serving step: next-token logits + updated cache."""
+    x = L.embed(p["embed"], token, cfg.cdt)
+
+    def body(x, xs):
+        lp, cache_l = xs
+        x, new_cache = block_decode(cfg, lp, x, cache_l, pos, window=window)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (p["layers"], cache))
+    return _logits(cfg, p, x), new_cache

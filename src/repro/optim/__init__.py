@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW, LR schedules, EF-int8 gradient compression."""
+
+from repro.optim import adamw, compress, schedule  # noqa: F401
+from repro.optim.adamw import AdamWConfig, AdamWState  # noqa: F401

@@ -1,0 +1,93 @@
+"""Functional AdamW with global-norm clipping — the EFM trainer optimizer.
+
+Plain pytree in / pytree out (no optax dependency in this container).
+Moments are stored in fp32 regardless of param dtype; under the FSDP-style
+sharding rules (launch/sharding.py) the moment pytree inherits the param
+PartitionSpec, so ZeRO-1 sharding falls out of GSPMD.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array  # ()
+    mu: Any  # pytree like params (fp32)
+    nu: Any  # pytree like params (fp32)
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+def init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(jnp.zeros((), jnp.int32), zeros, zeros)
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree)
+        )
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    cfg: AdamWConfig,
+    lr: Optional[Array] = None,  # overrides cfg.lr (schedules)
+) -> Tuple[Any, AdamWState, Array]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    if cfg.clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    lr_t = cfg.lr if lr is None else lr
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * gf
+        v = b2 * v + (1.0 - b2) * jnp.square(gf)
+        mhat = m / bc1
+        vhat = v / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), gnorm

@@ -1,0 +1,57 @@
+"""Error-feedback int8 gradient compression (distributed-optimization trick).
+
+At 512-chip scale the gradient all-reduce over the pod axis rides the slow
+DCN link; 4x compression there is a straight 4x on the collective term.
+Scheme (1-bit-Adam lineage, int8 variant):
+
+  acc   = grad + error              # carry last round's quantization error
+  q     = round(acc / scale) int8   # per-leaf symmetric scale = max|acc|/127
+  error = acc - q * scale           # error feedback (kept local, fp32)
+
+``compress`` returns (int8 pytree, scales, new error state); the int8
+payload is what crosses the pod axis; ``decompress`` restores fp32 on the
+far side. Convergence property-tested in tests/test_optim.py: SGD with EF
+compression tracks uncompressed SGD.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class EFState(NamedTuple):
+    error: Any  # pytree like grads (fp32)
+
+
+def init(params: Any) -> EFState:
+    return EFState(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def compress(grads: Any, ef: EFState) -> Tuple[Any, Any, EFState]:
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        scale = jnp.max(jnp.abs(acc)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(acc / scale), -127, 127).astype(jnp.int8)
+        err = acc - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    leaves, treedef = jax.tree.flatten(grads)
+    eleaves = treedef.flatten_up_to(ef.error)
+    out = [one(g, e) for g, e in zip(leaves, eleaves)]
+    q = treedef.unflatten([o[0] for o in out])
+    scales = treedef.unflatten([o[1] for o in out])
+    new_ef = EFState(treedef.unflatten([o[2] for o in out]))
+    return q, scales, new_ef
+
+
+def decompress(q: Any, scales: Any) -> Any:
+    return jax.tree.map(
+        lambda qq, s: qq.astype(jnp.float32) * s, q, scales
+    )

@@ -1,0 +1,9 @@
+"""Runtime substrate: fault-tolerant loop, failure injection, stragglers."""
+
+from repro.runtime import fault  # noqa: F401
+from repro.runtime.fault import (  # noqa: F401
+    FailureInjector,
+    FaultTolerantLoop,
+    LoopConfig,
+    WorkerFailure,
+)

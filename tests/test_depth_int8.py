@@ -1,0 +1,27 @@
+"""Regression: the pipeline's learned-depth path accepts QuantizedParams
+(paper deployment mode: int8 FastDepth at 64x64) end to end."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import depth as depth_mod
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+
+
+def test_pipeline_runs_with_int8_depth_model():
+    key = jax.random.PRNGKey(0)
+    scfg = SYN.StreamConfig(n_frames=6, hw=(32, 32), n_obj=3)
+    s, _ = SYN.generate_stream(key, scfg)
+    dp = depth_mod.init_params(jax.random.fold_in(key, 1))
+    rgb64, _ = SYN.depth_training_batch(jax.random.fold_in(key, 2), scfg, 4)
+    qp = depth_mod.quantize_params(dp, rgb64)
+
+    cfg = P.EPICConfig(frame_hw=(32, 32), patch=16, capacity=12,
+                       tau=0.2, gamma=0.015, theta=4, window=8)
+    state, stats = P.compress_stream(
+        s.frames, s.poses, s.gazes, cfg,
+        P.EPICModels(depth_params=qp, hir_params=None),
+    )
+    assert int(stats.buffer_valid[-1]) > 0
+    assert bool(jnp.all(jnp.isfinite(state.buf.depth)))

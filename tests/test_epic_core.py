@@ -1,0 +1,435 @@
+"""Unit tests: DC buffer, frame bypass, reproject-match ref op, TSRC."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dc_buffer as dcb
+from repro.core import frame_bypass
+from repro.core import geometry as geo
+from repro.core import tsrc as tsrc_mod
+from repro.kernels.reproject_match.ops import reproject_match
+
+
+def _intr(hw=128):
+    return geo.Intrinsics.create(0.8 * hw, hw / 2.0, hw / 2.0)
+
+
+# ---------------------------------------------------------------------------
+# DC buffer
+# ---------------------------------------------------------------------------
+
+
+class TestDCBuffer:
+    CFG = dcb.DCBufferConfig(capacity=8, patch=4)
+
+    def _new(self, m, seed=0, sal=1.0):
+        k = jax.random.PRNGKey(seed)
+        return dcb.NewEntries(
+            rgb=jax.random.uniform(k, (m, 4, 4, 3)),
+            depth=jnp.ones((m, 4, 4)),
+            pose=jnp.broadcast_to(jnp.eye(4), (m, 4, 4)),
+            origin=jnp.zeros((m, 2)),
+            saliency=jnp.full((m,), sal),
+        )
+
+    def test_insert_fills_empty_slots(self):
+        buf = dcb.init(self.CFG)
+        new = self._new(3)
+        buf = dcb.insert(buf, self.CFG, new, jnp.ones(3, bool), jnp.float32(0))
+        assert int(dcb.count_valid(buf)) == 3
+
+    def test_insert_mask_respected(self):
+        buf = dcb.init(self.CFG)
+        mask = jnp.array([True, False, True])
+        buf = dcb.insert(buf, self.CFG, self._new(3), mask, jnp.float32(0))
+        assert int(dcb.count_valid(buf)) == 2
+
+    def test_capacity_never_exceeded(self):
+        buf = dcb.init(self.CFG)
+        for t in range(5):
+            buf = dcb.insert(
+                buf, self.CFG, self._new(4, seed=t), jnp.ones(4, bool),
+                jnp.float32(t),
+            )
+            assert int(dcb.count_valid(buf)) <= self.CFG.capacity
+        assert int(dcb.count_valid(buf)) == self.CFG.capacity
+
+    def test_eviction_prefers_low_popularity(self):
+        buf = dcb.init(self.CFG)
+        buf = dcb.insert(
+            buf, self.CFG, self._new(8), jnp.ones(8, bool), jnp.float32(0)
+        )
+        # Bump entries 0..3 heavily.
+        idx = jnp.array([0, 1, 2, 3])
+        for _ in range(5):
+            buf = dcb.bump_popularity(buf, idx, jnp.ones(4, bool))
+        popular_rgb = np.asarray(buf.rgb[:4])
+        buf2 = dcb.insert(
+            buf, self.CFG, self._new(4, seed=9), jnp.ones(4, bool),
+            jnp.float32(1),
+        )
+        # The popular entries must survive eviction.
+        surviving = np.asarray(buf2.rgb)
+        for i in range(4):
+            assert any(
+                np.allclose(popular_rgb[i], surviving[j])
+                for j in range(8)
+            )
+
+    def test_bump_accumulates_segment_sum(self):
+        buf = dcb.init(self.CFG)
+        buf = dcb.insert(
+            buf, self.CFG, self._new(2), jnp.ones(2, bool), jnp.float32(0)
+        )
+        # Find slot of entries (top_k order may permute); bump by index.
+        valid_idx = np.where(np.asarray(buf.valid))[0]
+        i0 = int(valid_idx[0])
+        idx = jnp.array([i0, i0, i0])
+        buf = dcb.bump_popularity(buf, idx, jnp.array([True, True, False]))
+        assert float(buf.popularity[i0]) == pytest.approx(3.0)  # 1 + 2
+
+    def test_newest_match_picks_latest(self):
+        match_ok = jnp.array([[True], [True], [False]])
+        t = jnp.array([5.0, 9.0, 100.0])
+        valid = jnp.array([True, True, True])
+        idx, matched = dcb.newest_match(match_ok, t, valid)
+        assert bool(matched[0]) and int(idx[0]) == 1
+
+    @settings(max_examples=25, deadline=None)
+    @given(data=st.data())
+    def test_newest_match_equals_sequential_scan(self, data):
+        n, m = 6, 4
+        match = data.draw(
+            st.lists(st.booleans(), min_size=n * m, max_size=n * m)
+        )
+        valid = data.draw(st.lists(st.booleans(), min_size=n, max_size=n))
+        ts = data.draw(
+            st.lists(
+                st.integers(0, 50), min_size=n, max_size=n, unique=True
+            )
+        )
+        match_ok = jnp.array(match).reshape(n, m)
+        valid_a = jnp.array(valid)
+        t_a = jnp.array(ts, jnp.float32)
+        idx, matched = dcb.newest_match(match_ok, t_a, valid_a)
+        # Sequential newest-first oracle.
+        order = np.argsort(-np.array(ts))
+        for p in range(m):
+            hit = None
+            for c in order:
+                if valid[c] and match[c * m + p]:
+                    hit = c
+                    break
+            assert bool(matched[p]) == (hit is not None)
+            if hit is not None:
+                assert int(idx[p]) == hit
+
+
+# ---------------------------------------------------------------------------
+# Frame bypass
+# ---------------------------------------------------------------------------
+
+
+class TestFrameBypass:
+    def test_first_frame_always_processes(self):
+        st_ = frame_bypass.init((8, 8))
+        frame = jnp.zeros((8, 8, 3))
+        _, process, _ = frame_bypass.check(
+            st_, frame, frame_bypass.BypassConfig(gamma=1e9)
+        )
+        assert bool(process)
+
+    def test_static_frames_bypassed(self):
+        cfg = frame_bypass.BypassConfig(gamma=0.02, theta=100)
+        st_ = frame_bypass.init((8, 8))
+        frame = jnp.full((8, 8, 3), 0.5)
+        st_, p0, _ = frame_bypass.check(st_, frame, cfg)
+        st_, p1, _ = frame_bypass.check(st_, frame, cfg)
+        assert bool(p0) and not bool(p1)
+
+    def test_change_triggers_processing(self):
+        cfg = frame_bypass.BypassConfig(gamma=0.02, theta=100)
+        st_ = frame_bypass.init((8, 8))
+        st_, _, _ = frame_bypass.check(st_, jnp.zeros((8, 8, 3)), cfg)
+        _, p, d = frame_bypass.check(st_, jnp.ones((8, 8, 3)), cfg)
+        assert bool(p) and float(d) == pytest.approx(1.0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(theta=st.integers(1, 7))
+    def test_safeguard_bounds_bypass_run_length(self, theta):
+        """At least one frame processed in every window of theta+1 frames."""
+        cfg = frame_bypass.BypassConfig(gamma=0.5, theta=theta)
+        st_ = frame_bypass.init((4, 4))
+        frame = jnp.full((4, 4, 3), 0.3)
+        processed = []
+        for _ in range(4 * (theta + 1)):
+            st_, p, _ = frame_bypass.check(st_, frame, cfg)
+            processed.append(bool(p))
+        run = 0
+        for p in processed:
+            run = 0 if p else run + 1
+            assert run <= theta
+
+    def test_reference_updates_on_process(self):
+        cfg = frame_bypass.BypassConfig(gamma=0.05, theta=99)
+        st_ = frame_bypass.init((4, 4))
+        f0 = jnp.zeros((4, 4, 3))
+        f1 = jnp.full((4, 4, 3), 1.0)
+        st_, _, _ = frame_bypass.check(st_, f0, cfg)
+        st_, p1, _ = frame_bypass.check(st_, f1, cfg)
+        assert bool(p1)
+        np.testing.assert_allclose(st_.ref_frame, f1)
+
+
+# ---------------------------------------------------------------------------
+# Reproject-match reference op
+# ---------------------------------------------------------------------------
+
+
+class TestReprojectMatchRef:
+    def test_identity_warp_zero_diff_full_coverage(self):
+        k = jax.random.PRNGKey(0)
+        frame = jax.random.uniform(k, (64, 64, 3))
+        patch = 8
+        origin = jnp.array([[16.0, 24.0]])
+        rgb = jax.lax.dynamic_slice(frame, (16, 24, 0), (patch, patch, 3))[
+            None
+        ]
+        depth = jnp.full((1, patch, patch), 3.0)
+        t_rel = jnp.eye(4)[None]
+        diff, cov, bbox = reproject_match(
+            rgb, depth, origin, t_rel, frame, _intr(64), window=32
+        )
+        assert float(diff[0]) < 1e-5
+        assert float(cov[0]) == pytest.approx(1.0)
+        np.testing.assert_allclose(
+            bbox[0], [16.0, 24.0, 23.0, 31.0], atol=1e-3
+        )
+
+    def test_behind_camera_invalid(self):
+        frame = jnp.ones((64, 64, 3))
+        patch = 8
+        # Move the scene far behind the camera.
+        t_rel = geo.pose_from_rt(jnp.eye(3), jnp.array([0.0, 0.0, -100.0]))
+        diff, cov, _ = reproject_match(
+            jnp.ones((1, patch, patch, 3)),
+            jnp.full((1, patch, patch), 2.0),
+            jnp.array([[28.0, 28.0]]),
+            t_rel[None],
+            frame,
+            _intr(64),
+            window=32,
+        )
+        assert float(cov[0]) == 0.0
+        assert float(diff[0]) == pytest.approx(1.0)  # "no match possible"
+
+    def test_mismatched_content_large_diff(self):
+        frame = jnp.zeros((64, 64, 3))
+        patch = 8
+        diff, cov, _ = reproject_match(
+            jnp.ones((1, patch, patch, 3)),
+            jnp.full((1, patch, patch), 2.0),
+            jnp.array([[28.0, 28.0]]),
+            jnp.eye(4)[None],
+            frame,
+            _intr(64),
+            window=32,
+        )
+        assert float(diff[0]) == pytest.approx(1.0, abs=1e-5)
+        assert float(cov[0]) == pytest.approx(1.0)
+
+    def test_translation_with_correct_depth_matches(self):
+        """Camera translates; flat textured wall at constant depth should
+        still match perfectly when warped with the true depth."""
+        k = jax.random.PRNGKey(3)
+        hw = 64
+        intr = _intr(hw)
+        wall_depth = 4.0
+        # Build a procedural wall texture sampled analytically: value depends
+        # only on world-plane coords, so both views can be rendered exactly.
+        def render(pose):
+            uu, vv = jnp.meshgrid(
+                jnp.arange(hw, dtype=jnp.float32),
+                jnp.arange(hw, dtype=jnp.float32),
+                indexing="xy",
+            )
+            dirs = jnp.stack(
+                [
+                    (uu - intr.cx) / intr.f,
+                    (vv - intr.cy) / intr.f,
+                    jnp.ones_like(uu),
+                ],
+                -1,
+            )
+            rot, eye = pose[:3, :3], pose[:3, 3]
+            dirs_w = jnp.einsum("ij,hwj->hwi", rot, dirs)
+            # wall plane z = wall_depth (world): t = (z - eye_z)/dz
+            t = (wall_depth - eye[2]) / dirs_w[..., 2]
+            pt = eye[None, None] + t[..., None] * dirs_w
+            tex = 0.5 + 0.5 * jnp.sin(3.0 * pt[..., 0]) * jnp.cos(
+                4.0 * pt[..., 1]
+            )
+            depth = t  # z=1-normalised dirs in cam frame -> t == cam depth
+            return jnp.repeat(tex[..., None], 3, -1), depth
+
+        pose1 = geo.pose_from_rt(jnp.eye(3), jnp.zeros(3))
+        pose2 = geo.pose_from_rt(jnp.eye(3), jnp.array([0.15, 0.1, 0.0]))
+        f1, d1 = render(pose1)
+        f2, _ = render(pose2)
+        patch = 16
+        origin = jnp.array([[24.0, 24.0]])
+        rgb = jax.lax.dynamic_slice(f1, (24, 24, 0), (patch, patch, 3))[None]
+        dep = jax.lax.dynamic_slice(d1, (24, 24), (patch, patch))[None]
+        t_rel = geo.relative_transform(pose1, pose2)[None]
+        diff, cov, _ = reproject_match(
+            rgb, dep, origin, t_rel, f2, intr, window=32
+        )
+        assert float(cov[0]) > 0.9
+        assert float(diff[0]) < 0.02  # sub-pixel interpolation error only
+
+    def test_wrong_depth_fails_to_match(self):
+        """Same setup but with wrong depth: the warp misaligns -> high diff.
+        This is the paper's core argument for geometry-aware differencing."""
+        k = jax.random.PRNGKey(3)
+        hw = 64
+        intr = _intr(hw)
+
+        def render(pose, wall_depth=4.0):
+            uu, vv = jnp.meshgrid(
+                jnp.arange(hw, dtype=jnp.float32),
+                jnp.arange(hw, dtype=jnp.float32),
+                indexing="xy",
+            )
+            dirs = jnp.stack(
+                [
+                    (uu - intr.cx) / intr.f,
+                    (vv - intr.cy) / intr.f,
+                    jnp.ones_like(uu),
+                ],
+                -1,
+            )
+            rot, eye = pose[:3, :3], pose[:3, 3]
+            dirs_w = jnp.einsum("ij,hwj->hwi", rot, dirs)
+            t = (wall_depth - eye[2]) / dirs_w[..., 2]
+            pt = eye[None, None] + t[..., None] * dirs_w
+            tex = 0.5 + 0.5 * jnp.sin(6.0 * pt[..., 0]) * jnp.cos(
+                7.0 * pt[..., 1]
+            )
+            return jnp.repeat(tex[..., None], 3, -1), t
+
+        pose1 = geo.pose_from_rt(jnp.eye(3), jnp.zeros(3))
+        pose2 = geo.pose_from_rt(jnp.eye(3), jnp.array([0.4, 0.0, 0.0]))
+        f1, d1 = render(pose1)
+        f2, _ = render(pose2)
+        patch = 16
+        rgb = jax.lax.dynamic_slice(f1, (24, 24, 0), (patch, patch, 3))[None]
+        good = jax.lax.dynamic_slice(d1, (24, 24), (patch, patch))[None]
+        bad = good * 0.3  # wrong depth -> wrong parallax compensation
+        t_rel = geo.relative_transform(pose1, pose2)[None]
+        d_good, _, _ = reproject_match(
+            rgb, good, jnp.array([[24.0, 24.0]]), t_rel, f2, intr, window=48
+        )
+        d_bad, _, _ = reproject_match(
+            rgb, bad, jnp.array([[24.0, 24.0]]), t_rel, f2, intr, window=48
+        )
+        assert float(d_good[0]) < 0.05
+        assert float(d_bad[0]) > 3 * float(d_good[0])
+
+
+# ---------------------------------------------------------------------------
+# TSRC
+# ---------------------------------------------------------------------------
+
+
+class TestTSRC:
+    def _setup(self, hw=64, patch=16, capacity=32):
+        buf_cfg = dcb.DCBufferConfig(capacity=capacity, patch=patch)
+        cfg = tsrc_mod.TSRCConfig(window=32)
+        return dcb.init(buf_cfg), buf_cfg, cfg
+
+    def test_first_frame_inserts_all_salient(self):
+        buf, buf_cfg, cfg = self._setup()
+        frame = jax.random.uniform(jax.random.PRNGKey(0), (64, 64, 3))
+        n_p = 16
+        sal = jnp.ones((n_p,), bool)
+        buf, stats = tsrc_mod.tsrc_step(
+            buf, buf_cfg, cfg, frame, jnp.full((64, 64), 3.0), sal,
+            jnp.ones((n_p,)), jnp.eye(4), jnp.float32(0), _intr(64),
+        )
+        assert int(stats.n_inserted) == n_p
+        assert int(stats.n_matched) == 0
+        assert int(stats.buffer_valid) == n_p
+
+    def test_identical_second_frame_matches_everything(self):
+        buf, buf_cfg, cfg = self._setup()
+        frame = jax.random.uniform(jax.random.PRNGKey(0), (64, 64, 3))
+        n_p = 16
+        sal = jnp.ones((n_p,), bool)
+        args = (frame, jnp.full((64, 64), 3.0), sal, jnp.ones((n_p,)),
+                jnp.eye(4))
+        buf, _ = tsrc_mod.tsrc_step(
+            buf, buf_cfg, cfg, *args, jnp.float32(0), _intr(64)
+        )
+        buf, stats = tsrc_mod.tsrc_step(
+            buf, buf_cfg, cfg, *args, jnp.float32(1), _intr(64)
+        )
+        assert int(stats.n_matched) == n_p
+        assert int(stats.n_inserted) == 0
+        assert int(stats.buffer_valid) == n_p  # nothing new stored
+        # Popularity of every entry bumped to 2.
+        pops = np.asarray(buf.popularity)[np.asarray(buf.valid)]
+        np.testing.assert_allclose(pops, 2.0)
+
+    def test_non_salient_patches_ignored(self):
+        buf, buf_cfg, cfg = self._setup()
+        frame = jax.random.uniform(jax.random.PRNGKey(1), (64, 64, 3))
+        sal = jnp.zeros((16,), bool).at[3].set(True)
+        buf, stats = tsrc_mod.tsrc_step(
+            buf, buf_cfg, cfg, frame, jnp.full((64, 64), 3.0), sal,
+            jnp.ones((16,)), jnp.eye(4), jnp.float32(0), _intr(64),
+        )
+        assert int(stats.n_salient) == 1
+        assert int(stats.n_inserted) == 1
+
+    def test_changed_content_reinserted(self):
+        buf, buf_cfg, cfg = self._setup()
+        k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+        f1 = jax.random.uniform(k1, (64, 64, 3))
+        f2 = jax.random.uniform(k2, (64, 64, 3))  # totally new content
+        sal = jnp.ones((16,), bool)
+        common = (jnp.full((64, 64), 3.0), sal, jnp.ones((16,)), jnp.eye(4))
+        buf, _ = tsrc_mod.tsrc_step(
+            buf, buf_cfg, cfg, f1, *common, jnp.float32(0), _intr(64)
+        )
+        buf, stats = tsrc_mod.tsrc_step(
+            buf, buf_cfg, cfg, f2, *common, jnp.float32(1), _intr(64)
+        )
+        assert int(stats.n_matched) == 0
+        assert int(stats.n_inserted) == 16
+
+    def test_dense_match_equals_sequential_oracle(self):
+        """The vectorised newest-first match reproduces the ASIC's
+        sequential early-exit buffer walk on a realistic mixed case."""
+        buf, buf_cfg, cfg = self._setup()
+        k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+        f1 = jax.random.uniform(k1, (64, 64, 3))
+        sal = jnp.ones((16,), bool)
+        common = (jnp.full((64, 64), 3.0), sal, jnp.ones((16,)), jnp.eye(4))
+        buf, _ = tsrc_mod.tsrc_step(
+            buf, buf_cfg, cfg, f1, *common, jnp.float32(0), _intr(64)
+        )
+        # Second frame: half old content, half new.
+        f2 = f1.at[:, 32:].set(jax.random.uniform(k2, (64, 32, 3)))
+        chosen, matched = tsrc_mod.tsrc_step_sequential_oracle(
+            buf, buf_cfg, cfg, f2, *common, jnp.float32(1), _intr(64)
+        )
+        # Dense path.
+        buf2, stats = tsrc_mod.tsrc_step(
+            buf, buf_cfg, cfg, f2, *common, jnp.float32(1), _intr(64)
+        )
+        assert int(stats.n_matched) == int(matched.sum())
+        assert int(stats.n_matched) > 0
+        assert int(stats.n_inserted) == 16 - int(matched.sum())

@@ -1,0 +1,158 @@
+"""Geometry unit + property tests: Eq.1 reprojection, bboxes, sampling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry as geo
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _intr():
+    return geo.Intrinsics.create(100.0, 64.0, 64.0)
+
+
+def _rand_pose(seed):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    angles = jax.random.uniform(k1, (3,), minval=-0.3, maxval=0.3)
+    trans = jax.random.uniform(k2, (3,), minval=-0.5, maxval=0.5)
+    return geo.pose_from_rt(geo.rotation_xyz(angles), trans)
+
+
+class TestPoses:
+    def test_invert_pose_roundtrip(self):
+        pose = _rand_pose(0)
+        ident = geo.invert_pose(pose) @ pose
+        np.testing.assert_allclose(ident, np.eye(4), atol=1e-5)
+
+    def test_relative_transform_identity(self):
+        pose = _rand_pose(1)
+        rel = geo.relative_transform(pose, pose)
+        np.testing.assert_allclose(rel, np.eye(4), atol=1e-5)
+
+    def test_rotation_is_orthonormal(self):
+        r = geo.rotation_xyz(jnp.array([0.3, -0.7, 1.1]))
+        np.testing.assert_allclose(r @ r.T, np.eye(3), atol=1e-6)
+        assert abs(float(jnp.linalg.det(r)) - 1.0) < 1e-5
+
+
+class TestReproject:
+    def test_identity_transform_is_noop(self):
+        intr = _intr()
+        uv = jnp.array([[10.0, 20.0], [64.0, 64.0], [100.0, 3.0]])
+        d = jnp.array([2.0, 5.0, 1.0])
+        uv2, z2, valid = geo.reproject_points(uv, d, intr, jnp.eye(4))
+        np.testing.assert_allclose(uv2, uv, atol=1e-4)
+        np.testing.assert_allclose(z2, d, atol=1e-5)
+        assert bool(jnp.all(valid))
+
+    def test_lift_project_roundtrip(self):
+        intr = _intr()
+        uv = jnp.array([[33.3, 71.2]])
+        d = jnp.array([3.7])
+        xyz = geo.lift(uv, d, intr)
+        uv2, z2, valid = geo.project(xyz, intr)
+        np.testing.assert_allclose(uv2, uv, atol=1e-4)
+        np.testing.assert_allclose(z2, d, atol=1e-5)
+
+    def test_pure_translation_toward_scene_magnifies(self):
+        """Moving the camera forward must push off-centre points outward."""
+        intr = _intr()
+        t_rel = geo.pose_from_rt(jnp.eye(3), jnp.array([0.0, 0.0, 1.0]))
+        # t_rel maps src-cam coords to dst-cam coords: moving scene +z means
+        # the camera moved backward; invert for forward motion.
+        fwd = geo.invert_pose(t_rel)
+        uv = jnp.array([[94.0, 64.0]])  # 30px right of centre
+        d = jnp.array([4.0])
+        uv2, z2, _ = geo.reproject_points(uv, d, intr, fwd)
+        assert float(uv2[0, 0]) > 94.0  # moved further from centre
+        np.testing.assert_allclose(z2, 3.0, atol=1e-5)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        u=st.floats(1.0, 126.0),
+        v=st.floats(1.0, 126.0),
+        d=st.floats(0.5, 20.0),
+        seed=st.integers(0, 100),
+    )
+    def test_eq1_matches_standard_pipeline(self, u, v, d, seed):
+        """The literal 4x4 Eq.1 chain equals lift->transform->project."""
+        intr = _intr()
+        t_rel = _rand_pose(seed)
+        uv = jnp.array([[u, v]], jnp.float32)
+        dd = jnp.array([d], jnp.float32)
+        uv_a, z_a, va = geo.reproject_points(uv, dd, intr, t_rel)
+        uv_b, z_b, vb = geo.eq1_reproject(uv, dd, intr, t_rel)
+        assert bool(va[0]) == bool(vb[0])
+        if bool(va[0]):
+            np.testing.assert_allclose(uv_a, uv_b, rtol=1e-4, atol=1e-3)
+            np.testing.assert_allclose(z_a, z_b, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_reprojection_inverse_consistency(self, seed):
+        """Reprojecting there and back returns the original pixel."""
+        intr = _intr()
+        pose_a = _rand_pose(seed)
+        pose_b = _rand_pose(seed + 7777)
+        t_ab = geo.relative_transform(pose_a, pose_b)
+        t_ba = geo.relative_transform(pose_b, pose_a)
+        uv = jnp.array([[50.0, 80.0]])
+        d = jnp.array([5.0])
+        uv2, z2, v1 = geo.reproject_points(uv, d, intr, t_ab)
+        uv3, z3, v2 = geo.reproject_points(uv2, z2, intr, t_ba)
+        if bool(v1[0]) and bool(v2[0]):
+            np.testing.assert_allclose(uv3, uv, rtol=1e-3, atol=1e-2)
+            np.testing.assert_allclose(z3, d, rtol=1e-4, atol=1e-3)
+
+
+class TestSampling:
+    def test_bilinear_exact_at_integer_coords(self):
+        img = jax.random.uniform(jax.random.PRNGKey(0), (16, 16, 3))
+        coords = jnp.array([[3.0, 5.0], [0.0, 0.0], [14.0, 14.0]])
+        vals, valid = geo.bilinear_sample(img, coords)
+        assert bool(jnp.all(valid))
+        np.testing.assert_allclose(vals[0], img[5, 3], atol=1e-6)
+        np.testing.assert_allclose(vals[1], img[0, 0], atol=1e-6)
+
+    def test_bilinear_interpolates_midpoint(self):
+        img = jnp.zeros((4, 4, 1)).at[1, 1, 0].set(1.0)
+        vals, _ = geo.bilinear_sample(img, jnp.array([[1.5, 1.0]]))
+        np.testing.assert_allclose(vals[0, 0], 0.5, atol=1e-6)
+
+    def test_out_of_bounds_invalid(self):
+        img = jnp.ones((8, 8, 3))
+        coords = jnp.array([[-1.0, 2.0], [7.5, 2.0], [2.0, 9.0]])
+        _, valid = geo.bilinear_sample(img, coords)
+        assert not bool(valid[0])
+        assert not bool(valid[1])  # u0+1 = 8 out of bounds
+        assert not bool(valid[2])
+
+
+class TestBBox:
+    def test_identity_bbox_covers_patch(self):
+        intr = _intr()
+        origin = jnp.array([16.0, 32.0])
+        depths = jnp.full((4,), 3.0)
+        bbox, valid = geo.reproject_bbox(origin, depths, intr, jnp.eye(4), 16)
+        assert bool(valid)
+        np.testing.assert_allclose(
+            bbox, jnp.array([16.0, 32.0, 31.0, 47.0]), atol=1e-3
+        )
+        frac = geo.bbox_overlap_fraction(bbox, origin, 16)
+        assert 0.85 <= float(frac) <= 1.0
+
+    def test_disjoint_boxes_zero_overlap(self):
+        bbox = jnp.array([0.0, 0.0, 10.0, 10.0])
+        frac = geo.bbox_overlap_fraction(bbox, jnp.array([50.0, 50.0]), 16)
+        assert float(frac) == 0.0
+
+    def test_patch_grid_coords(self):
+        g = geo.patch_pixel_grid(jnp.array([8.0, 24.0]), 4)
+        assert g.shape == (4, 4, 2)
+        np.testing.assert_allclose(g[0, 0], [24.0, 8.0])  # (u, v)
+        np.testing.assert_allclose(g[3, 3], [27.0, 11.0])

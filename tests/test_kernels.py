@@ -1,0 +1,227 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import geometry as geo
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.int8_matmul.kernel import int8_matmul_pallas
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+from repro.kernels.mamba2_ssd.kernel import mamba2_ssd_pallas
+from repro.kernels.mamba2_ssd.ref import mamba2_ssd_ref
+from repro.kernels.reproject_match.kernel import reproject_match_pallas
+from repro.kernels.reproject_match.ref import reproject_match_ref
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_pallas
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# reproject_match
+# ---------------------------------------------------------------------------
+
+
+def _reproject_inputs(key, n, p, h, w):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    rgb = jax.random.uniform(k1, (n, p, p, 3))
+    depth = jax.random.uniform(k2, (n, p, p), minval=1.0, maxval=4.0)
+    oy = jax.random.randint(k3, (n,), 0, h - p).astype(jnp.float32)
+    ox = jax.random.randint(k4, (n,), 0, w - p).astype(jnp.float32)
+    origin = jnp.stack([oy, ox], -1)
+    angles = jax.random.normal(k5, (n, 3)) * 0.05
+    trans = jax.random.normal(k1, (n, 3)) * 0.1
+    t_rel = geo.pose_from_rt(geo.rotation_xyz(angles), trans)
+    frame = jax.random.uniform(k2, (h, w, 3))
+    intr = geo.Intrinsics.create(0.8 * w, w / 2.0, h / 2.0)
+    return rgb, depth, origin, t_rel, frame, intr
+
+
+@pytest.mark.parametrize(
+    "n,p,hw,window",
+    [
+        (4, 16, 128, 32),
+        (7, 16, 128, 64),
+        (3, 32, 256, 64),
+        (1, 8, 64, 16),
+    ],
+)
+def test_reproject_match_matches_ref(n, p, hw, window):
+    key = jax.random.PRNGKey(n * 7 + p)
+    rgb, depth, origin, t_rel, frame, intr = _reproject_inputs(
+        key, n, p, hw, hw
+    )
+    d1, c1, b1 = reproject_match_ref(
+        rgb, depth, origin, t_rel, frame, intr, window
+    )
+    d2, c2, b2 = reproject_match_pallas(
+        rgb, depth, origin, t_rel, frame, intr, window=window, interpret=True
+    )
+    np.testing.assert_allclose(d1, d2, atol=1e-5)
+    np.testing.assert_allclose(c1, c2, atol=1e-5)
+    np.testing.assert_allclose(b1, b2, atol=1e-3)
+
+
+def test_reproject_match_identity_pose_zero_diff():
+    """A patch warped by the identity onto its own frame must match itself."""
+    key = jax.random.PRNGKey(0)
+    h = w = 128
+    p = 16
+    frame = jax.random.uniform(key, (h, w, 3))
+    origin = jnp.array([[32.0, 48.0]])
+    rgb = jax.lax.dynamic_slice(frame, (32, 48, 0), (p, p, 3))[None]
+    depth = jnp.full((1, p, p), 2.0)
+    t_rel = jnp.eye(4)[None]
+    intr = geo.Intrinsics.create(0.8 * w, w / 2.0, h / 2.0)
+    d, c, _ = reproject_match_pallas(
+        rgb, depth, origin, t_rel, frame, intr, window=32, interpret=True
+    )
+    assert float(d[0]) < 1e-5
+    assert float(c[0]) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(128, 128, 128), (256, 384, 128), (130, 200, 70), (1, 9, 1), (64, 1, 64)],
+)
+def test_int8_matmul_matches_ref(m, k, n):
+    key = jax.random.PRNGKey(m + k + n)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.randint(k1, (m, k), -128, 128, dtype=jnp.int8)
+    b = jax.random.randint(k2, (k, n), -128, 128, dtype=jnp.int8)
+    ref = int8_matmul_ref(a, b)
+    out = int8_matmul_pallas(a, b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_int8_matmul_extremes_exact():
+    a = jnp.full((64, 512), -128, jnp.int8)
+    b = jnp.full((512, 64), -128, jnp.int8)
+    out = int8_matmul_pallas(a, b, interpret=True)
+    assert int(out[0, 0]) == 512 * 128 * 128
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d,causal",
+    [
+        (1, 4, 4, 256, 64, True),
+        (2, 8, 2, 256, 64, True),  # GQA group 4
+        (1, 4, 1, 128, 32, True),  # MQA
+        (1, 2, 2, 256, 64, False),
+        (2, 16, 2, 512, 128, True),  # production-ish head geometry
+    ],
+)
+def test_flash_attention_matches_ref(b, hq, hkv, s, d, causal):
+    key = jax.random.PRNGKey(b * 31 + hq)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, hq, s, d), jnp.float32)
+    k = jax.random.normal(k2, (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(k3, (b, hkv, s, d), jnp.float32)
+    ref = attention_ref(q, k, v, causal=causal)
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, block_q=128, block_k=128, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=2e-5)
+
+
+def test_flash_attention_bf16_io():
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (1, 4, 256, 64), jnp.bfloat16)
+    k = jax.random.normal(k2, (1, 4, 256, 64), jnp.bfloat16)
+    v = jax.random.normal(k3, (1, 4, 256, 64), jnp.bfloat16)
+    ref = attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    out = flash_attention_pallas(q, k, v, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(ref), np.asarray(out, dtype=np.float32), atol=3e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+
+def _rwkv_inputs(key, b, h, t, dk, dv):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    r = jax.random.normal(k1, (b, h, t, dk)) * 0.5
+    k = jax.random.normal(k2, (b, h, t, dk)) * 0.5
+    v = jax.random.normal(k3, (b, h, t, dv)) * 0.5
+    # RWKV6 parameterisation: w = exp(-exp(w_raw)) in (0, 1); keep decays in
+    # a realistic band so chunked exponents stay in fp32 range.
+    w_log = -jnp.exp(jax.random.normal(k4, (b, h, t, dk)) * 0.5 - 2.0)
+    u = jax.random.normal(k5, (h, dk)) * 0.3
+    return r, k, v, w_log, u
+
+
+@pytest.mark.parametrize(
+    "b,h,t,dk,dv,chunk",
+    [
+        (1, 2, 128, 32, 32, 32),
+        (2, 4, 256, 64, 64, 64),
+        (1, 1, 64, 16, 48, 16),
+        (1, 2, 192, 64, 64, 64),  # t not a power of two
+    ],
+)
+def test_rwkv6_scan_matches_ref(b, h, t, dk, dv, chunk):
+    key = jax.random.PRNGKey(t + dk)
+    r, k, v, w_log, u = _rwkv_inputs(key, b, h, t, dk, dv)
+    o_ref, s_ref = rwkv6_scan_ref(r, k, v, w_log, u)
+    o, s = rwkv6_scan_pallas(r, k, v, w_log, u, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 ssd
+# ---------------------------------------------------------------------------
+
+
+def _ssd_inputs(key, b, h, t, p, n):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (b, h, t, p)) * 0.5
+    a_log = -jnp.exp(jax.random.normal(k2, (b, h, t)) * 0.5 - 2.0)
+    bm = jax.random.normal(k3, (b, t, n)) * 0.5
+    cm = jax.random.normal(k4, (b, t, n)) * 0.5
+    return x, a_log, bm, cm
+
+
+@pytest.mark.parametrize(
+    "b,h,t,p,n,chunk",
+    [
+        (1, 2, 128, 32, 16, 32),
+        (2, 4, 256, 64, 64, 64),
+        (1, 1, 64, 64, 64, 64),
+        (1, 3, 192, 32, 64, 32),
+    ],
+)
+def test_mamba2_ssd_matches_ref(b, h, t, p, n, chunk):
+    key = jax.random.PRNGKey(t + p)
+    x, a_log, bm, cm = _ssd_inputs(key, b, h, t, p, n)
+    y_ref, s_ref = mamba2_ssd_ref(x, a_log, bm, cm)
+    y, s = mamba2_ssd_pallas(x, a_log, bm, cm, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s), atol=2e-4)
+
+
+def test_ssd_chunk_invariance():
+    """Chunk size is an implementation detail: results must not depend on it."""
+    key = jax.random.PRNGKey(9)
+    x, a_log, bm, cm = _ssd_inputs(key, 1, 2, 128, 32, 32)
+    y32, s32 = mamba2_ssd_pallas(x, a_log, bm, cm, chunk=32, interpret=True)
+    y64, s64 = mamba2_ssd_pallas(x, a_log, bm, cm, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y64), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s32), np.asarray(s64), atol=2e-4)

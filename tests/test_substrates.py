@@ -1,0 +1,238 @@
+"""Tests for optimizer, checkpointing, and fault-tolerant runtime."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.optim import adamw, compress, schedule
+from repro.runtime import fault
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def _quad_problem():
+    key = jax.random.PRNGKey(0)
+    target = {"a": jax.random.normal(key, (8, 8)), "b": jnp.ones((8,))}
+    params = jax.tree.map(jnp.zeros_like, target)
+
+    def loss_fn(p):
+        return sum(
+            jnp.sum(jnp.square(p[k] - target[k])) for k in ("a", "b")
+        )
+
+    return params, loss_fn
+
+
+def test_adamw_converges_quadratic():
+    params, loss_fn = _quad_problem()
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0)
+    state = adamw.init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(loss_fn)(p)
+        p, s, gn = adamw.update(g, s, p, cfg)
+        return p, s, gn
+
+    l0 = float(loss_fn(params))
+    for _ in range(200):
+        params, state, _ = step(params, state)
+    assert float(loss_fn(params)) < 1e-2 * l0
+
+
+def test_adamw_clip_and_dtype():
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    g = {"w": jnp.full((4,), 100.0, jnp.bfloat16)}
+    cfg = adamw.AdamWConfig(lr=1e-2, clip_norm=1.0, weight_decay=0.0)
+    st = adamw.init(params)
+    p2, st2, gn = adamw.update(g, st, params, cfg)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert float(gn) == pytest.approx(200.0, rel=1e-2)  # pre-clip norm
+    assert st2.mu["w"].dtype == jnp.float32
+
+
+def test_warmup_cosine_shape():
+    lr = schedule.warmup_cosine(
+        jnp.arange(100), peak_lr=1.0, warmup_steps=10, total_steps=100
+    )
+    assert float(lr[0]) == 0.0
+    assert float(lr[10]) == pytest.approx(1.0, abs=1e-6)
+    assert float(lr[99]) < 0.2
+    assert bool(jnp.all(jnp.diff(lr[:10]) > 0))
+
+
+# ---------------------------------------------------------------------------
+# EF-int8 compression
+# ---------------------------------------------------------------------------
+
+
+def test_ef_int8_tracks_uncompressed_sgd():
+    """Error feedback: compressed SGD converges to the same optimum."""
+    params, loss_fn = _quad_problem()
+    pc = jax.tree.map(jnp.copy, params)
+    ef = compress.init(params)
+    lr = 0.05
+    for _ in range(300):
+        g = jax.grad(loss_fn)(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        gq = jax.grad(loss_fn)(pc)
+        q, scales, ef = compress.compress(gq, ef)
+        gd = compress.decompress(q, scales)
+        pc = jax.tree.map(lambda p, gg: p - lr * gg, pc, gd)
+    lf = float(loss_fn(params))
+    lc = float(loss_fn(pc))
+    assert lc < 1e-3, lc
+    assert abs(lc - lf) < 1e-3
+
+
+def test_ef_int8_payload_dtype():
+    g = {"w": jnp.linspace(-1, 1, 64)}
+    q, scales, ef = compress.compress(g, compress.init(g))
+    assert q["w"].dtype == jnp.int8
+    rec = compress.decompress(q, scales)
+    np.testing.assert_allclose(rec["w"], g["w"], atol=2.0 / 127.0)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint store
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "layers": {"w": jax.random.normal(k, (16, 8)),
+                   "b": jnp.zeros((8,), jnp.bfloat16)},
+        "step": jnp.int32(7),
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    store.save(str(tmp_path), 3, t)
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t
+    )
+    out, step = store.restore(str(tmp_path), like)
+    assert step == 3
+    assert out["layers"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out["layers"]["w"]), np.asarray(t["layers"]["w"])
+    )
+
+
+def test_checkpoint_atomicity_incomplete_ignored(tmp_path):
+    t = _tree()
+    store.save(str(tmp_path), 1, t)
+    # simulate a crashed save: step dir without manifest
+    bad = tmp_path / "step_00000009"
+    bad.mkdir()
+    (bad / "shard_0.npz").write_bytes(b"garbage")
+    assert store.latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        store.save(str(tmp_path), s, t)
+    store.gc_old(str(tmp_path), keep=2)
+    assert store.latest_step(str(tmp_path)) == 5
+    assert sorted(os.listdir(tmp_path))[:1] == ["step_00000004"]
+
+
+def test_checkpoint_async(tmp_path):
+    saver = store.AsyncSaver()
+    t = _tree()
+    saver.save(str(tmp_path), 11, t)
+    saver.wait()
+    assert store.latest_step(str(tmp_path)) == 11
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    store.save(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        store.restore(str(tmp_path), {"w": jnp.zeros((5,))})
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant loop
+# ---------------------------------------------------------------------------
+
+
+def test_fault_loop_bit_exact_recovery(tmp_path):
+    """A run with injected failures ends bit-identical to a clean run."""
+
+    def make_batch(step):
+        return jax.random.normal(jax.random.PRNGKey(step), (4,))
+
+    def make_step(injector=None):
+        def step_fn(state, batch):
+            if injector is not None:
+                injector.maybe_fail(int(state["i"]))
+            return (
+                {"x": state["x"] + jnp.sum(batch), "i": state["i"] + 1},
+                {},
+            )
+
+        return step_fn
+
+    init = {"x": jnp.zeros(()), "i": jnp.int32(0)}
+
+    clean = fault.FaultTolerantLoop(
+        fault.LoopConfig(str(tmp_path / "clean"), ckpt_every=3),
+        make_step(),
+        make_batch,
+    ).run(init, 10)
+
+    inj = fault.FailureInjector([4, 8])
+    cfg = fault.LoopConfig(str(tmp_path / "faulty"), ckpt_every=3)
+    loop = fault.FaultTolerantLoop(cfg, make_step(inj), make_batch)
+    faulty = loop.run(init, 10)
+
+    assert loop.stats.restarts == 2
+    np.testing.assert_array_equal(np.asarray(clean["x"]), np.asarray(faulty["x"]))
+    assert int(faulty["i"]) == 10
+
+
+def test_fault_loop_gives_up_after_max_restarts(tmp_path):
+    def step_fn(state, batch):
+        raise fault.WorkerFailure("always")
+
+    loop = fault.FaultTolerantLoop(
+        fault.LoopConfig(str(tmp_path), max_restarts=2),
+        step_fn,
+        lambda s: None,
+    )
+    with pytest.raises(fault.WorkerFailure):
+        loop.run({"x": jnp.zeros(())}, 3)
+
+
+def test_straggler_detection(tmp_path):
+    import time as _time
+
+    def step_fn(state, batch):
+        if int(state["i"]) == 5:
+            _time.sleep(0.2)
+        else:
+            _time.sleep(0.01)
+        return {"i": state["i"] + 1}, {}
+
+    seen = []
+    loop = fault.FaultTolerantLoop(
+        fault.LoopConfig(str(tmp_path), straggler_factor=4.0),
+        step_fn,
+        lambda s: None,
+        on_straggler=lambda step, ratio: seen.append((step, ratio)),
+    )
+    loop.run({"i": jnp.int32(0)}, 8)
+    assert loop.stats.stragglers >= 1
+    assert seen and seen[0][1] > 4.0
