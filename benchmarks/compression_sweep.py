@@ -14,9 +14,9 @@ import os
 from typing import Dict
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import pipeline as P
 from repro.data import synthetic as SYN
 
@@ -25,6 +25,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 FRAME = 64
 PATCH = 16
 N_FRAMES = 40
+CHUNK = 10  # session-API ingest chunk size
 
 
 def _cfg(**kw) -> P.EPICConfig:
@@ -34,6 +35,17 @@ def _cfg(**kw) -> P.EPICConfig:
     )
     base.update(kw)
     return P.EPICConfig(**base)
+
+
+def _compress(s: SYN.Stream, cfg: P.EPICConfig,
+              models: P.EPICModels = P.EPICModels(), *, oracle=True):
+    """Chunked session ingest (the deployment shape); returns
+    (final state, per-frame stats for the whole stream)."""
+    comp = api.get_compressor("epic")(cfg, models)
+    stream = api.SensorChunk(
+        s.frames, s.poses, s.gazes, s.depth if oracle else None
+    )
+    return api.run_session(comp, stream, CHUNK)
 
 
 def run(seed: int = 0) -> Dict:
@@ -48,9 +60,7 @@ def run(seed: int = 0) -> Dict:
         )
         cfg = _cfg()
         s, _ = SYN.generate_stream(jax.random.fold_in(key, int(amp * 10)), scfg)
-        state, stats = P.compress_stream(
-            s.frames, s.poses, s.gazes, cfg, P.EPICModels(), depth_gt=s.depth
-        )
+        state, stats = _compress(s, cfg)
         total_patches = N_FRAMES * (FRAME // PATCH) ** 2
         retained = int(stats.buffer_valid[-1])
         rows.append(
@@ -73,9 +83,7 @@ def run(seed: int = 0) -> Dict:
     s, _ = SYN.generate_stream(jax.random.fold_in(key, 99), scfg)
     for gamma in (0.002, 0.01, 0.05, 0.2):
         cfg = _cfg(gamma=gamma, theta=8)
-        _, stats = P.compress_stream(
-            s.frames, s.poses, s.gazes, cfg, P.EPICModels(), depth_gt=s.depth
-        )
+        _, stats = _compress(s, cfg)
         proc = np.asarray(stats.processed)
         # safeguard: no bypass run longer than theta
         runs, cur = [], 0
@@ -115,13 +123,10 @@ def run(seed: int = 0) -> Dict:
     qp = depth_mod.quantize_params(dp, rgb64)
 
     cfg = _cfg()
-    _, st_oracle = P.compress_stream(
-        s.frames, s.poses, s.gazes, cfg, P.EPICModels(), depth_gt=s.depth
-    )
+    _, st_oracle = _compress(s, cfg)
     # int8 learned depth (no oracle)
-    _, st_model = P.compress_stream(
-        s.frames, s.poses, s.gazes, cfg,
-        P.EPICModels(depth_params=qp, hir_params=None),
+    _, st_model = _compress(
+        s, cfg, P.EPICModels(depth_params=qp, hir_params=None), oracle=False
     )
     r_o = int(st_oracle.buffer_valid[-1])
     r_m = int(st_model.buffer_valid[-1])

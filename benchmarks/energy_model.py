@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import energy as E
 from repro.core import pipeline as P
 from repro.data import synthetic as SYN
@@ -42,7 +43,8 @@ RES_SCALE = (TARGET_RES // FRAME) ** 2
 # Accuracy-matched budget multiplier for SDS/TDS/GCS (from the Table-1
 # sweep: baselines need ~4x EPIC's memory to reach its accuracy).
 MATCH_FACTOR = 4.0
-ENTRY_BYTES = PATCH * PATCH * 3 + PATCH * PATCH * 2 + 64
+# Figure-6 accounting: full on-device DC entries (core/retained.py is
+# the single source of truth; stream_counters uses the same constant).
 
 
 def run(seed: int = 0) -> Dict:
@@ -59,17 +61,26 @@ def run(seed: int = 0) -> Dict:
         frame_hw=(FRAME, FRAME), patch=PATCH, capacity=48,
         tau=0.10, gamma=0.03, theta=30, window=16,
     )
-    comp = jax.jit(
-        lambda f, p, g, d: P.compress_stream(
-            f, p, g, ecfg, P.EPICModels(), depth_gt=d
-        )
-    )
 
-    counters = []
-    for i in range(N_STREAMS):
-        s, _ = SYN.generate_stream(jax.random.fold_in(key, i), scfg)
-        state, stats = comp(s.frames, s.poses, s.gazes, s.depth)
-        counters.append(P.stream_counters(ecfg, stats))
+    # Batched multi-user serving mode: one StreamPool ingests all
+    # N_STREAMS glasses streams in lock-step (vmap over the stream axis,
+    # per-stream carried state) — the datacenter deployment of Figure 1.
+    streams = [
+        SYN.generate_stream(jax.random.fold_in(key, i), scfg)[0]
+        for i in range(N_STREAMS)
+    ]
+    batch = jax.tree.map(lambda *xs: jnp.stack(xs), *streams)
+    pool = api.StreamPool(
+        api.get_compressor("epic")(ecfg), N_STREAMS
+    )
+    _, stats = pool.step(
+        pool.init(),
+        api.SensorChunk(batch.frames, batch.poses, batch.gazes, batch.depth),
+    )
+    counters = [
+        P.stream_counters(ecfg, jax.tree.map(lambda x: x[i], stats))
+        for i in range(N_STREAMS)
+    ]
 
     def avg(field):
         return float(np.mean([getattr(c, field) for c in counters]))

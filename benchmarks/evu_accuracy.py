@@ -13,6 +13,10 @@ Protocol (mirrors paper Section 5 on the synthetic EVU substrate):
      train the EVU probe per (method, setting), report test accuracy and
      the memory ratio vs EPIC (=1x).
 
+All five methods run through the unified `repro.api` Compressor
+protocol: one generic session loop (`tokens_for`) per method looked up
+in the registry — no per-method glue.
+
 Outputs benchmarks/results/evu_accuracy.json + a markdown table.
 """
 
@@ -21,15 +25,16 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines as BL
+from repro import api
 from repro.core import evu, hir, packing
 from repro.core import pipeline as P
+from repro.core import retained as RET
 from repro.data import synthetic as SYN
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
@@ -41,7 +46,10 @@ N_OBJ = 5
 N_SEG = 4
 N_TRAIN, N_TEST = 72, 36
 CAPACITIES = (48, 24, 12)  # EPIC DC-buffer capacities = settings 1..3
-ENTRY_BYTES = PATCH * PATCH * 3 + 16
+# Table-1 accounting: every method charged at the EFM-visible retained
+# record rate (core/retained.py is the single source of truth).
+ENTRY_BYTES = RET.retained_patch_bytes(PATCH)
+BASELINES = ("fv", "sd", "td", "gc")
 
 
 def stream_cfg() -> SYN.StreamConfig:
@@ -60,6 +68,19 @@ def epic_cfg(capacity: int) -> P.EPICConfig:
         theta=8,
         window=16,
     )
+
+
+def make_compressor(name: str, *, budget: int = -1, capacity: int = 0,
+                    hir_params=None):
+    """Uniform construction of any registered method."""
+    cls = api.get_compressor(name)
+    if name == "epic":
+        models = P.EPICModels(depth_params=None, hir_params=hir_params)
+        return cls(epic_cfg(capacity), models)
+    return cls(api.BaselineConfig(
+        frame_hw=(FRAME, FRAME), patch=PATCH,
+        budget_patches=budget, n_frames=N_FRAMES,
+    ))
 
 
 def gen_streams(key, n) -> List[SYN.Stream]:
@@ -105,19 +126,6 @@ def train_hir(key, streams: List[SYN.Stream]):
     return params, float(loss)
 
 
-def compress_epic(stream: SYN.Stream, cfg: P.EPICConfig, hir_params):
-    models = P.EPICModels(depth_params=None, hir_params=hir_params)
-    state, stats = P.compress_stream(
-        stream.frames,
-        stream.poses,
-        stream.gazes,
-        cfg,
-        models,
-        depth_gt=stream.depth,
-    )
-    return state.buf, stats
-
-
 def gaze_prox(t, origin, gazes):
     """Per-patch gaze proximity at capture time — the question is about
     the *attended* object, so every method's tokens carry the same gaze
@@ -130,14 +138,25 @@ def gaze_prox(t, origin, gazes):
     return jnp.exp(-0.5 * (d / PATCH) ** 2)
 
 
-def pack_with_gaze(rgb, t, origin, valid, seq_len, gazes,
-                   popularity=None, t_last=None):
-    return packing.pack(
-        rgb, t, origin, valid, seq_len,
-        saliency=gaze_prox(t, origin, gazes),
-        popularity=popularity, t_last=t_last,
-        t_max=float(N_FRAMES), frame_size=float(FRAME),
+def pack_with_gaze(rp, seq_len, gazes):
+    """Method-agnostic tokenization of any compressor's export, with
+    gaze-proximity saliency substituted uniformly for every method."""
+    return packing.pack_retained(
+        rp, seq_len, float(N_FRAMES), float(FRAME),
+        saliency=gaze_prox(rp.t, rp.origin, gazes),
     )
+
+
+def tokens_for(streams, comp, seq_len):
+    """Run one compressor session per stream; pack exports into tokens."""
+    toks, mems = [], []
+    for s in streams:
+        chunk = api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
+        state, _ = api.run_session(comp, chunk)
+        rp = comp.export(state)
+        mems.append(int(rp.memory_bytes()))
+        toks.append(pack_with_gaze(rp, seq_len, s.gazes))
+    return toks, float(np.mean(mems))
 
 
 def qa_dataset(
@@ -179,14 +198,6 @@ def run(seed: int = 0, quick: bool = False) -> Dict:
     per_frame = grid * grid
     results = []
 
-    def base_tokens_for(streams, fn, seq_len):
-        rs = [fn(s) for s in streams]
-        mem = float(np.mean([int(r.memory_bytes()) for r in rs]))
-        return [
-            pack_with_gaze(r.rgb, r.t, r.origin, r.valid, seq_len, s.gazes)
-            for r, s in zip(rs, streams)
-        ], mem
-
     def probe(name, si, tr, te, mem, mem_epic, cap):
         train_ds = qa_dataset(train_streams, tr)
         test_ds = qa_dataset(test_streams, te)
@@ -222,56 +233,27 @@ def run(seed: int = 0, quick: bool = False) -> Dict:
         )
         return acc
 
-    # FV is budget-independent: evaluate once against a 320-token
+    # FV is budget-independent: evaluate once against a 192-token
     # subsample (the probe is O(L^2); 192 tokens >> any budget below).
-    fv_tr, fv_mem = base_tokens_for(
-        train_streams, lambda s: BL.full_video(s.frames, PATCH), 192
-    )
-    fv_te, _ = base_tokens_for(
-        test_streams, lambda s: BL.full_video(s.frames, PATCH), 192
-    )
+    fv = make_compressor("fv")
+    fv_tr, fv_mem = tokens_for(train_streams, fv, 192)
+    fv_te, _ = tokens_for(test_streams, fv, 192)
 
     for si, cap in enumerate(caps):
-        cfg = epic_cfg(cap)
-        comp = jax.jit(
-            lambda f, p, g, d: P.compress_stream(
-                f, p, g, cfg,
-                P.EPICModels(depth_params=None, hir_params=hir_params),
-                depth_gt=d,
-            )
-        )
-
-        def epic_tokens(streams):
-            ts, mems = [], []
-            for s in streams:
-                state, _ = comp(s.frames, s.poses, s.gazes, s.depth)
-                buf = state.buf
-                mems.append(
-                    int(jnp.sum(buf.valid.astype(jnp.int32))) * ENTRY_BYTES
-                )
-                ts.append(
-                    pack_with_gaze(
-                        buf.rgb, buf.t, buf.origin, buf.valid, cap,
-                        s.gazes, popularity=buf.popularity,
-                        t_last=buf.t_last,
-                    )
-                )
-            return ts, float(np.mean(mems))
-
-        tr_tokens, mem_epic = epic_tokens(train_streams)
-        te_tokens, _ = epic_tokens(test_streams)
+        epic = make_compressor("epic", capacity=cap, hir_params=hir_params)
+        tr_tokens, mem_epic = tokens_for(train_streams, epic, cap)
+        te_tokens, _ = tokens_for(test_streams, epic, cap)
         budget = max(per_frame, int(round(mem_epic / ENTRY_BYTES)))
 
         probe("EPIC", si, tr_tokens, te_tokens, mem_epic, mem_epic, cap)
         probe("FV", si, fv_tr, fv_te, fv_mem, mem_epic, cap)
-        for name, fn in (
-            ("SD", lambda s: BL.spatial_downsample(s.frames, PATCH, budget)),
-            ("TD", lambda s: BL.temporal_downsample(s.frames, PATCH, budget)),
-            ("GC", lambda s: BL.gaze_crop(s.frames, s.gazes, PATCH, budget)),
-        ):
-            tr, mem = base_tokens_for(train_streams, fn, budget)
-            te, _ = base_tokens_for(test_streams, fn, budget)
-            probe(name, si, tr, te, mem, mem_epic, cap)
+        for name in BASELINES:
+            if name == "fv":
+                continue  # evaluated once above
+            comp = make_compressor(name, budget=budget)
+            tr, mem = tokens_for(train_streams, comp, budget)
+            te, _ = tokens_for(test_streams, comp, budget)
+            probe(name.upper(), si, tr, te, mem, mem_epic, cap)
 
     out = {
         "hir_final_loss": hir_loss,
@@ -280,6 +262,7 @@ def run(seed: int = 0, quick: bool = False) -> Dict:
         "protocol": {
             "frames": N_FRAMES, "frame_px": FRAME, "patch": PATCH,
             "n_train": n_train, "n_test": n_test, "chance": 1.0 / N_OBJ,
+            "methods": ["epic", *BASELINES],
         },
     }
     os.makedirs(RESULTS, exist_ok=True)

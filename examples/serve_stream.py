@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import get_smoke_config
 from repro.core import packing
 from repro.core import pipeline as P
@@ -24,14 +25,16 @@ from repro.models import build_model
 
 
 def compress(key):
+    """One EPIC session: chunked ingest (10-frame spans, as a live feed
+    would deliver them), then token export for the EFM."""
     scfg = SYN.StreamConfig(n_frames=40, hw=(64, 64), n_obj=5)
     ecfg = P.EPICConfig(frame_hw=(64, 64), patch=16, capacity=16,
                         tau=0.10, gamma=0.015, theta=8, window=16)
     s, _ = SYN.generate_stream(key, scfg)
-    state, stats = P.compress_stream(
-        s.frames, s.poses, s.gazes, ecfg, P.EPICModels(), depth_gt=s.depth
-    )
-    ts = packing.pack_dc_buffer(state.buf, 16, 40.0, 64.0)
+    comp = api.get_compressor("epic")(ecfg)
+    stream = api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
+    state, _ = api.run_session(comp, stream, chunk_size=10)
+    ts = comp.tokens(state, 16)
     kept = int(ts.mask.sum())
     print(f"EPIC retained {kept}/640 patches "
           f"-> cross-attention context of {ts.tokens.shape[0]} tokens")

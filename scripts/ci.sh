@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the exact command CI and humans both run
+# (see ROADMAP.md "Tier-1 verify").
+#
+#   scripts/ci.sh            # full suite
+#   scripts/ci.sh tests/test_api.py   # any extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,69 @@
+"""repro.api — the unified streaming compressor API.
+
+Public surface:
+
+  SensorChunk, iter_chunks, concat_stats      (types)
+  Compressor protocol + EPICCompressor,
+  FullVideo, SpatialDown, TemporalDown,
+  GazeCrop, BaselineConfig                    (compressor)
+  StreamPool                                  (pool)
+  get_compressor / register_compressor /
+  available_compressors, get_backend /
+  register_backend / available_backends       (registry)
+
+See ``src/repro/api/README.md`` for the protocol contract and the
+migration guide from the legacy one-shot ``pipeline.compress_stream``.
+
+The compressor implementations import the full core pipeline; they are
+loaded lazily so that dependency-light users of this package (the
+kernel modules import :mod:`repro.api.registry` at import time) do not
+pay for — or cycle into — the core import graph.
+"""
+
+from __future__ import annotations
+
+from repro.api.registry import (  # noqa: F401
+    available_backends,
+    available_compressors,
+    get_backend,
+    get_compressor,
+    register_backend,
+    register_compressor,
+)
+from repro.api.types import SensorChunk, concat_stats, iter_chunks  # noqa: F401
+
+_LAZY = {
+    "run_session": "repro.api.compressor",
+    "Compressor": "repro.api.compressor",
+    "EPICCompressor": "repro.api.compressor",
+    "FullVideo": "repro.api.compressor",
+    "SpatialDown": "repro.api.compressor",
+    "TemporalDown": "repro.api.compressor",
+    "GazeCrop": "repro.api.compressor",
+    "BaselineConfig": "repro.api.compressor",
+    "BaselineState": "repro.api.compressor",
+    "BaselineFrameStats": "repro.api.compressor",
+    "StreamPool": "repro.api.pool",
+}
+
+__all__ = [
+    "SensorChunk",
+    "iter_chunks",
+    "concat_stats",
+    "available_backends",
+    "available_compressors",
+    "get_backend",
+    "get_compressor",
+    "register_backend",
+    "register_compressor",
+    *_LAZY,
+]
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

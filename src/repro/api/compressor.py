@@ -1,0 +1,353 @@
+"""Unified streaming ``Compressor`` protocol + all five method implementations.
+
+Every compression method of the paper's evaluation — EPIC and the four
+baselines (FV / SD / TD / GC) — implements the same four-method session
+protocol:
+
+  ``init() -> state``
+      A fresh, fixed-shape session state (a pytree).
+  ``step(state, chunk) -> (state, stats)``
+      Ingest a :class:`~repro.api.types.SensorChunk` (``lax.scan`` over
+      its frames internally).  The carry is the full session state, so
+      feeding a stream in arbitrary chunk sizes is **bit-identical** to
+      one big ingest, and unbounded streams run in bounded memory.
+      ``stats`` is a method-specific pytree of per-frame counters
+      (leading axis = chunk length).
+  ``export(state) -> RetainedPatches``
+      The method-agnostic retained representation
+      (:class:`repro.core.retained.RetainedPatches`).
+  ``tokens(state, seq_len) -> TokenStream``
+      The EFM-ready token stream (``core/packing``).
+
+All methods are pure functions of ``(state, chunk)`` given a statically
+configured instance: they jit, differentiate where meaningful, and
+``vmap`` over a leading stream axis (see
+:class:`~repro.api.pool.StreamPool` for the batched multi-user serving
+mode).
+
+The legacy one-shot entry points (``pipeline.compress_stream``, the
+functions in ``core/baselines``) remain as thin deprecation shims.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import register_compressor
+from repro.api.types import SensorChunk
+from repro.core import dc_buffer as dcb
+from repro.core import packing
+from repro.core import pipeline as pipe
+from repro.core import retained as ret
+from repro.core import tsrc as tsrc_mod
+
+Array = jax.Array
+
+
+@runtime_checkable
+class Compressor(Protocol):
+    """Method-agnostic streaming compressor session protocol."""
+
+    name: str
+
+    def init(self) -> Any:
+        ...
+
+    def step(self, state: Any, chunk: SensorChunk) -> Tuple[Any, Any]:
+        ...
+
+    def export(self, state: Any) -> ret.RetainedPatches:
+        ...
+
+    def tokens(self, state: Any, seq_len: int) -> packing.TokenStream:
+        ...
+
+
+def run_session(
+    comp: "Compressor",
+    stream: SensorChunk,
+    chunk_size: Optional[int] = None,
+) -> Tuple[Any, Any]:
+    """Ingest a materialized stream through one fresh session.
+
+    Replay/benchmark convenience over the canonical loop::
+
+        state = comp.init()
+        for chunk in iter_chunks(stream, chunk_size):
+            state, stats = jitted_step(state, chunk)
+
+    ``chunk_size=None`` ingests in a single step.  Returns
+    ``(final_state, stats)`` with stats concatenated over the whole
+    stream.  The jitted ``step`` is cached on the compressor instance,
+    so running many streams through one compressor compiles once per
+    chunk length.
+    """
+    from repro.api.types import concat_stats, iter_chunks
+
+    step = getattr(comp, "_jit_step", None)
+    if step is None:
+        step = jax.jit(comp.step)
+        comp._jit_step = step
+    state = comp.init()
+    stats = []
+    for chunk in iter_chunks(stream, chunk_size or max(stream.n_frames, 1)):
+        state, cs = step(state, chunk)
+        stats.append(cs)
+    return state, concat_stats(stats)
+
+
+# ---------------------------------------------------------------------------
+# EPIC
+# ---------------------------------------------------------------------------
+
+
+@register_compressor("epic")
+class EPICCompressor:
+    """EPIC (paper Figure 3c) behind the unified session protocol.
+
+    ``step`` scans ``pipeline.process_frame`` over the chunk; the carry
+    (:class:`repro.core.pipeline.EPICState`) holds the bypass gate, the
+    DC buffer, and the frame clock, so chunked ingest is bit-identical
+    to the legacy one-shot ``pipeline.compress_stream``.
+    """
+
+    def __init__(
+        self,
+        cfg: pipe.EPICConfig,
+        models: Optional[pipe.EPICModels] = None,
+    ):
+        self.cfg = cfg
+        self.models = pipe.EPICModels() if models is None else models
+
+    def init(self) -> pipe.EPICState:
+        return pipe.init_state(self.cfg)
+
+    def step(
+        self, state: pipe.EPICState, chunk: SensorChunk
+    ) -> Tuple[pipe.EPICState, pipe.FrameStats]:
+        return pipe.scan_frames(
+            state,
+            chunk.frames,
+            chunk.poses,
+            chunk.gazes,
+            chunk.depth,
+            self.models,
+            self.cfg,
+        )
+
+    def export(self, state: pipe.EPICState) -> ret.RetainedPatches:
+        return dcb.to_retained(state.buf)
+
+    def tokens(
+        self, state: pipe.EPICState, seq_len: int
+    ) -> packing.TokenStream:
+        return packing.pack_dc_buffer(
+            state.buf, seq_len, state.t, float(self.cfg.frame_hw[0])
+        )
+
+
+# ---------------------------------------------------------------------------
+# Streaming baselines
+# ---------------------------------------------------------------------------
+
+
+class BaselineConfig(NamedTuple):
+    """Static configuration shared by the four streaming baselines.
+
+    ``budget_patches`` is the retained-patch capacity (the "matched
+    memory budget" of Table 1); ``-1`` means unbounded, i.e. capacity
+    for every patch of an ``n_frames``-long stream (the FV reference).
+    ``n_frames`` is the nominal stream length used for per-frame budget
+    splits (SD/GC) and the temporal stride (TD) — streams may run longer;
+    ingestion simply stops retaining once the budget is exhausted.
+    """
+
+    frame_hw: Tuple[int, int] = (64, 64)
+    patch: int = 16
+    budget_patches: int = -1
+    n_frames: int = 40
+
+    @property
+    def grid(self) -> int:
+        g = self.frame_hw[0] // self.patch
+        assert self.frame_hw[0] == self.frame_hw[1], "square frames assumed"
+        return g
+
+    @property
+    def per_frame(self) -> int:
+        return self.grid * self.grid
+
+    @property
+    def capacity(self) -> int:
+        if self.budget_patches > 0:
+            return self.budget_patches
+        return self.n_frames * self.per_frame
+
+
+class BaselineState(NamedTuple):
+    """Carried session state of a streaming baseline."""
+
+    rp: ret.RetainedPatches  # fixed-capacity retained buffer
+    cursor: Array  # () int32 — next write slot (saturates at capacity)
+    frame_idx: Array  # () int32 — frames ingested so far
+
+
+class BaselineFrameStats(NamedTuple):
+    """Per-frame counters (mirrors the shape contract of FrameStats)."""
+
+    processed: Array  # bool — frame contributed retained patches
+    n_inserted: Array  # int32 — patches written this frame
+    buffer_valid: Array  # int32 — occupancy after the frame
+
+
+class _StreamingBaseline:
+    """Shared scan/append machinery; subclasses define the per-frame
+    patch selection via ``_frame_patches``."""
+
+    name = "base"
+
+    def __init__(self, cfg: BaselineConfig):
+        self.cfg = cfg
+
+    # -- protocol -----------------------------------------------------------
+
+    def init(self) -> BaselineState:
+        cap, p = self.cfg.capacity, self.cfg.patch
+        rp = ret.RetainedPatches(
+            rgb=jnp.zeros((cap, p, p, 3), jnp.float32),
+            t=jnp.zeros((cap,), jnp.float32),
+            origin=jnp.zeros((cap, 2), jnp.float32),
+            valid=jnp.zeros((cap,), bool),
+        )
+        z = jnp.zeros((), jnp.int32)
+        return BaselineState(rp=rp, cursor=z, frame_idx=z)
+
+    def step(
+        self, state: BaselineState, chunk: SensorChunk
+    ) -> Tuple[BaselineState, BaselineFrameStats]:
+        cap = self.cfg.capacity
+
+        def body(carry: BaselineState, xs):
+            frame, gaze = xs
+            patches, origins, keep = self._frame_patches(
+                frame, gaze, carry.frame_idx
+            )
+            k = patches.shape[0]
+            idx = carry.cursor + jnp.arange(k, dtype=jnp.int32)
+            ok = keep & (idx < cap)
+            slot = jnp.where(ok, idx, cap)  # OOB slots -> dropped
+            t_f = carry.frame_idx.astype(jnp.float32)
+            rp = carry.rp._replace(
+                rgb=carry.rp.rgb.at[slot].set(patches, mode="drop"),
+                t=carry.rp.t.at[slot].set(
+                    jnp.full((k,), t_f), mode="drop"
+                ),
+                origin=carry.rp.origin.at[slot].set(origins, mode="drop"),
+                valid=carry.rp.valid.at[slot].set(
+                    jnp.ones((k,), bool), mode="drop"
+                ),
+            )
+            cursor = carry.cursor + keep.astype(jnp.int32) * k
+            stats = BaselineFrameStats(
+                processed=keep,
+                n_inserted=jnp.sum(ok.astype(jnp.int32)),
+                buffer_valid=jnp.minimum(cursor, cap),
+            )
+            return (
+                BaselineState(rp, cursor, carry.frame_idx + 1),
+                stats,
+            )
+
+        return jax.lax.scan(body, state, (chunk.frames, chunk.gazes))
+
+    def export(self, state: BaselineState) -> ret.RetainedPatches:
+        return state.rp
+
+    def tokens(
+        self, state: BaselineState, seq_len: int
+    ) -> packing.TokenStream:
+        return packing.pack_retained(
+            state.rp,
+            seq_len,
+            state.frame_idx.astype(jnp.float32),
+            float(self.cfg.frame_hw[0]),
+        )
+
+    # -- per-method hook ----------------------------------------------------
+
+    def _frame_patches(
+        self, frame: Array, gaze: Array, frame_idx: Array
+    ) -> Tuple[Array, Array, Array]:
+        """Return (patches (K,P,P,3), origins (K,2), keep ()) for one
+        frame.  ``K`` must be static per configuration."""
+        raise NotImplementedError
+
+
+@register_compressor("fv")
+class FullVideo(_StreamingBaseline):
+    """FV: retain every patch of every frame (memory-unbounded reference)."""
+
+    def _frame_patches(self, frame, gaze, frame_idx):
+        patches, origins = tsrc_mod.extract_patches(frame, self.cfg.patch)
+        return patches, origins, jnp.ones((), bool)
+
+
+@register_compressor("td")
+class TemporalDown(_StreamingBaseline):
+    """TD: keep every k-th frame at full resolution, k set by the budget."""
+
+    def __init__(self, cfg: BaselineConfig):
+        super().__init__(cfg)
+        self._n_keep = max(1, cfg.capacity // cfg.per_frame)
+        self._stride = max(1, cfg.n_frames // self._n_keep)
+
+    def _frame_patches(self, frame, gaze, frame_idx):
+        patches, origins = tsrc_mod.extract_patches(frame, self.cfg.patch)
+        keep = (frame_idx % self._stride == 0) & (
+            frame_idx // self._stride < self._n_keep
+        )
+        return patches, origins, keep
+
+
+class _PerFrameBudget(_StreamingBaseline):
+    """Shared sizing for the two per-frame-budget baselines (SD / GC)."""
+
+    def __init__(self, cfg: BaselineConfig):
+        super().__init__(cfg)
+        per_frame_budget = max(1, cfg.capacity // cfg.n_frames)
+        self._gg = min(
+            max(1, int(math.floor(math.sqrt(per_frame_budget)))), cfg.grid
+        )
+
+
+@register_compressor("sd")
+class SpatialDown(_PerFrameBudget):
+    """SD: keep all frames, each downsampled to fit the per-frame budget."""
+
+    def _frame_patches(self, frame, gaze, frame_idx):
+        h = self.cfg.frame_hw[0]
+        new_hw = self._gg * self.cfg.patch
+        small = jax.image.resize(
+            frame, (new_hw, new_hw, 3), method="bilinear"
+        )
+        patches, origins = tsrc_mod.extract_patches(small, self.cfg.patch)
+        return patches, origins * (h / new_hw), jnp.ones((), bool)
+
+
+@register_compressor("gc")
+class GazeCrop(_PerFrameBudget):
+    """GC: a budget-sized square crop centred at the gaze point."""
+
+    def _frame_patches(self, frame, gaze, frame_idx):
+        h, w = self.cfg.frame_hw
+        crop = min(self._gg * self.cfg.patch, h)
+        cy = jnp.clip(gaze[1] - crop / 2, 0, h - crop).astype(jnp.int32)
+        cx = jnp.clip(gaze[0] - crop / 2, 0, w - crop).astype(jnp.int32)
+        region = jax.lax.dynamic_slice(frame, (cy, cx, 0), (crop, crop, 3))
+        patches, origins = tsrc_mod.extract_patches(region, self.cfg.patch)
+        corner = jnp.stack([cy, cx]).astype(jnp.float32)
+        return patches, origins + corner, jnp.ones((), bool)

@@ -1,0 +1,75 @@
+"""StreamPool — batched multi-stream serving.
+
+Wraps any :class:`~repro.api.compressor.Compressor` session over a
+leading stream axis: one jitted ``vmap`` of ``step`` carries per-stream
+state across chunk ingests.  This is the paper's datacenter deployment
+mode — one accelerator ingesting many glasses streams in lock-step —
+and the shape that sharding hangs off of (shard the stream axis across
+a mesh and the same program serves a pod).
+
+State buffers are donated to each ``step`` on accelerator backends, so
+a pool holds exactly one copy of the per-stream carry in device memory
+regardless of how many chunks it ingests.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.types import SensorChunk
+
+
+class StreamPool:
+    """A batch of ``n_streams`` independent compressor sessions.
+
+    All pool methods take / return pytrees whose leaves carry a leading
+    ``(n_streams, ...)`` axis; :meth:`step` expects the chunk's sensor
+    arrays shaped ``(n_streams, T, ...)``.  Results are identical to
+    running ``n_streams`` separate sessions (property-tested in
+    ``tests/test_api.py``).
+    """
+
+    def __init__(
+        self,
+        compressor,
+        n_streams: int,
+        *,
+        donate: Optional[bool] = None,
+    ):
+        self.compressor = compressor
+        self.n_streams = n_streams
+        if donate is None:
+            # Donation pays off (and is implemented) on accelerators;
+            # CPU jax warns and ignores it.
+            donate = jax.default_backend() != "cpu"
+        vstep = jax.vmap(compressor.step)
+        self._step = (
+            jax.jit(vstep, donate_argnums=(0,)) if donate else jax.jit(vstep)
+        )
+
+    def init(self) -> Any:
+        """Stacked fresh states: one session per stream."""
+        one = self.compressor.init()
+        return jax.tree.map(
+            lambda x: jnp.repeat(x[None], self.n_streams, axis=0), one
+        )
+
+    def step(self, states: Any, chunks: SensorChunk) -> Tuple[Any, Any]:
+        """Ingest one chunk per stream; returns (states, stats), each
+        with the leading stream axis."""
+        if chunks.frames.ndim != 5 or chunks.frames.shape[0] != self.n_streams:
+            raise ValueError(
+                f"StreamPool({self.n_streams}) expects chunk arrays with a "
+                f"leading stream axis, frames (n_streams, T, H, W, 3); got "
+                f"frames shape {tuple(chunks.frames.shape)}"
+            )
+        return self._step(states, chunks)
+
+    def export(self, states: Any):
+        return jax.vmap(self.compressor.export)(states)
+
+    def tokens(self, states: Any, seq_len: int):
+        return jax.vmap(lambda s: self.compressor.tokens(s, seq_len))(states)

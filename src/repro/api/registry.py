@@ -1,0 +1,92 @@
+"""Name-based registries for compressors and kernel backends.
+
+Two small registries decouple *what* runs from *how it is selected*:
+
+* **Compressors** — every method of the paper's evaluation (``"epic"``,
+  ``"fv"``, ``"sd"``, ``"td"``, ``"gc"``) registers its
+  :class:`~repro.api.compressor.Compressor` class, so benchmarks iterate
+  methods by name with no per-method glue.
+* **Kernel backends** — the reproject-match implementations (``"ref"``,
+  ``"pallas"``) register their callables; ``TSRCConfig.backend`` is no
+  longer a raw string compared inside the op but a registry key, so new
+  backends (and test doubles) plug in without touching the dispatcher.
+
+This module is intentionally dependency-light (stdlib only): kernel
+modules import it at import time, so it must not pull in the compressor
+implementations (which import the kernels).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+_COMPRESSORS: Dict[str, type] = {}
+_KERNEL_BACKENDS: Dict[str, Callable] = {}
+
+
+def register_compressor(name: str) -> Callable[[type], type]:
+    """Class decorator: register a Compressor implementation under ``name``."""
+
+    def deco(cls: type) -> type:
+        _COMPRESSORS[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def get_compressor(name: str) -> type:
+    """Look up a Compressor class by registry name (e.g. ``"epic"``)."""
+    _ensure_builtin_compressors()
+    try:
+        return _COMPRESSORS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown compressor {name!r}; "
+            f"available: {sorted(_COMPRESSORS)}"
+        ) from None
+
+
+def available_compressors() -> Tuple[str, ...]:
+    _ensure_builtin_compressors()
+    return tuple(sorted(_COMPRESSORS))
+
+
+def _ensure_builtin_compressors() -> None:
+    # The built-in implementations register themselves on import; pull
+    # them in lazily so `import repro.api.registry` stays cheap for the
+    # kernel modules.
+    from repro.api import compressor  # noqa: F401
+
+
+def register_backend(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register a kernel backend callable under ``name``."""
+
+    def deco(fn: Callable) -> Callable:
+        _KERNEL_BACKENDS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_backend(name: str) -> Callable:
+    """Look up a kernel backend (e.g. ``"ref"`` / ``"pallas"``) by name."""
+    _ensure_builtin_backends()
+    try:
+        return _KERNEL_BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel backend {name!r}; "
+            f"available: {sorted(_KERNEL_BACKENDS)}"
+        ) from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    _ensure_builtin_backends()
+    return tuple(sorted(_KERNEL_BACKENDS))
+
+
+def _ensure_builtin_backends() -> None:
+    # The built-in backends register themselves when their op module
+    # imports; pull it in so lookups work regardless of import order.
+    from repro.kernels.reproject_match import ops  # noqa: F401

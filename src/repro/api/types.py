@@ -1,0 +1,63 @@
+"""Shared types for the streaming compressor API.
+
+:class:`SensorChunk` bundles the synchronized sensor modalities of one
+span of an egocentric stream — the chunked-ingest unit every
+:class:`~repro.api.compressor.Compressor` consumes.  It replaces the
+positional parallel-array signatures (``frames, poses, gazes, depth``)
+of the legacy one-shot entry points.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class SensorChunk(NamedTuple):
+    """A span of synchronized sensor data (leading time axis ``T``).
+
+    ``depth`` is optional: ``None`` unless running an oracle-depth
+    ablation (paper Section 5) or replaying a recording with aligned
+    depth ground truth.  All fields may also carry an extra leading
+    stream axis when fed through :class:`~repro.api.pool.StreamPool`.
+    """
+
+    frames: Array  # (T, H, W, 3) RGB
+    poses: Array  # (T, 4, 4) camera-to-world (IMU track)
+    gazes: Array  # (T, 2) gaze point (u, v) in pixels
+    depth: Optional[Array] = None  # (T, H, W) metric depth, oracle mode
+
+    @property
+    def n_frames(self) -> int:
+        return self.frames.shape[0]
+
+    def slice(self, start: int, stop: int) -> "SensorChunk":
+        """Host-side time slice (static indices)."""
+        return SensorChunk(
+            self.frames[start:stop],
+            self.poses[start:stop],
+            self.gazes[start:stop],
+            None if self.depth is None else self.depth[start:stop],
+        )
+
+
+def iter_chunks(chunk: SensorChunk, chunk_size: int) -> Iterator[SensorChunk]:
+    """Split a materialized stream into successive ingest chunks.
+
+    Convenience for replay/testing; a live deployment constructs
+    :class:`SensorChunk` objects directly from the sensor ring buffer.
+    """
+    for start in range(0, chunk.n_frames, chunk_size):
+        yield chunk.slice(start, min(start + chunk_size, chunk.n_frames))
+
+
+def concat_stats(stats: Sequence):
+    """Concatenate per-chunk stats pytrees along the time axis, giving
+    the same layout a single one-shot ingest would have produced."""
+    if len(stats) == 1:
+        return stats[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *stats)

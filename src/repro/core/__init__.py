@@ -7,8 +7,15 @@ Modules:
   dc_buffer      — Duplication-Check buffer (functional, fixed capacity)
   tsrc           — Temporal-Spatial Redundancy Check
   frame_bypass   — in-sensor Frame Bypass gate
-  pipeline       — streaming compressor (scan over frames)
-  baselines      — FV / SD / TD / GC comparison methods
+  pipeline       — streaming compressor (scan over frames; chunked-ingest
+                   primitive `scan_frames` + one-shot `compress_stream` shim)
+  baselines      — FV / SD / TD / GC comparison methods (one-shot shims)
+  retained       — method-agnostic RetainedPatches record + the unified
+                   byte-accounting constants (Table-1 vs Figure-6 rates)
   packing        — retained patches -> EFM token stream
   energy         — Figure-6 analytical energy/memory model
+
+The streaming session API over these — the `Compressor` protocol,
+chunked ingest, multi-stream batching, and the method/backend
+registries — lives in `repro.api` (see src/repro/api/README.md).
 """

@@ -12,31 +12,25 @@ Each baseline emits the same *retained-patch record* format as EPIC's DC
 buffer (patch pixels + timestamp + origin), so the downstream EFM tokenizer
 (`core/packing.py`) is method-agnostic and accuracy comparisons are
 apples-to-apples at matched memory budgets, as in Table 1.
+
+These are the one-shot (whole-stream-materialized) formulations.  The
+streaming, chunked-ingest equivalents live in ``repro.api.compressor``;
+new code should go through that API.
 """
 
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+# Re-exported for backward compatibility: the retained record (and its
+# byte accounting) now lives in core/retained.py.
+from repro.core.retained import RetainedPatches  # noqa: F401
+
 Array = jax.Array
-
-
-class RetainedPatches(NamedTuple):
-    """Method-agnostic retained representation (fixed capacity, masked)."""
-
-    rgb: Array  # (N, P, P, 3)
-    t: Array  # (N,) frame timestamp
-    origin: Array  # (N, 2) patch top-left (row, col) in its frame
-    valid: Array  # (N,) bool
-
-    def memory_bytes(self) -> Array:
-        p = self.rgb.shape[1]
-        per = p * p * 3 + 16  # uint8 RGB + light metadata
-        return jnp.sum(self.valid.astype(jnp.int32)) * per
 
 
 def _grid_patches(frames: Array, patch: int) -> Tuple[Array, Array, Array]:
@@ -146,5 +140,11 @@ def _pad_to(patches, ts, origins, budget) -> RetainedPatches:
 
 
 def from_dc_buffer(buf) -> RetainedPatches:
-    """Adapt an EPIC DC buffer to the common retained-patch record."""
-    return RetainedPatches(buf.rgb, buf.t, buf.origin, buf.valid)
+    """Adapt an EPIC DC buffer to the common retained-patch record.
+
+    Deprecated shim: use :func:`repro.core.dc_buffer.to_retained`, which
+    also carries saliency / popularity / last-use metadata.
+    """
+    from repro.core import dc_buffer as dcb
+
+    return dcb.to_retained(buf)

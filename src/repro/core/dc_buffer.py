@@ -36,6 +36,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import retained as ret
+
 Array = jax.Array
 
 
@@ -175,11 +177,25 @@ def memory_bytes(buf: DCBuffer) -> Array:
     """Storage footprint at ASIC precisions, valid entries only.
 
     RGB uint8 x3, depth fp16, metadata (t, pose 12 floats, origin, S, P)
-    ~ 64 B — mirroring the paper's 10:5:1 bank split.
+    ~ 64 B — mirroring the paper's 10:5:1 bank split.  The per-entry rate
+    is the shared :func:`repro.core.retained.dc_entry_bytes` constant.
     """
-    p = buf.patch_size
-    per_entry = p * p * 3 * 1 + p * p * 2 + 64
-    return count_valid(buf) * per_entry
+    return count_valid(buf) * ret.dc_entry_bytes(buf.patch_size)
+
+
+def to_retained(buf: DCBuffer) -> ret.RetainedPatches:
+    """Adapt the DC buffer to the method-agnostic retained record, so
+    ``core/packing.py`` (and everything downstream of a compressor's
+    ``export``) consumes one type everywhere."""
+    return ret.RetainedPatches(
+        rgb=buf.rgb,
+        t=buf.t,
+        origin=buf.origin,
+        valid=buf.valid,
+        saliency=buf.saliency,
+        popularity=buf.popularity,
+        t_last=buf.t_last,
+    )
 
 
 def entry_bbox_inputs(buf: DCBuffer) -> Tuple[Array, Array]:

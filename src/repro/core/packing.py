@@ -101,9 +101,18 @@ def pack_dc_buffer(buf, seq_len: int, t_max: float, frame_size: float
     )
 
 
-def pack_retained(rp, seq_len: int, t_max: float, frame_size: float
-                  ) -> TokenStream:
+def pack_retained(rp, seq_len: int, t_max: float, frame_size: float,
+                  *, saliency: Array | None = None) -> TokenStream:
+    """Pack any compressor's ``RetainedPatches`` export.
+
+    EPIC's export carries saliency / popularity / last-use metadata;
+    baselines leave those ``None`` and :func:`pack` substitutes neutral
+    defaults — one tokenizer path for every method.  ``saliency``
+    overrides the stored per-patch saliency (e.g. gaze proximity).
+    """
     return pack(
         rp.rgb, rp.t, rp.origin, rp.valid, seq_len,
+        saliency=rp.saliency if saliency is None else saliency,
+        popularity=rp.popularity, t_last=rp.t_last,
         t_max=t_max, frame_size=frame_size,
     )

@@ -189,16 +189,22 @@ def process_frame(
     return EPICState(new_bypass, buf, state.t + 1.0), stats
 
 
-def compress_stream(
+def scan_frames(
+    state: EPICState,
     frames: Array,  # (T, H, W, 3)
     poses: Array,  # (T, 4, 4)
     gazes: Array,  # (T, 2)
+    depth_gt: Optional[Array],  # (T, H, W) oracle depth, or None
+    models: EPICModels,
     cfg: EPICConfig,
-    models: EPICModels = EPICModels(),
-    depth_gt: Optional[Array] = None,  # (T, H, W) oracle depth
 ) -> Tuple[EPICState, FrameStats]:
-    """Compress a full stream. Returns final state + per-frame stat arrays."""
-    state = init_state(cfg)
+    """Scan the EPIC algorithm over a chunk of frames from ``state``.
+
+    This is the chunked-ingest primitive: the carry is the full
+    :class:`EPICState`, so feeding a stream in arbitrary chunk sizes is
+    bit-identical to one big scan — unbounded streams ingest in bounded
+    memory (see ``repro.api.EPICCompressor``).
+    """
     use_gt = models.depth_params is None
     if use_gt and depth_gt is None:
         raise ValueError("need depth_gt when no depth model is given")
@@ -215,24 +221,58 @@ def compress_stream(
     return jax.lax.scan(step, state, xs)
 
 
+def compress_stream(
+    frames: Array,  # (T, H, W, 3)
+    poses: Array,  # (T, 4, 4)
+    gazes: Array,  # (T, 2)
+    cfg: EPICConfig,
+    models: EPICModels = EPICModels(),
+    depth_gt: Optional[Array] = None,  # (T, H, W) oracle depth
+) -> Tuple[EPICState, FrameStats]:
+    """Compress a full stream. Returns final state + per-frame stat arrays.
+
+    .. deprecated::
+        One-shot convenience shim kept for backward compatibility; it
+        requires the whole video materialized up front.  New code should
+        use the session API — ``repro.api.EPICCompressor`` — which
+        ingests :class:`repro.api.SensorChunk` chunks incrementally and
+        produces bit-identical results.
+    """
+    return scan_frames(
+        init_state(cfg), frames, poses, gazes, depth_gt, models, cfg
+    )
+
+
 # ---------------------------------------------------------------------------
 # Energy-model bridge.
 # ---------------------------------------------------------------------------
 
 
 def stream_counters(cfg: EPICConfig, stats: FrameStats, *, int8_depth=True):
-    """Convert scan stats into `energy.StreamCounters` for the cost model."""
+    """Convert scan stats into `energy.StreamCounters` for the cost model.
+
+    All per-field reductions transfer in a single ``jax.device_get``
+    (one host sync) rather than one blocking ``int(...)`` per counter.
+    """
     from repro.core import energy
+    from repro.core import retained as ret
 
     h, w = cfg.frame_hw
     t = int(stats.processed.shape[0])
-    n_proc = int(jnp.sum(stats.processed.astype(jnp.int32)))
-    full_checks = int(jnp.sum(stats.n_full_checks))
-    bbox_checks = int(jnp.sum(stats.n_bbox_checks))
-    inserted = int(jnp.sum(stats.n_inserted))
-    final_valid = int(stats.buffer_valid[-1])
-    patch_bytes = cfg.patch * cfg.patch * 3
-    entry_bytes = patch_bytes + cfg.patch * cfg.patch * 2 + 64
+    n_proc, full_checks, bbox_checks, inserted, final_valid = (
+        int(x)
+        for x in jax.device_get(
+            (
+                jnp.sum(stats.processed.astype(jnp.int32)),
+                jnp.sum(stats.n_full_checks),
+                jnp.sum(stats.n_bbox_checks),
+                jnp.sum(stats.n_inserted),
+                stats.buffer_valid[-1],
+            )
+        )
+    )
+    patch_bytes = ret.patch_rgb_bytes(cfg.patch)
+    entry_bytes = ret.dc_entry_bytes(cfg.patch)
     return energy.StreamCounters(
         n_frames=t,
         frame_px=h * w,

@@ -1,0 +1,80 @@
+"""Method-agnostic retained representation + unified byte accounting.
+
+Every compressor (EPIC's DC buffer and all baselines) exports a
+:class:`RetainedPatches` record, so the EFM tokenizer (``core/packing``)
+and the benchmark bookkeeping consume one type everywhere.
+
+Byte-accounting constants
+-------------------------
+Two storage rates exist in the paper and both are defined *here* so
+Table-1 and Figure-6 comparisons share one source of truth:
+
+* :func:`retained_patch_bytes` — the EFM-visible retained record
+  (uint8 RGB + light metadata).  Used for Table-1 memory comparisons,
+  charged identically to every method.
+* :func:`dc_entry_bytes` — a full on-device DC-buffer entry at the ASIC
+  storage precisions (uint8 RGB, fp16 depth, pose/score metadata —
+  the 10:5:1 bank split of Section 4.1.2).  Used for Figure-6
+  energy/memory accounting of the device-side buffer.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Storage precisions (ASIC, Section 4.1.2). The simulation computes in
+# float32 but footprint is charged at deployment precision.
+RGB_BYTES_PER_PX = 3  # uint8 x RGB
+DEPTH_BYTES_PER_PX = 2  # fp16
+RETAINED_META_BYTES = 16  # timestamp + origin + mask bits (EFM record)
+DC_ENTRY_META_BYTES = 64  # + pose (12 floats), saliency, popularity
+
+
+def patch_rgb_bytes(patch: int) -> int:
+    """Raw pixel payload of one PxP RGB patch."""
+    return patch * patch * RGB_BYTES_PER_PX
+
+
+def retained_patch_bytes(patch: int) -> int:
+    """One EFM-visible retained-patch record (any method)."""
+    return patch_rgb_bytes(patch) + RETAINED_META_BYTES
+
+
+def dc_entry_bytes(patch: int) -> int:
+    """One full DC-buffer entry (RGB + depth map + metadata banks)."""
+    return (
+        patch_rgb_bytes(patch)
+        + patch * patch * DEPTH_BYTES_PER_PX
+        + DC_ENTRY_META_BYTES
+    )
+
+
+class RetainedPatches(NamedTuple):
+    """Method-agnostic retained representation (fixed capacity, masked).
+
+    ``saliency`` / ``popularity`` / ``t_last`` are populated by EPIC's DC
+    buffer (:func:`repro.core.dc_buffer.to_retained`); baselines leave
+    them ``None`` and the tokenizer substitutes neutral defaults.
+    """
+
+    rgb: Array  # (N, P, P, 3)
+    t: Array  # (N,) frame timestamp
+    origin: Array  # (N, 2) patch top-left (row, col) in its frame
+    valid: Array  # (N,) bool
+    saliency: Optional[Array] = None  # (N,) HIR score S_c
+    popularity: Optional[Array] = None  # (N,) match counter P_c
+    t_last: Optional[Array] = None  # (N,) last-use timestamp
+
+    @property
+    def patch_size(self) -> int:
+        return self.rgb.shape[1]
+
+    def memory_bytes(self) -> Array:
+        """Table-1 accounting: EFM-visible record, valid entries only."""
+        per = retained_patch_bytes(self.patch_size)
+        return jnp.sum(self.valid.astype(jnp.int32)) * per

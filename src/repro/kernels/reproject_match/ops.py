@@ -1,5 +1,8 @@
 """Dispatching wrapper for the reproject-match op.
 
+Backends are looked up by name in :mod:`repro.api.registry` (so
+``TSRCConfig.backend`` is a registry key, not a string compared here):
+
 ``backend="ref"`` — pure-jnp oracle (default; used by the streaming pipeline
 on CPU and inside SPMD lowering, where a TPU Pallas custom call cannot lower).
 
@@ -14,10 +17,41 @@ from typing import Tuple
 
 import jax
 
+from repro.api.registry import get_backend, register_backend
 from repro.core import geometry as geo
 from repro.kernels.reproject_match.ref import reproject_match_ref
 
 Array = jax.Array
+
+
+@register_backend("ref")
+def _ref_backend(
+    entry_rgb, entry_depth, entry_origin, t_rel, frame, intr,
+    *, window, interpret,
+):
+    del interpret  # ref path has no interpret mode
+    return reproject_match_ref(
+        entry_rgb, entry_depth, entry_origin, t_rel, frame, intr, window
+    )
+
+
+@register_backend("pallas")
+def _pallas_backend(
+    entry_rgb, entry_depth, entry_origin, t_rel, frame, intr,
+    *, window, interpret,
+):
+    from repro.kernels.reproject_match.kernel import reproject_match_pallas
+
+    return reproject_match_pallas(
+        entry_rgb,
+        entry_depth,
+        entry_origin,
+        t_rel,
+        frame,
+        intr,
+        window=window,
+        interpret=interpret,
+    )
 
 
 @partial(jax.jit, static_argnames=("window", "backend", "interpret"))
@@ -43,27 +77,15 @@ def reproject_match(
       frame: (H, W, 3) current frame F_t.
       intr: camera intrinsics.
       window: sampling window side (op semantics; see ref.py).
-      backend: "ref" | "pallas".
+      backend: registry name ("ref" | "pallas" | anything registered
+        via repro.api.registry.register_backend).
       interpret: run the Pallas kernel in interpret mode (CPU validation).
 
     Returns:
       diff (N,), coverage (N,), bbox (N, 4).
     """
-    if backend == "ref":
-        return reproject_match_ref(
-            entry_rgb, entry_depth, entry_origin, t_rel, frame, intr, window
-        )
-    if backend == "pallas":
-        from repro.kernels.reproject_match.kernel import reproject_match_pallas
-
-        return reproject_match_pallas(
-            entry_rgb,
-            entry_depth,
-            entry_origin,
-            t_rel,
-            frame,
-            intr,
-            window=window,
-            interpret=interpret,
-        )
-    raise ValueError(f"unknown backend: {backend}")
+    fn = get_backend(backend)
+    return fn(
+        entry_rgb, entry_depth, entry_origin, t_rel, frame, intr,
+        window=window, interpret=interpret,
+    )

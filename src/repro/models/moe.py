@@ -226,6 +226,23 @@ def _quant_all_to_all(x, ep_names, split_axis, concat_axis):
 # ---------------------------------------------------------------------------
 
 
+def _shard_map(region, mesh, in_specs, out_specs):
+    """shard_map across jax versions (jax.shard_map landed in 0.5;
+    0.4.x exposes it under jax.experimental with check_rep instead of
+    check_vma)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            region, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        region, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False,
+    )
+
+
 def moe_ffn_ep(p: Params, x: Array, cfg: ModelConfig):
     """EP MoE: local routing + all-to-all token exchange (DeepSeek-style).
 
@@ -347,10 +364,7 @@ def moe_ffn_ep(p: Params, x: Array, cfg: ModelConfig):
         P(),  # shared experts replicated
     )
     out_specs = (x_spec, P())
-    fn = jax.shard_map(
-        region, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
-    )
+    fn = _shard_map(region, mesh, in_specs, out_specs)
     shared = p.get("shared", {"_": jnp.zeros((), cdt)})
     out, aux = fn(
         x, p["router"], p["gate_w"], p["up_w"], p["down_w"], shared

@@ -1,0 +1,117 @@
+"""Import shim: real ``hypothesis`` when installed, else a tiny
+deterministic fallback sampler.
+
+The tier-1 suite must collect and run green without optional
+dependencies (see requirements-dev.txt).  When ``hypothesis`` is absent,
+property tests still execute ``max_examples`` times against a seeded
+``random.Random`` stream — far weaker than hypothesis (no shrinking, no
+adaptive search) but enough to keep the properties exercised in CI.
+
+Only the strategy surface the test suite actually uses is implemented:
+``integers / floats / booleans / sampled_from / lists / data``.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised when the real package is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _Data(rng))
+
+    class _Data:
+        """Stand-in for ``st.data()``'s interactive draw object."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy._sample(self._rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None, unique=False):
+            cap = min_size if max_size is None else max_size
+
+            def sample(r):
+                n = r.randint(min_size, cap)
+                if not unique:
+                    return [elements._sample(r) for _ in range(n)]
+                out, seen, tries = [], set(), 0
+                while len(out) < n and tries < 10_000:
+                    v = elements._sample(r)
+                    tries += 1
+                    if v not in seen:
+                        seen.add(v)
+                        out.append(v)
+                return out
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**named_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                for i in range(n):
+                    rng = random.Random(0xEC1C0 + i)
+                    drawn = {
+                        name: s._sample(rng)
+                        for name, s in named_strategies.items()
+                    }
+                    fn(*args, **kwargs, **drawn)
+
+            # Hide the drawn parameters from pytest's fixture resolution
+            # (the real hypothesis does the same via its own wrapper).
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(
+                parameters=[
+                    p for name, p in sig.parameters.items()
+                    if name not in named_strategies
+                ]
+            )
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -1,0 +1,383 @@
+"""Unified streaming Compressor API tests: chunked-ingest parity,
+StreamPool batching, registries, baseline equivalence, byte accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import baselines as BL
+from repro.core import dc_buffer as dcb
+from repro.core import packing
+from repro.core import pipeline as P
+from repro.core import retained as RET
+from repro.data import synthetic as SYN
+
+FRAME = 64
+PATCH = 16
+N_FRAMES = 40
+
+
+@pytest.fixture(scope="module")
+def stream():
+    scfg = SYN.StreamConfig(n_frames=N_FRAMES, hw=(FRAME, FRAME), n_obj=4)
+    s, _ = SYN.generate_stream(jax.random.PRNGKey(0), scfg)
+    return s
+
+
+@pytest.fixture(scope="module")
+def chunk(stream):
+    return api.SensorChunk(
+        stream.frames, stream.poses, stream.gazes, stream.depth
+    )
+
+
+def _ecfg(capacity=32):
+    return P.EPICConfig(
+        frame_hw=(FRAME, FRAME), patch=PATCH, capacity=capacity,
+        tau=0.10, gamma=0.015, theta=8, window=16,
+    )
+
+
+def _tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# Chunked ingest == one-shot (the core session-API contract)
+# ---------------------------------------------------------------------------
+
+
+class TestChunkedParity:
+    def test_epic_chunked_bit_identical_to_one_shot(self, stream, chunk):
+        """4 chunks of 10 frames == one-shot compress_stream, bit for
+        bit, with step under jax.jit (acceptance criterion)."""
+        cfg = _ecfg()
+        comp = api.get_compressor("epic")(cfg)
+        step = jax.jit(comp.step)
+
+        state = comp.init()
+        stats_chunks = []
+        for ch in api.iter_chunks(chunk, 10):
+            assert ch.n_frames == 10
+            state, cs = step(state, ch)
+            stats_chunks.append(cs)
+        stats = api.concat_stats(stats_chunks)
+
+        ref_state, ref_stats = P.compress_stream(
+            stream.frames, stream.poses, stream.gazes, cfg,
+            P.EPICModels(), depth_gt=stream.depth,
+        )
+        assert _tree_equal(state, ref_state)
+        assert _tree_equal(stats, ref_stats)
+        assert _tree_equal(comp.export(state), dcb.to_retained(ref_state.buf))
+
+    def test_run_session_matches_manual_loop(self, chunk):
+        cfg = _ecfg()
+        comp = api.get_compressor("epic")(cfg)
+        state, stats = api.run_session(comp, chunk, chunk_size=10)
+        ref_state, ref_stats = comp.step(comp.init(), chunk)
+        assert _tree_equal(state, ref_state)
+        assert _tree_equal(stats, ref_stats)
+
+    def test_epic_uneven_chunks_match(self, chunk):
+        cfg = _ecfg()
+        comp = api.get_compressor("epic")(cfg)
+        step = jax.jit(comp.step)
+        s1, _ = step(comp.init(), chunk)
+        s2 = comp.init()
+        for ch in (chunk.slice(0, 7), chunk.slice(7, 25), chunk.slice(25, 40)):
+            s2, _ = step(s2, ch)
+        assert _tree_equal(s1, s2)
+
+    @pytest.mark.parametrize("name", ["fv", "sd", "td", "gc"])
+    def test_baseline_chunked_matches_one_shot_step(self, name, chunk):
+        comp = api.get_compressor(name)(api.BaselineConfig(
+            frame_hw=(FRAME, FRAME), patch=PATCH,
+            budget_patches=64, n_frames=N_FRAMES,
+        ))
+        step = jax.jit(comp.step)
+        s1, _ = step(comp.init(), chunk)
+        s2 = comp.init()
+        for ch in api.iter_chunks(chunk, 13):
+            s2, _ = step(s2, ch)
+        assert _tree_equal(s1, s2)
+
+
+# ---------------------------------------------------------------------------
+# Streaming baselines == legacy one-shot functions
+# ---------------------------------------------------------------------------
+
+
+class TestBaselineEquivalence:
+    BUDGET = 64
+
+    def _run(self, name, budget, chunk):
+        comp = api.get_compressor(name)(api.BaselineConfig(
+            frame_hw=(FRAME, FRAME), patch=PATCH,
+            budget_patches=budget, n_frames=N_FRAMES,
+        ))
+        state, stats = jax.jit(comp.step)(comp.init(), chunk)
+        return comp, state, stats
+
+    def _assert_matches(self, rp, ref):
+        np.testing.assert_array_equal(
+            np.asarray(rp.valid), np.asarray(ref.valid)
+        )
+        v = np.asarray(ref.valid)
+        np.testing.assert_allclose(
+            np.asarray(rp.rgb)[v], np.asarray(ref.rgb)[v], atol=1e-6
+        )
+        np.testing.assert_array_equal(
+            np.asarray(rp.t)[v], np.asarray(ref.t)[v]
+        )
+        np.testing.assert_allclose(
+            np.asarray(rp.origin)[v], np.asarray(ref.origin)[v], atol=1e-5
+        )
+
+    def test_fv(self, stream, chunk):
+        comp, state, _ = self._run("fv", -1, chunk)
+        self._assert_matches(
+            comp.export(state), BL.full_video(stream.frames, PATCH)
+        )
+
+    def test_sd(self, stream, chunk):
+        comp, state, _ = self._run("sd", self.BUDGET, chunk)
+        self._assert_matches(
+            comp.export(state),
+            BL.spatial_downsample(stream.frames, PATCH, self.BUDGET),
+        )
+
+    def test_td(self, stream, chunk):
+        comp, state, _ = self._run("td", self.BUDGET, chunk)
+        self._assert_matches(
+            comp.export(state),
+            BL.temporal_downsample(stream.frames, PATCH, self.BUDGET),
+        )
+
+    def test_gc(self, stream, chunk):
+        comp, state, _ = self._run("gc", self.BUDGET, chunk)
+        self._assert_matches(
+            comp.export(state),
+            BL.gaze_crop(stream.frames, stream.gazes, PATCH, self.BUDGET),
+        )
+
+    def test_budget_is_respected(self, chunk):
+        for name in ("sd", "td", "gc"):
+            comp, state, stats = self._run(name, 32, chunk)
+            rp = comp.export(state)
+            assert int(jnp.sum(rp.valid.astype(jnp.int32))) <= 32
+            assert int(stats.buffer_valid[-1]) <= 32
+
+    def test_tokens_shapes_uniform(self, chunk):
+        for name in api.available_compressors():
+            if name == "epic":
+                comp = api.get_compressor(name)(_ecfg())
+            else:
+                comp = api.get_compressor(name)(api.BaselineConfig(
+                    frame_hw=(FRAME, FRAME), patch=PATCH,
+                    budget_patches=48, n_frames=N_FRAMES,
+                ))
+            state, _ = comp.step(comp.init(), chunk)
+            ts = comp.tokens(state, 24)
+            assert ts.tokens.shape == (24, packing.TOKEN_FEAT)
+            assert ts.mask.shape == (24,)
+            assert isinstance(comp.export(state), RET.RetainedPatches)
+
+
+# ---------------------------------------------------------------------------
+# StreamPool: batch of N == N independent sessions
+# ---------------------------------------------------------------------------
+
+
+class TestStreamPool:
+    def test_pool_matches_independent_sessions(self):
+        scfg = SYN.StreamConfig(n_frames=20, hw=(FRAME, FRAME), n_obj=4)
+        streams = [
+            SYN.generate_stream(jax.random.PRNGKey(10 + i), scfg)[0]
+            for i in range(3)
+        ]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *streams)
+        bchunk = api.SensorChunk(
+            batch.frames, batch.poses, batch.gazes, batch.depth
+        )
+        comp = api.EPICCompressor(_ecfg(capacity=16))
+        pool = api.StreamPool(comp, 3)
+        states, stats = pool.step(pool.init(), bchunk)
+        assert stats.processed.shape == (3, 20)
+
+        step = jax.jit(comp.step)
+        for i, s in enumerate(streams):
+            ref, _ = step(
+                comp.init(),
+                api.SensorChunk(s.frames, s.poses, s.gazes, s.depth),
+            )
+            got = jax.tree.map(lambda x: x[i], states)
+            assert _tree_equal(got, ref)
+
+        # batched export/tokens carry the stream axis
+        assert pool.export(states).rgb.shape[0] == 3
+        assert pool.tokens(states, 16).tokens.shape == (
+            3, 16, packing.TOKEN_FEAT
+        )
+
+    def test_pool_multi_chunk_carry(self):
+        scfg = SYN.StreamConfig(n_frames=16, hw=(FRAME, FRAME), n_obj=3)
+        s, _ = SYN.generate_stream(jax.random.PRNGKey(3), scfg)
+        batch = jax.tree.map(
+            lambda x: jnp.stack([x, x]), s
+        )  # two identical streams
+        comp = api.EPICCompressor(_ecfg(capacity=16))
+        pool = api.StreamPool(comp, 2)
+        states = pool.init()
+        for start in (0, 8):
+            states, _ = pool.step(
+                states,
+                api.SensorChunk(
+                    batch.frames[:, start:start + 8],
+                    batch.poses[:, start:start + 8],
+                    batch.gazes[:, start:start + 8],
+                    batch.depth[:, start:start + 8],
+                ),
+            )
+        # identical inputs -> identical per-stream state
+        a = jax.tree.map(lambda x: x[0], states)
+        b = jax.tree.map(lambda x: x[1], states)
+        assert _tree_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_all_methods_registered(self):
+        assert set(api.available_compressors()) >= {
+            "epic", "fv", "sd", "td", "gc"
+        }
+
+    def test_unknown_compressor_raises(self):
+        with pytest.raises(KeyError, match="unknown compressor"):
+            api.get_compressor("h264")
+
+    def test_kernel_backends_registered(self):
+        assert {"ref", "pallas"} <= set(api.available_backends())
+
+    def test_backends_available_on_fresh_import(self):
+        """Registration must not depend on import order: a process that
+        only imports repro.api still sees the built-in backends."""
+        import os
+        import subprocess
+        import sys
+
+        r = subprocess.run(
+            [
+                sys.executable,
+                "-c",
+                "from repro import api; print(api.available_backends())",
+            ],
+            capture_output=True,
+            text=True,
+            timeout=120,
+            env={**os.environ, "PYTHONPATH": "src"},
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        assert r.returncode == 0, r.stderr[-1000:]
+        assert "'ref'" in r.stdout and "'pallas'" in r.stdout
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(KeyError, match="unknown kernel backend"):
+            api.get_backend("cuda")
+
+    def test_backend_registry_drives_tsrc_dispatch(self):
+        from repro.kernels.reproject_match.ops import reproject_match
+        from repro.core import geometry as geo
+
+        intr = geo.Intrinsics.create(0.8 * FRAME, FRAME / 2, FRAME / 2)
+        n, p = 2, 8
+        args = (
+            jnp.zeros((n, p, p, 3)),
+            jnp.ones((n, p, p)),
+            jnp.zeros((n, 2)),
+            jnp.broadcast_to(jnp.eye(4), (n, 4, 4)),
+            jnp.zeros((FRAME, FRAME, 3)),
+            intr,
+        )
+        diff, cov, bbox = reproject_match(*args, window=16, backend="ref")
+        assert diff.shape == (n,)
+        with pytest.raises(KeyError):
+            reproject_match(*args, window=16, backend="nope")
+
+    def test_compressor_satisfies_protocol(self):
+        from repro.api.compressor import Compressor
+
+        comp = api.EPICCompressor(_ecfg())
+        assert isinstance(comp, Compressor)
+
+
+# ---------------------------------------------------------------------------
+# Unified byte accounting (core/retained.py)
+# ---------------------------------------------------------------------------
+
+
+class TestByteAccounting:
+    def test_named_constants(self):
+        assert RET.retained_patch_bytes(PATCH) == PATCH * PATCH * 3 + 16
+        assert (
+            RET.dc_entry_bytes(PATCH)
+            == PATCH * PATCH * 3 + PATCH * PATCH * 2 + 64
+        )
+
+    def test_dc_buffer_uses_dc_entry_rate(self):
+        cfg = dcb.DCBufferConfig(capacity=4, patch=PATCH)
+        buf = dcb.init(cfg)
+        new = dcb.NewEntries(
+            rgb=jnp.zeros((2, PATCH, PATCH, 3)),
+            depth=jnp.ones((2, PATCH, PATCH)),
+            pose=jnp.broadcast_to(jnp.eye(4), (2, 4, 4)),
+            origin=jnp.zeros((2, 2)),
+            saliency=jnp.ones((2,)),
+        )
+        buf = dcb.insert(
+            buf, cfg, new, jnp.ones((2,), bool), jnp.zeros(())
+        )
+        assert int(dcb.memory_bytes(buf)) == 2 * RET.dc_entry_bytes(PATCH)
+        # the EFM-visible export of the same buffer charges the light rate
+        assert int(dcb.to_retained(buf).memory_bytes()) == (
+            2 * RET.retained_patch_bytes(PATCH)
+        )
+
+    def test_stream_counters_single_device_get(self, stream, chunk):
+        cfg = _ecfg()
+        comp = api.get_compressor("epic")(cfg)
+        _, stats = jax.jit(comp.step)(comp.init(), chunk)
+        c = P.stream_counters(cfg, stats)
+        assert c.n_frames == N_FRAMES
+        assert c.stored_bytes == (
+            int(stats.buffer_valid[-1]) * RET.dc_entry_bytes(PATCH)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims stay wired
+# ---------------------------------------------------------------------------
+
+
+class TestShims:
+    def test_from_dc_buffer_matches_to_retained(self):
+        buf = dcb.init(dcb.DCBufferConfig(capacity=4, patch=8))
+        assert _tree_equal(BL.from_dc_buffer(buf), dcb.to_retained(buf))
+
+    def test_compress_stream_requires_depth_in_oracle_mode(self):
+        cfg = _ecfg()
+        with pytest.raises(ValueError, match="depth_gt"):
+            P.compress_stream(
+                jnp.zeros((2, FRAME, FRAME, 3)),
+                jnp.broadcast_to(jnp.eye(4), (2, 4, 4)),
+                jnp.zeros((2, 2)),
+                cfg,
+            )

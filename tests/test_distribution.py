@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import subprocess
 import sys
 import textwrap
@@ -15,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.launch import sharding as S
@@ -24,8 +25,20 @@ from repro.models import build_model
 from repro.models import layers as L
 
 
+# Minimal env for subprocess tests. JAX_PLATFORMS must be forwarded:
+# without it jax probes for accelerator plugins at import, which hangs
+# on CI machines with no device.
+_SUB_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+for _k in ("JAX_PLATFORMS", "HOME"):
+    if _k in os.environ:
+        _SUB_ENV[_k] = os.environ[_k]
+
+
 def _mesh(shape=(16, 16), axes=("data", "model")):
-    return jax.sharding.AbstractMesh(shape, axes)
+    try:  # jax >= 0.5: AbstractMesh(axis_sizes, axis_names)
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:  # jax 0.4.x: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 # ---------------------------------------------------------------------------
@@ -260,7 +273,7 @@ def test_ep_moe_matches_sort_subprocess():
     """)
     r = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True,
-        timeout=500, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        timeout=500, env=_SUB_ENV,
         cwd="/root/repo",
     )
     assert r.returncode == 0, r.stderr[-2000:]
@@ -299,7 +312,7 @@ def test_ep_moe_int8_dispatch_subprocess():
     """)
     r = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True,
-        timeout=500, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        timeout=500, env=_SUB_ENV,
         cwd="/root/repo",
     )
     assert r.returncode == 0, r.stderr[-2000:]
