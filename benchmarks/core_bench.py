@@ -1,0 +1,128 @@
+"""Core streaming throughput: frames/sec + retained bytes per method.
+
+The perf-trajectory benchmark: every registered compressor (EPIC and the
+four baselines, plus EPIC on each reproject-match kernel backend) runs
+the same seeded synthetic stream through its jitted session ``step``;
+we record steady-state frames/sec (post-compile, best-of-``repeats``
+walls), the retained-representation bytes, and total wall time.
+
+``benchmarks/run.py`` writes the summary to the repo-root
+``BENCH_core.json`` (the checked-in perf trajectory) and the full
+detail to ``benchmarks/results/core_bench.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FRAME = 64
+PATCH = 16
+N_FRAMES = 40
+CAPACITY = 24
+BUDGET = 64
+# EPIC is measured once per kernel backend: the fused Pallas TSRC step
+# runs in interpret mode on CPU, so only `ref` reflects CPU steady-state
+# speed — the others track correctness-at-speed on accelerators.
+EPIC_BACKENDS = ("ref", "pallas", "fused")
+
+
+def _epic_cfg(backend: str) -> P.EPICConfig:
+    return P.EPICConfig(
+        frame_hw=(FRAME, FRAME), patch=PATCH, capacity=CAPACITY,
+        tau=0.10, gamma=0.015, theta=8, window=16, backend=backend,
+    )
+
+
+def _make(name: str, backend: str = "ref"):
+    cls = api.get_compressor(name)
+    if name == "epic":
+        return cls(_epic_cfg(backend))
+    return cls(api.BaselineConfig(
+        frame_hw=(FRAME, FRAME), patch=PATCH,
+        budget_patches=BUDGET, n_frames=N_FRAMES,
+    ))
+
+
+def _bench_one(comp, chunk, repeats: int) -> Dict:
+    step = jax.jit(comp.step)
+    state0 = comp.init()
+    state, stats = step(state0, chunk)  # compile + first run
+    jax.block_until_ready(state)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out, _ = step(state0, chunk)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    retained = int(comp.export(state).memory_bytes())
+    return {
+        "frames_per_sec": round(chunk.n_frames / best, 2),
+        "step_ms": round(best * 1e3, 3),
+        "retained_bytes": retained,
+    }
+
+
+def run(quick: bool = False, seed: int = 0) -> Dict:
+    t0 = time.time()
+    scfg = SYN.StreamConfig(n_frames=N_FRAMES, hw=(FRAME, FRAME), n_obj=5)
+    s, _ = SYN.generate_stream(jax.random.PRNGKey(seed), scfg)
+    chunk = api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
+    repeats = 2 if quick else 5
+
+    methods: Dict[str, Dict] = {}
+    for name in sorted(api.available_compressors()):
+        if name == "epic":
+            for backend in EPIC_BACKENDS if not quick else ("ref", "fused"):
+                tag = "epic" if backend == "ref" else f"epic[{backend}]"
+                methods[tag] = _bench_one(
+                    _make(name, backend), chunk, repeats
+                )
+                print(f"[core] {tag:13s} "
+                      f"{methods[tag]['frames_per_sec']:9.1f} f/s  "
+                      f"{methods[tag]['retained_bytes']:8d} B retained")
+        else:
+            methods[name] = _bench_one(_make(name), chunk, repeats)
+            print(f"[core] {name:13s} "
+                  f"{methods[name]['frames_per_sec']:9.1f} f/s  "
+                  f"{methods[name]['retained_bytes']:8d} B retained")
+
+    out = {
+        "schema": "epic-core-bench-v1",
+        "quick": quick,
+        "protocol": {
+            "n_frames": N_FRAMES,
+            "frame_hw": FRAME,
+            "patch": PATCH,
+            "epic_capacity": CAPACITY,
+            "baseline_budget_patches": BUDGET,
+            "timing": f"best of {repeats} jitted steps, post-compile",
+            "device": jax.devices()[0].platform,
+        },
+        "methods": methods,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "core_bench.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    with open(os.path.join(REPO_ROOT, "BENCH_core.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--quick" in sys.argv)

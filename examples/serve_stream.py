@@ -1,7 +1,14 @@
-"""Serving example: EPIC-compressed patches as cross-attention context for
-a (reduced) llama-3.2-vision-style VLM — prefill then batched greedy
-decode, exactly the paper's Figure 1 deployment: the glasses compress, the
-EFM answers from the retained patches.
+"""Serving example: a mesh-sharded EPIC StreamPool feeding EPIC-compressed
+patches as cross-attention context for a (reduced) llama-3.2-vision-style
+VLM — prefill then batched greedy decode, exactly the paper's Figure 1
+deployment: a pod of glasses streams compresses, the EFM answers from the
+retained patches.
+
+The pool ingests ``N_STREAMS`` concurrent glasses streams in 10-frame
+chunks.  With more than one device it shards the stream axis across a
+``("streams",)`` mesh (each device carrying its own donated shard of
+session state); on a single device it automatically falls back to the
+plain vmapped pool — the program is identical either way.
 
 Also demonstrates the serving-memory story per family: the same token
 budget is served against a dense-KV arch vs an O(1)-state arch (rwkv6).
@@ -20,25 +27,62 @@ from repro.configs import get_smoke_config
 from repro.core import packing
 from repro.core import pipeline as P
 from repro.data import synthetic as SYN
+from repro.launch.mesh import make_stream_mesh
 from repro.launch.serve import greedy_decode_loop
 from repro.models import build_model
 
+N_STREAMS = 4
+CHUNK_FRAMES = 10
+
 
 def compress(key):
-    """One EPIC session: chunked ingest (10-frame spans, as a live feed
-    would deliver them), then token export for the EFM."""
+    """A pool of EPIC sessions: chunked ingest (10-frame spans, as live
+    feeds would deliver them), then token export for the EFM."""
     scfg = SYN.StreamConfig(n_frames=40, hw=(64, 64), n_obj=5)
     ecfg = P.EPICConfig(frame_hw=(64, 64), patch=16, capacity=16,
                         tau=0.10, gamma=0.015, theta=8, window=16)
-    s, _ = SYN.generate_stream(key, scfg)
+    streams = [
+        SYN.generate_stream(jax.random.fold_in(key, i), scfg)[0]
+        for i in range(N_STREAMS)
+    ]
+    batch = jax.tree.map(lambda *xs: jnp.stack(xs), *streams)
+    stream = api.SensorChunk(
+        batch.frames, batch.poses, batch.gazes, batch.depth
+    )
+
     comp = api.get_compressor("epic")(ecfg)
-    stream = api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
-    state, _ = api.run_session(comp, stream, chunk_size=10)
-    ts = comp.tokens(state, 16)
-    kept = int(ts.mask.sum())
-    print(f"EPIC retained {kept}/640 patches "
-          f"-> cross-attention context of {ts.tokens.shape[0]} tokens")
-    return ts
+    n_dev = len(jax.devices())
+    if n_dev > 1 and N_STREAMS % n_dev == 0:
+        mesh = make_stream_mesh()
+        pool = api.StreamPool(comp, N_STREAMS, mesh=mesh)
+        mode = f"shard_map over {n_dev}-device ('streams',) mesh"
+    else:
+        pool = api.StreamPool(comp, N_STREAMS)
+        mode = (
+            "vmap fallback (single device)" if n_dev == 1
+            else f"vmap fallback ({N_STREAMS} streams don't divide over "
+                 f"{n_dev} devices)"
+        )
+    print(f"StreamPool({N_STREAMS}): {mode}")
+
+    states = pool.init()
+    for start in range(0, scfg.n_frames, CHUNK_FRAMES):
+        states, _ = pool.step(
+            states,
+            api.SensorChunk(
+                stream.frames[:, start:start + CHUNK_FRAMES],
+                stream.poses[:, start:start + CHUNK_FRAMES],
+                stream.gazes[:, start:start + CHUNK_FRAMES],
+                stream.depth[:, start:start + CHUNK_FRAMES],
+            ),
+        )
+    pool_ts = pool.tokens(states, 16)
+    kept = int(pool_ts.mask.sum())
+    print(f"EPIC pool retained {kept}/{N_STREAMS * 640} patches across "
+          f"{N_STREAMS} streams -> {pool_ts.tokens.shape[1]} "
+          f"cross-attention tokens each")
+    # Serve stream 0's context to the EFM below.
+    return jax.tree.map(lambda x: x[0], pool_ts)
 
 
 def main():

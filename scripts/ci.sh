@@ -2,8 +2,24 @@
 # Tier-1 verification — the exact command CI and humans both run
 # (see ROADMAP.md "Tier-1 verify").
 #
-#   scripts/ci.sh            # full suite
+#   scripts/ci.sh                     # full tier-1 suite (~10 min, 2 cores)
+#   scripts/ci.sh --kernels           # Pallas interpret-mode kernel lane
 #   scripts/ci.sh tests/test_api.py   # any extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# Pin the platform and FORWARD it to every subprocess the tests spawn
+# (tests/test_distribution.py, registry fresh-import tests, the sharded
+# StreamPool device-count tests): a stripped env hangs at jax import
+# while probing for accelerator plugins.
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+if [[ "${1:-}" == "--kernels" ]]; then
+  # Focused kernel lane: every Pallas kernel against its oracle in
+  # interpret mode, plus the fused-TSRC backend parity suite.
+  shift
+  exec python -m pytest -q tests/test_kernels.py tests/test_fused_tsrc.py "$@"
+fi
+
+exec python -m pytest -x -q "$@"

@@ -3,13 +3,16 @@
 Public surface:
 
   SensorChunk, iter_chunks, concat_stats      (types)
+  FrameCtx, FrameStage, Gated, StageGraph     (stages)
   Compressor protocol + EPICCompressor,
   FullVideo, SpatialDown, TemporalDown,
   GazeCrop, BaselineConfig                    (compressor)
-  StreamPool                                  (pool)
+  StreamPool (vmapped or mesh-sharded)        (pool)
   get_compressor / register_compressor /
   available_compressors, get_backend /
-  register_backend / available_backends       (registry)
+  register_backend / available_backends /
+  validate_backend, get_stage / make_stage /
+  register_stage / available_stages           (registry)
 
 See ``src/repro/api/README.md`` for the protocol contract and the
 migration guide from the legacy one-shot ``pipeline.compress_stream``.
@@ -25,10 +28,21 @@ from __future__ import annotations
 from repro.api.registry import (  # noqa: F401
     available_backends,
     available_compressors,
+    available_stages,
     get_backend,
     get_compressor,
+    get_stage,
+    make_stage,
     register_backend,
     register_compressor,
+    register_stage,
+    validate_backend,
+)
+from repro.api.stages import (  # noqa: F401
+    FrameCtx,
+    FrameStage,
+    Gated,
+    StageGraph,
 )
 from repro.api.types import SensorChunk, concat_stats, iter_chunks  # noqa: F401
 
@@ -52,10 +66,19 @@ __all__ = [
     "concat_stats",
     "available_backends",
     "available_compressors",
+    "available_stages",
     "get_backend",
     "get_compressor",
+    "get_stage",
+    "make_stage",
     "register_backend",
     "register_compressor",
+    "register_stage",
+    "validate_backend",
+    "FrameCtx",
+    "FrameStage",
+    "Gated",
+    "StageGraph",
     *_LAZY,
 ]
 

@@ -37,13 +37,14 @@ from typing import Any, NamedTuple, Optional, Protocol, Tuple, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.api import registry as registry_mod
+from repro.api import stages as stage_mod
 from repro.api.registry import register_compressor
 from repro.api.types import SensorChunk
 from repro.core import dc_buffer as dcb
 from repro.core import packing
 from repro.core import pipeline as pipe
 from repro.core import retained as ret
-from repro.core import tsrc as tsrc_mod
 
 Array = jax.Array
 
@@ -205,64 +206,72 @@ class BaselineFrameStats(NamedTuple):
 
 
 class _StreamingBaseline:
-    """Shared scan/append machinery; subclasses define the per-frame
-    patch selection via ``_frame_patches``."""
+    """Declarative stage-graph baseline: subclasses name their per-frame
+    patch-selection stage via ``_select_spec``; the shared graph is
+    ``select.* -> retain`` with an int32 frame clock.
+
+    The graph state flattens to exactly the :class:`BaselineState`
+    leaves ``(rp, cursor, frame_idx)`` — the public session contract is
+    unchanged by the stage-graph re-expression (pinned against
+    pre-refactor goldens in ``tests/test_stages.py``).
+    """
 
     name = "base"
 
     def __init__(self, cfg: BaselineConfig):
         self.cfg = cfg
 
+    # -- per-method hook ----------------------------------------------------
+
+    def _select_spec(self) -> Tuple[str, dict]:
+        """Registry name + kwargs of the per-frame selection stage."""
+        raise NotImplementedError
+
+    # -- stage graph ---------------------------------------------------------
+
+    def _graph(self) -> stage_mod.StageGraph:
+        name, kwargs = self._select_spec()
+        stages = [
+            registry_mod.make_stage(name, **kwargs),
+            registry_mod.make_stage(
+                "retain", capacity=self.cfg.capacity, patch=self.cfg.patch
+            ),
+        ]
+        return stage_mod.StageGraph(
+            stages,
+            finalize=lambda ctx: BaselineFrameStats(*ctx.stats["retain"]),
+            clock_init=lambda: jnp.zeros((), jnp.int32),
+            clock_next=lambda t: t + 1,
+        )
+
+    def _to_graph_state(self, graph, state: BaselineState):
+        return graph.pack_state(
+            {"retain": (state.rp, state.cursor)}, state.frame_idx
+        )
+
+    def _from_graph_state(self, graph, gstate) -> BaselineState:
+        named, frame_idx = graph.unpack_state(gstate)
+        rp, cursor = named["retain"]
+        return BaselineState(rp=rp, cursor=cursor, frame_idx=frame_idx)
+
     # -- protocol -----------------------------------------------------------
 
     def init(self) -> BaselineState:
-        cap, p = self.cfg.capacity, self.cfg.patch
-        rp = ret.RetainedPatches(
-            rgb=jnp.zeros((cap, p, p, 3), jnp.float32),
-            t=jnp.zeros((cap,), jnp.float32),
-            origin=jnp.zeros((cap, 2), jnp.float32),
-            valid=jnp.zeros((cap,), bool),
-        )
-        z = jnp.zeros((), jnp.int32)
-        return BaselineState(rp=rp, cursor=z, frame_idx=z)
+        graph = self._graph()
+        return self._from_graph_state(graph, graph.init_state())
 
     def step(
         self, state: BaselineState, chunk: SensorChunk
     ) -> Tuple[BaselineState, BaselineFrameStats]:
-        cap = self.cfg.capacity
-
-        def body(carry: BaselineState, xs):
-            frame, gaze = xs
-            patches, origins, keep = self._frame_patches(
-                frame, gaze, carry.frame_idx
-            )
-            k = patches.shape[0]
-            idx = carry.cursor + jnp.arange(k, dtype=jnp.int32)
-            ok = keep & (idx < cap)
-            slot = jnp.where(ok, idx, cap)  # OOB slots -> dropped
-            t_f = carry.frame_idx.astype(jnp.float32)
-            rp = carry.rp._replace(
-                rgb=carry.rp.rgb.at[slot].set(patches, mode="drop"),
-                t=carry.rp.t.at[slot].set(
-                    jnp.full((k,), t_f), mode="drop"
-                ),
-                origin=carry.rp.origin.at[slot].set(origins, mode="drop"),
-                valid=carry.rp.valid.at[slot].set(
-                    jnp.ones((k,), bool), mode="drop"
-                ),
-            )
-            cursor = carry.cursor + keep.astype(jnp.int32) * k
-            stats = BaselineFrameStats(
-                processed=keep,
-                n_inserted=jnp.sum(ok.astype(jnp.int32)),
-                buffer_valid=jnp.minimum(cursor, cap),
-            )
-            return (
-                BaselineState(rp, cursor, carry.frame_idx + 1),
-                stats,
-            )
-
-        return jax.lax.scan(body, state, (chunk.frames, chunk.gazes))
+        graph = self._graph()
+        gstate, stats = graph.scan(
+            self._to_graph_state(graph, state),
+            chunk.frames,
+            chunk.poses,
+            chunk.gazes,
+            chunk.depth,
+        )
+        return self._from_graph_state(graph, gstate), stats
 
     def export(self, state: BaselineState) -> ret.RetainedPatches:
         return state.rp
@@ -277,49 +286,35 @@ class _StreamingBaseline:
             float(self.cfg.frame_hw[0]),
         )
 
-    # -- per-method hook ----------------------------------------------------
-
-    def _frame_patches(
-        self, frame: Array, gaze: Array, frame_idx: Array
-    ) -> Tuple[Array, Array, Array]:
-        """Return (patches (K,P,P,3), origins (K,2), keep ()) for one
-        frame.  ``K`` must be static per configuration."""
-        raise NotImplementedError
-
 
 @register_compressor("fv")
 class FullVideo(_StreamingBaseline):
     """FV: retain every patch of every frame (memory-unbounded reference)."""
 
-    def _frame_patches(self, frame, gaze, frame_idx):
-        patches, origins = tsrc_mod.extract_patches(frame, self.cfg.patch)
-        return patches, origins, jnp.ones((), bool)
+    def _select_spec(self):
+        return "select.fv", dict(patch=self.cfg.patch)
 
 
 @register_compressor("td")
 class TemporalDown(_StreamingBaseline):
     """TD: keep every k-th frame at full resolution, k set by the budget."""
 
-    def __init__(self, cfg: BaselineConfig):
-        super().__init__(cfg)
-        self._n_keep = max(1, cfg.capacity // cfg.per_frame)
-        self._stride = max(1, cfg.n_frames // self._n_keep)
-
-    def _frame_patches(self, frame, gaze, frame_idx):
-        patches, origins = tsrc_mod.extract_patches(frame, self.cfg.patch)
-        keep = (frame_idx % self._stride == 0) & (
-            frame_idx // self._stride < self._n_keep
+    def _select_spec(self):
+        n_keep = max(1, self.cfg.capacity // self.cfg.per_frame)
+        stride = max(1, self.cfg.n_frames // n_keep)
+        return "select.td", dict(
+            patch=self.cfg.patch, stride=stride, n_keep=n_keep
         )
-        return patches, origins, keep
 
 
 class _PerFrameBudget(_StreamingBaseline):
     """Shared sizing for the two per-frame-budget baselines (SD / GC)."""
 
-    def __init__(self, cfg: BaselineConfig):
-        super().__init__(cfg)
+    @property
+    def _gg(self) -> int:
+        cfg = self.cfg
         per_frame_budget = max(1, cfg.capacity // cfg.n_frames)
-        self._gg = min(
+        return min(
             max(1, int(math.floor(math.sqrt(per_frame_budget)))), cfg.grid
         )
 
@@ -328,26 +323,18 @@ class _PerFrameBudget(_StreamingBaseline):
 class SpatialDown(_PerFrameBudget):
     """SD: keep all frames, each downsampled to fit the per-frame budget."""
 
-    def _frame_patches(self, frame, gaze, frame_idx):
-        h = self.cfg.frame_hw[0]
-        new_hw = self._gg * self.cfg.patch
-        small = jax.image.resize(
-            frame, (new_hw, new_hw, 3), method="bilinear"
+    def _select_spec(self):
+        return "select.sd", dict(
+            patch=self.cfg.patch, gg=self._gg, frame_hw=self.cfg.frame_hw
         )
-        patches, origins = tsrc_mod.extract_patches(small, self.cfg.patch)
-        return patches, origins * (h / new_hw), jnp.ones((), bool)
 
 
 @register_compressor("gc")
 class GazeCrop(_PerFrameBudget):
     """GC: a budget-sized square crop centred at the gaze point."""
 
-    def _frame_patches(self, frame, gaze, frame_idx):
-        h, w = self.cfg.frame_hw
-        crop = min(self._gg * self.cfg.patch, h)
-        cy = jnp.clip(gaze[1] - crop / 2, 0, h - crop).astype(jnp.int32)
-        cx = jnp.clip(gaze[0] - crop / 2, 0, w - crop).astype(jnp.int32)
-        region = jax.lax.dynamic_slice(frame, (cy, cx, 0), (crop, crop, 3))
-        patches, origins = tsrc_mod.extract_patches(region, self.cfg.patch)
-        corner = jnp.stack([cy, cx]).astype(jnp.float32)
-        return patches, origins + corner, jnp.ones((), bool)
+    def _select_spec(self):
+        crop = min(self._gg * self.cfg.patch, self.cfg.frame_hw[0])
+        return "select.gc", dict(
+            patch=self.cfg.patch, crop=crop, frame_hw=self.cfg.frame_hw
+        )

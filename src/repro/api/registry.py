@@ -1,15 +1,26 @@
-"""Name-based registries for compressors and kernel backends.
+"""Name-based registries for compressors, kernel backends, and stages.
 
-Two small registries decouple *what* runs from *how it is selected*:
+Three small registries decouple *what* runs from *how it is selected*:
 
 * **Compressors** — every method of the paper's evaluation (``"epic"``,
   ``"fv"``, ``"sd"``, ``"td"``, ``"gc"``) registers its
   :class:`~repro.api.compressor.Compressor` class, so benchmarks iterate
   methods by name with no per-method glue.
 * **Kernel backends** — the reproject-match implementations (``"ref"``,
-  ``"pallas"``) register their callables; ``TSRCConfig.backend`` is no
-  longer a raw string compared inside the op but a registry key, so new
-  backends (and test doubles) plug in without touching the dispatcher.
+  ``"pallas"``, ``"fused"``) register their callables;
+  ``TSRCConfig.backend`` is no longer a raw string compared inside the
+  op but a registry key, so new backends (and test doubles) plug in
+  without touching the dispatcher.  A backend callable may additionally
+  carry a ``fused_match`` attribute (see
+  ``kernels/reproject_match/fused.py``) which the TSRC step uses, when
+  present, to run match + thresholds + patch-update mask as one fused
+  kernel.
+* **Frame stages** — the pluggable per-frame pipeline steps
+  (:mod:`repro.api.stages`): ``"bypass"``, ``"depth"``, ``"saliency"``,
+  ``"tsrc"``, the baselines' ``"select.*"``/``"retain"``.  Graph
+  builders construct stages by registry name, so new stages (ablation
+  scenarios, alternative modules) slot into any pipeline without
+  editing its scan body.
 
 This module is intentionally dependency-light (stdlib only): kernel
 modules import it at import time, so it must not pull in the compressor
@@ -18,10 +29,11 @@ implementations (which import the kernels).
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 _COMPRESSORS: Dict[str, type] = {}
 _KERNEL_BACKENDS: Dict[str, Callable] = {}
+_STAGES: Dict[str, Callable] = {}
 
 
 def register_compressor(name: str) -> Callable[[type], type]:
@@ -86,7 +98,83 @@ def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(_KERNEL_BACKENDS))
 
 
+def validate_backend(name: str) -> str:
+    """Fail-fast check that ``name`` is a registered kernel backend.
+
+    Raises ``KeyError`` listing the available registry keys — called at
+    config construction time (``EPICConfig`` / ``TSRCConfig``) so a typo
+    surfaces immediately instead of deep inside a jitted scan.
+    """
+    _ensure_builtin_backends()
+    if name not in _KERNEL_BACKENDS:
+        raise KeyError(
+            f"unknown kernel backend {name!r}; "
+            f"available: {sorted(_KERNEL_BACKENDS)}"
+        )
+    return name
+
+
+class BackendValidatedConfig:
+    """Mixin for NamedTuple configs carrying a kernel ``backend`` field.
+
+    Validates the backend against the registry on construction AND on
+    ``_replace`` (namedtuple's ``_replace`` rebuilds through ``_make``,
+    which bypasses ``__new__`` — without the override, the idiomatic
+    sweep path ``cfg._replace(backend=...)`` would skip validation).
+    Use as ``class MyConfig(BackendValidatedConfig, _MyConfigBase)``.
+    """
+
+    __slots__ = ()
+
+    def __new__(cls, *args, **kwargs):
+        self = super().__new__(cls, *args, **kwargs)
+        validate_backend(self.backend)
+        return self
+
+    def _replace(self, **kwargs):
+        out = super()._replace(**kwargs)
+        validate_backend(out.backend)
+        return out
+
+
 def _ensure_builtin_backends() -> None:
     # The built-in backends register themselves when their op module
-    # imports; pull it in so lookups work regardless of import order.
-    from repro.kernels.reproject_match import ops  # noqa: F401
+    # imports; pull them in so lookups work regardless of import order.
+    from repro.kernels.reproject_match import fused, ops  # noqa: F401
+
+
+def register_stage(name: str) -> Callable[[Any], Any]:
+    """Decorator: register a FrameStage class/factory under ``name``."""
+
+    def deco(factory: Any) -> Any:
+        _STAGES[name] = factory
+        return factory
+
+    return deco
+
+
+def get_stage(name: str) -> Callable:
+    """Look up a FrameStage factory by registry name (e.g. ``"tsrc"``)."""
+    _ensure_builtin_stages()
+    try:
+        return _STAGES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown frame stage {name!r}; "
+            f"available: {sorted(_STAGES)}"
+        ) from None
+
+
+def make_stage(name: str, *args: Any, **kwargs: Any) -> Any:
+    """Construct a registered stage: ``get_stage(name)(*args, **kwargs)``."""
+    return get_stage(name)(*args, **kwargs)
+
+
+def available_stages() -> Tuple[str, ...]:
+    _ensure_builtin_stages()
+    return tuple(sorted(_STAGES))
+
+
+def _ensure_builtin_stages() -> None:
+    # The built-in stages register themselves on import.
+    from repro.core import frame_stages  # noqa: F401

@@ -1,0 +1,327 @@
+"""Registered FrameStage implementations for EPIC and the baselines.
+
+Each class wraps one step of a per-frame pipeline behind the
+:class:`repro.api.stages.FrameStage` protocol and registers itself in
+the stage registry, so graph builders (``core/pipeline.build_epic_graph``,
+the baseline compositions in ``api/compressor``) construct them by name:
+
+  ``bypass``     — frame-bypass gate (paper Sections 3.5 / 4.2); writes
+                   ``ctx.process`` and the per-frame diff.
+  ``depth``      — FastDepth-lite prediction, or the oracle depth track.
+  ``saliency``   — HIR gaze-conditioned saliency (SRD, Section 3.3), or
+                   all-salient in pure temporal mode.
+  ``tsrc``       — the TSRC update against the DC buffer (Section 3.4);
+                   owns the buffer state.
+  ``select.fv``/``select.sd``/``select.td``/``select.gc``
+                 — the baselines' per-frame patch selection policies.
+  ``retain``     — fixed-capacity append of selected patches (the
+                   baselines' retained-buffer state).
+
+The stage bodies are the *same ops in the same order* as the former
+monolithic scan bodies — bit-identical outputs are pinned against
+pre-refactor goldens in ``tests/test_stages.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import register_stage
+from repro.api.stages import FrameCtx
+from repro.core import dc_buffer as dcb
+from repro.core import depth as depth_mod
+from repro.core import frame_bypass, hir
+from repro.core import geometry as geo
+from repro.core import retained as ret
+from repro.core import tsrc as tsrc_mod
+
+Array = jax.Array
+
+
+class BypassFrameStats(NamedTuple):
+    processed: Array  # bool — passed the gate
+    diff: Array  # mean-abs RGB difference vs the reference frame
+
+
+@register_stage("bypass")
+class BypassStage:
+    """Frame Bypass Check: gates every downstream stage via ``ctx.process``."""
+
+    name = "bypass"
+
+    def __init__(self, cfg: frame_bypass.BypassConfig, frame_hw):
+        self.cfg = cfg
+        self.frame_hw = tuple(frame_hw)
+
+    def init(self) -> frame_bypass.BypassState:
+        return frame_bypass.init(self.frame_hw)
+
+    def apply(self, state, ctx: FrameCtx):
+        state, process, diff = frame_bypass.check(state, ctx.frame, self.cfg)
+        ctx = ctx._replace(process=process).with_stat(
+            self.name, BypassFrameStats(process, diff)
+        )
+        return state, ctx
+
+
+@register_stage("depth")
+class DepthStage:
+    """Depth estimation (Section 3.2), once per processed frame.
+
+    ``params=None`` selects the oracle mode: the chunk's ground-truth
+    depth track is passed through (ablation isolation, Section 5).
+    """
+
+    name = "depth"
+
+    def __init__(self, params: Any = None):
+        self.params = params
+
+    def init(self) -> None:
+        return None
+
+    def apply(self, state, ctx: FrameCtx):
+        if self.params is not None:
+            dmap = depth_mod.predict_fullres(self.params, ctx.frame)
+        else:
+            if ctx.depth is None:
+                raise ValueError(
+                    "depth stage in oracle mode requires the chunk's depth "
+                    "track (models.depth_params is None and chunk.depth is "
+                    "None)"
+                )
+            dmap = ctx.depth
+        return state, ctx._replace(dmap=dmap)
+
+
+@register_stage("saliency")
+class SaliencyStage:
+    """HIR saliency (SRD, Section 3.3); all-salient when ``params=None``."""
+
+    name = "saliency"
+
+    def __init__(self, params: Any, grid: int, frame_hw):
+        self.params = params
+        self.grid = grid
+        self.frame_hw = tuple(frame_hw)
+
+    def init(self) -> None:
+        return None
+
+    def apply(self, state, ctx: FrameCtx):
+        n_patches = self.grid * self.grid
+        if self.params is not None:
+            rgb64 = depth_mod.resize_image(ctx.frame, hir.HIR_INPUT)
+            heat = hir.gaze_heatmap(ctx.gaze, hir.HIR_INPUT, self.frame_hw)
+            logits = hir.forward(
+                self.params, rgb64[None], heat[None], self.grid
+            )[0].reshape(-1)
+            sal_mask = hir.binary_saliency(logits)
+            sal_score = jax.nn.sigmoid(logits)
+        else:
+            sal_mask = jnp.ones((n_patches,), bool)
+            sal_score = jnp.ones((n_patches,), jnp.float32)
+        return state, ctx._replace(sal_mask=sal_mask, sal_score=sal_score)
+
+
+@register_stage("tsrc")
+class TSRCStage:
+    """TSRC update (Section 3.4): owns the DC buffer state."""
+
+    name = "tsrc"
+
+    def __init__(
+        self,
+        buf_cfg: dcb.DCBufferConfig,
+        tsrc_cfg: tsrc_mod.TSRCConfig,
+        intr: geo.Intrinsics,
+    ):
+        self.buf_cfg = buf_cfg
+        self.tsrc_cfg = tsrc_cfg
+        self.intr = intr
+
+    def init(self) -> dcb.DCBuffer:
+        return dcb.init(self.buf_cfg)
+
+    def apply(self, buf: dcb.DCBuffer, ctx: FrameCtx):
+        buf, tstats = tsrc_mod.tsrc_step(
+            buf,
+            self.buf_cfg,
+            self.tsrc_cfg,
+            ctx.frame,
+            ctx.dmap,
+            ctx.sal_mask,
+            ctx.sal_score,
+            ctx.pose,
+            ctx.t,
+            self.intr,
+        )
+        return buf, ctx.with_stat(self.name, tstats)
+
+
+# ---------------------------------------------------------------------------
+# Baseline stages: per-frame patch selection + fixed-capacity retention.
+# ---------------------------------------------------------------------------
+
+
+@register_stage("select.fv")
+class SelectFullVideo:
+    """FV: every patch of every frame (memory-unbounded reference)."""
+
+    name = "select.fv"
+
+    def __init__(self, patch: int):
+        self.patch = patch
+
+    def init(self) -> None:
+        return None
+
+    def apply(self, state, ctx: FrameCtx):
+        patches, origins = tsrc_mod.extract_patches(ctx.frame, self.patch)
+        return state, ctx._replace(
+            patches=patches, origins=origins, keep=jnp.ones((), bool)
+        )
+
+
+@register_stage("select.td")
+class SelectTemporalDown:
+    """TD: keep every ``stride``-th frame at full resolution."""
+
+    name = "select.td"
+
+    def __init__(self, patch: int, stride: int, n_keep: int):
+        self.patch = patch
+        self.stride = stride
+        self.n_keep = n_keep
+
+    def init(self) -> None:
+        return None
+
+    def apply(self, state, ctx: FrameCtx):
+        patches, origins = tsrc_mod.extract_patches(ctx.frame, self.patch)
+        keep = (ctx.t % self.stride == 0) & (
+            ctx.t // self.stride < self.n_keep
+        )
+        return state, ctx._replace(
+            patches=patches, origins=origins, keep=keep
+        )
+
+
+@register_stage("select.sd")
+class SelectSpatialDown:
+    """SD: every frame, downsampled to a ``gg x gg`` patch grid."""
+
+    name = "select.sd"
+
+    def __init__(self, patch: int, gg: int, frame_hw):
+        self.patch = patch
+        self.gg = gg
+        self.frame_hw = tuple(frame_hw)
+
+    def init(self) -> None:
+        return None
+
+    def apply(self, state, ctx: FrameCtx):
+        h = self.frame_hw[0]
+        new_hw = self.gg * self.patch
+        small = jax.image.resize(
+            ctx.frame, (new_hw, new_hw, 3), method="bilinear"
+        )
+        patches, origins = tsrc_mod.extract_patches(small, self.patch)
+        return state, ctx._replace(
+            patches=patches,
+            origins=origins * (h / new_hw),
+            keep=jnp.ones((), bool),
+        )
+
+
+@register_stage("select.gc")
+class SelectGazeCrop:
+    """GC: a budget-sized square crop centred at the gaze point."""
+
+    name = "select.gc"
+
+    def __init__(self, patch: int, crop: int, frame_hw):
+        self.patch = patch
+        self.crop = crop
+        self.frame_hw = tuple(frame_hw)
+
+    def init(self) -> None:
+        return None
+
+    def apply(self, state, ctx: FrameCtx):
+        h, w = self.frame_hw
+        crop = self.crop
+        cy = jnp.clip(ctx.gaze[1] - crop / 2, 0, h - crop).astype(jnp.int32)
+        cx = jnp.clip(ctx.gaze[0] - crop / 2, 0, w - crop).astype(jnp.int32)
+        region = jax.lax.dynamic_slice(
+            ctx.frame, (cy, cx, 0), (crop, crop, 3)
+        )
+        patches, origins = tsrc_mod.extract_patches(region, self.patch)
+        corner = jnp.stack([cy, cx]).astype(jnp.float32)
+        return state, ctx._replace(
+            patches=patches,
+            origins=origins + corner,
+            keep=jnp.ones((), bool),
+        )
+
+
+class RetainFrameStats(NamedTuple):
+    """Per-frame counters of the retention stage (mirrors the shape
+    contract of the EPIC ``FrameStats``)."""
+
+    processed: Array  # bool — frame contributed retained patches
+    n_inserted: Array  # int32 — patches written this frame
+    buffer_valid: Array  # int32 — occupancy after the frame
+
+
+@register_stage("retain")
+class RetainStage:
+    """Fixed-capacity append of the selected patches (saturating cursor).
+
+    State is ``(RetainedPatches, cursor)``; the write is a masked
+    scatter with OOB slots dropped, so the stage stays static-shaped
+    regardless of how many patches the select stage proposes.
+    """
+
+    name = "retain"
+
+    def __init__(self, capacity: int, patch: int):
+        self.capacity = capacity
+        self.patch = patch
+
+    def init(self) -> Tuple[ret.RetainedPatches, Array]:
+        cap, p = self.capacity, self.patch
+        rp = ret.RetainedPatches(
+            rgb=jnp.zeros((cap, p, p, 3), jnp.float32),
+            t=jnp.zeros((cap,), jnp.float32),
+            origin=jnp.zeros((cap, 2), jnp.float32),
+            valid=jnp.zeros((cap,), bool),
+        )
+        return rp, jnp.zeros((), jnp.int32)
+
+    def apply(self, state, ctx: FrameCtx):
+        rp, cursor = state
+        cap = self.capacity
+        patches, origins, keep = ctx.patches, ctx.origins, ctx.keep
+        k = patches.shape[0]
+        idx = cursor + jnp.arange(k, dtype=jnp.int32)
+        ok = keep & (idx < cap)
+        slot = jnp.where(ok, idx, cap)  # OOB slots -> dropped
+        t_f = ctx.t.astype(jnp.float32)
+        rp = rp._replace(
+            rgb=rp.rgb.at[slot].set(patches, mode="drop"),
+            t=rp.t.at[slot].set(jnp.full((k,), t_f), mode="drop"),
+            origin=rp.origin.at[slot].set(origins, mode="drop"),
+            valid=rp.valid.at[slot].set(jnp.ones((k,), bool), mode="drop"),
+        )
+        cursor = cursor + keep.astype(jnp.int32) * k
+        stats = RetainFrameStats(
+            processed=keep,
+            n_inserted=jnp.sum(ok.astype(jnp.int32)),
+            buffer_valid=jnp.minimum(cursor, cap),
+        )
+        return (rp, cursor), ctx.with_stat(self.name, stats)

@@ -8,6 +8,15 @@ Processes an egocentric video stream frame-by-frame (``jax.lax.scan``):
       -> HIR saliency (SRD)
       -> TSRC against the DC buffer (dark-gray steps 1-3)
 
+The per-frame body is a **stage graph** (:mod:`repro.api.stages`):
+:func:`build_epic_graph` composes the registered ``bypass`` /
+``depth`` / ``saliency`` / ``tsrc`` stages, with the three heavy stages
+gated behind the bypass check exactly as the paper's figure draws them.
+``process_frame`` / ``scan_frames`` / ``compress_stream`` are thin
+adapters keeping the public ``EPICState`` / ``FrameStats`` contract —
+bit-identical to the pre-stage-graph pipeline (goldens in
+``tests/test_stages.py``).
+
 The whole pipeline is a pure function of (stream, models, config): it can be
 jit'ed, vmapped over a *batch of streams* (the datacenter deployment mode —
 one TPU pod ingesting thousands of glasses streams), and differentiated
@@ -25,16 +34,18 @@ from typing import Any, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import registry as _registry
+from repro.api.stages import Gated, StageGraph
 from repro.core import dc_buffer as dcb
 from repro.core import depth as depth_mod
-from repro.core import frame_bypass, hir
+from repro.core import frame_bypass
 from repro.core import geometry as geo
 from repro.core import tsrc as tsrc_mod
 
 Array = jax.Array
 
 
-class EPICConfig(NamedTuple):
+class _EPICConfig(NamedTuple):
     frame_hw: Tuple[int, int] = (128, 128)
     patch: int = 16
     capacity: int = 192
@@ -88,6 +99,17 @@ class EPICConfig(NamedTuple):
         return frame_bypass.BypassConfig(gamma=self.gamma, theta=self.theta)
 
 
+class EPICConfig(_registry.BackendValidatedConfig, _EPICConfig):
+    """EPIC pipeline configuration (see field comments above).
+
+    Construction (and ``_replace``) fails fast on an unregistered
+    ``backend`` — the error lists the available reproject-match
+    registry keys instead of surfacing deep inside the jitted scan.
+    """
+
+    __slots__ = ()
+
+
 class EPICModels(NamedTuple):
     depth_params: Any = None  # None -> ground-truth depth oracle mode
     hir_params: Any = None  # None -> all-salient (pure temporal mode)
@@ -123,6 +145,79 @@ def _zero_tsrc_stats(buf: dcb.DCBuffer) -> tsrc_mod.TSRCStats:
     return tsrc_mod.TSRCStats(z, z, z, z, z, dcb.count_valid(buf))
 
 
+def build_epic_graph(
+    cfg: EPICConfig, models: EPICModels = EPICModels()
+) -> StageGraph:
+    """Compose EPIC's per-frame pipeline as a stage graph (Figure 3c).
+
+    ``bypass`` runs unconditionally and writes the gate; ``depth`` →
+    ``saliency`` → ``tsrc`` are gated behind it under one ``lax.cond``
+    (bypassed frames execute none of their compute).  Stages are
+    constructed through the registry, so alternative implementations
+    slot in by name; the graph state flattens to exactly the
+    :class:`EPICState` leaves ``(bypass, buf, t)``.
+    """
+    make = _registry.make_stage
+    gated_stages = [
+        make("depth", params=models.depth_params),
+        make(
+            "saliency",
+            params=models.hir_params,
+            grid=cfg.grid,
+            frame_hw=cfg.frame_hw,
+        ),
+        make(
+            "tsrc",
+            buf_cfg=cfg.buffer_config(),
+            tsrc_cfg=cfg.tsrc_config(),
+            intr=cfg.intrinsics(),
+        ),
+    ]
+    tsrc_idx = next(
+        i for i, s in enumerate(gated_stages) if s.name == "tsrc"
+    )
+    gated = Gated(
+        gated_stages,
+        # A bypassed frame leaves the buffer untouched and reports the
+        # zero TSRC counters (buffer occupancy passes through).
+        skip_stats=lambda states, ctx: {
+            "tsrc": _zero_tsrc_stats(states[tsrc_idx])
+        },
+    )
+
+    def finalize(ctx) -> FrameStats:
+        b = ctx.stats["bypass"]
+        t = ctx.stats["tsrc"]
+        return FrameStats(
+            processed=b.processed,
+            bypass_diff=b.diff,
+            n_salient=t.n_salient,
+            n_matched=t.n_matched,
+            n_inserted=t.n_inserted,
+            n_bbox_checks=t.n_bbox_checks,
+            n_full_checks=t.n_full_checks,
+            buffer_valid=t.buffer_valid,
+        )
+
+    return StageGraph(
+        [
+            make("bypass", cfg=cfg.bypass_config(), frame_hw=cfg.frame_hw),
+            gated,
+        ],
+        finalize=finalize,
+    )
+
+
+def _to_graph_state(graph: StageGraph, state: EPICState):
+    return graph.pack_state({"bypass": state.bypass, "tsrc": state.buf},
+                            state.t)
+
+
+def _from_graph_state(graph: StageGraph, gstate) -> EPICState:
+    named, t = graph.unpack_state(gstate)
+    return EPICState(bypass=named["bypass"], buf=named["tsrc"], t=t)
+
+
 def process_frame(
     state: EPICState,
     frame: Array,
@@ -132,61 +227,12 @@ def process_frame(
     models: EPICModels,
     cfg: EPICConfig,
 ) -> Tuple[EPICState, FrameStats]:
-    """Run the full EPIC algorithm on a single frame."""
-    intr = cfg.intrinsics()
-    new_bypass, process, bdiff = frame_bypass.check(
-        state.bypass, frame, cfg.bypass_config()
+    """Run the full EPIC algorithm on a single frame (graph adapter)."""
+    graph = build_epic_graph(cfg, models)
+    gstate, stats = graph.step_frame(
+        _to_graph_state(graph, state), frame, pose, gaze, depth_gt
     )
-
-    def do_process(buf: dcb.DCBuffer):
-        # --- Depth (Section 3.2): once per processed frame. ----------------
-        if models.depth_params is not None:
-            dmap = depth_mod.predict_fullres(models.depth_params, frame)
-        else:
-            assert depth_gt is not None, "oracle mode requires depth_gt"
-            dmap = depth_gt
-        # --- SRD / HIR (Section 3.3). ---------------------------------------
-        if models.hir_params is not None:
-            rgb64 = depth_mod.resize_image(frame, hir.HIR_INPUT)
-            heat = hir.gaze_heatmap(gaze, hir.HIR_INPUT, cfg.frame_hw)
-            logits = hir.forward(
-                models.hir_params, rgb64[None], heat[None], cfg.grid
-            )[0].reshape(-1)
-            sal_mask = hir.binary_saliency(logits)
-            sal_score = jax.nn.sigmoid(logits)
-        else:
-            sal_mask = jnp.ones((cfg.n_patches,), bool)
-            sal_score = jnp.ones((cfg.n_patches,), jnp.float32)
-        # --- TSRC (Section 3.4). --------------------------------------------
-        return tsrc_mod.tsrc_step(
-            buf,
-            cfg.buffer_config(),
-            cfg.tsrc_config(),
-            frame,
-            dmap,
-            sal_mask,
-            sal_score,
-            pose,
-            state.t,
-            intr,
-        )
-
-    def skip(buf: dcb.DCBuffer):
-        return buf, _zero_tsrc_stats(buf)
-
-    buf, tstats = jax.lax.cond(process, do_process, skip, state.buf)
-
-    stats = FrameStats(
-        processed=process,
-        bypass_diff=bdiff,
-        n_salient=tstats.n_salient,
-        n_matched=tstats.n_matched,
-        n_inserted=tstats.n_inserted,
-        n_bbox_checks=tstats.n_bbox_checks,
-        n_full_checks=tstats.n_full_checks,
-        buffer_valid=tstats.buffer_valid,
-    )
-    return EPICState(new_bypass, buf, state.t + 1.0), stats
+    return _from_graph_state(graph, gstate), stats
 
 
 def scan_frames(
@@ -205,20 +251,13 @@ def scan_frames(
     bit-identical to one big scan — unbounded streams ingest in bounded
     memory (see ``repro.api.EPICCompressor``).
     """
-    use_gt = models.depth_params is None
-    if use_gt and depth_gt is None:
+    if models.depth_params is None and depth_gt is None:
         raise ValueError("need depth_gt when no depth model is given")
-
-    def step(state, xs):
-        if use_gt:
-            frame, pose, gaze, dgt = xs
-        else:
-            frame, pose, gaze = xs
-            dgt = None
-        return process_frame(state, frame, pose, gaze, dgt, models, cfg)
-
-    xs = (frames, poses, gazes, depth_gt) if use_gt else (frames, poses, gazes)
-    return jax.lax.scan(step, state, xs)
+    graph = build_epic_graph(cfg, models)
+    gstate, stats = graph.scan(
+        _to_graph_state(graph, state), frames, poses, gazes, depth_gt
+    )
+    return _from_graph_state(graph, gstate), stats
 
 
 def compress_stream(

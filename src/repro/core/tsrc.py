@@ -25,6 +25,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.api.registry import BackendValidatedConfig, get_backend
 from repro.core import dc_buffer as dcb
 from repro.core import geometry as geo
 from repro.kernels.reproject_match.ops import reproject_match
@@ -32,12 +33,23 @@ from repro.kernels.reproject_match.ops import reproject_match
 Array = jax.Array
 
 
-class TSRCConfig(NamedTuple):
+class _TSRCConfig(NamedTuple):
     tau: float = 0.08  # RGB-difference match threshold (paper's tau)
     o_min: float = 0.5  # min bbox overlap fraction of a patch
     c_min: float = 0.6  # min warped-pixel coverage of an entry
     window: int = 64  # reproject-match sampling window
-    backend: str = "ref"  # reproject-match backend
+    backend: str = "ref"  # reproject-match backend (registry key)
+
+
+class TSRCConfig(BackendValidatedConfig, _TSRCConfig):
+    """TSRC thresholds + backend selection.
+
+    Construction (and ``_replace``) fails fast on an unregistered
+    ``backend``, listing the available reproject-match registry keys —
+    a typo would otherwise only surface deep inside the jitted scan.
+    """
+
+    __slots__ = ()
 
 
 class TSRCStats(NamedTuple):
@@ -111,24 +123,46 @@ def tsrc_step(
 
     # --- TRD: warp every buffered entry into the current view. -------------
     t_rel = jax.vmap(lambda p: geo.relative_transform(p, pose))(buf.pose)
-    diff, coverage, bbox = reproject_match(
-        buf.rgb,
-        buf.depth,
-        buf.origin,
-        t_rel,
-        frame,
-        intr,
-        window=cfg.window,
-        backend=cfg.backend,
-    )
-
-    # --- Spatial association: warped-entry bbox vs patch grid. -------------
-    overlap = geo.bbox_overlap_fraction(
-        bbox[:, None, :], origins[None, :, :], patch
-    )  # (N, M)
-
-    entry_ok = (diff <= cfg.tau) & (coverage >= cfg.c_min) & buf.valid
-    match_ok = entry_ok[:, None] & (overlap >= cfg.o_min) & saliency_mask[None, :]
+    backend_fn = get_backend(cfg.backend)
+    fused_match = getattr(backend_fn, "fused_match", None)
+    if fused_match is not None:
+        # Capability-based dispatch: a backend may fuse warp + match +
+        # occlusion/consistency thresholds + the per-(entry, patch)
+        # update mask into one kernel (see reproject_match/fused.py).
+        # New fused backends slot in here via registration alone — the
+        # per-op dispatcher in kernels/reproject_match/ops.py and this
+        # step body both stay untouched.
+        diff, coverage, bbox, pair_ok, overlap_ok = fused_match(
+            buf.rgb,
+            buf.depth,
+            buf.origin,
+            t_rel,
+            frame,
+            intr,
+            window=cfg.window,
+            tau=cfg.tau,
+            o_min=cfg.o_min,
+            c_min=cfg.c_min,
+        )
+        match_ok = pair_ok & buf.valid[:, None] & saliency_mask[None, :]
+    else:
+        diff, coverage, bbox = reproject_match(
+            buf.rgb,
+            buf.depth,
+            buf.origin,
+            t_rel,
+            frame,
+            intr,
+            window=cfg.window,
+            backend=cfg.backend,
+        )
+        # --- Spatial association: warped-entry bbox vs patch grid. ---------
+        overlap = geo.bbox_overlap_fraction(
+            bbox[:, None, :], origins[None, :, :], patch
+        )  # (N, M)
+        overlap_ok = overlap >= cfg.o_min
+        entry_ok = (diff <= cfg.tau) & (coverage >= cfg.c_min) & buf.valid
+        match_ok = entry_ok[:, None] & overlap_ok & saliency_mask[None, :]
     idx, matched = dcb.newest_match(match_ok, buf.t, buf.valid)
 
     # --- Popularity bump for matches (step 3). ------------------------------
@@ -147,9 +181,7 @@ def tsrc_step(
 
     # Energy-model counters: the ASIC fully reprojects only entries whose
     # bbox overlaps *some* salient patch (we compute densely; it doesn't).
-    any_overlap = jnp.any(
-        (overlap >= cfg.o_min) & saliency_mask[None, :], axis=1
-    )
+    any_overlap = jnp.any(overlap_ok & saliency_mask[None, :], axis=1)
     stats = TSRCStats(
         n_salient=jnp.sum(saliency_mask.astype(jnp.int32)),
         n_matched=jnp.sum(matched.astype(jnp.int32)),

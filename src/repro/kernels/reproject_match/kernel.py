@@ -51,20 +51,27 @@ Array = jax.Array
 _EPS = 1e-6
 
 
-def _reproject_match_kernel(
+def _entry_scores(
     intr_ref,  # (3,) [f, cx, cy] camera intrinsics
     rgb_ref,  # (1, P, P, 3) entry pixels I_c
     depth_ref,  # (1, P, P) entry depth d_c
     origin_ref,  # (1, 2) entry top-left (row, col)
     trel_ref,  # (1, 4, 4) source->current transform
     frame_ref,  # (H, W, 3) current frame F_t (full block)
-    out_ref,  # (1, 8) packed [diff, coverage, bbox(4), pad(2)]
     *,
     patch: int,
     window: int,
     frame_h: int,
     frame_w: int,
 ):
+    """Shared kernel body: warp one entry, sample, and score it.
+
+    Returns the per-entry scalars ``(diff, coverage, vmin, umin, vmax,
+    umax)``.  Factored out of :func:`_reproject_match_kernel` so the
+    fused TSRC kernel (``fused.py``) runs the *same ops in the same
+    order* — its diff/coverage/bbox outputs are bitwise identical to
+    this kernel's.
+    """
     p = patch
     k = p * p
     intr_f = intr_ref[0]
@@ -151,7 +158,35 @@ def _reproject_match_kernel(
     diff = jnp.sum(absdiff * valid) / denom
     diff = jnp.where(nvalid > 0, diff, 1.0)
     coverage = jnp.where(bbox_valid, nvalid / float(k), 0.0)
+    return diff, coverage, vmin, umin, vmax, umax
 
+
+def _reproject_match_kernel(
+    intr_ref,
+    rgb_ref,
+    depth_ref,
+    origin_ref,
+    trel_ref,
+    frame_ref,
+    out_ref,  # (1, 8) packed [diff, coverage, bbox(4), pad(2)]
+    *,
+    patch: int,
+    window: int,
+    frame_h: int,
+    frame_w: int,
+):
+    diff, coverage, vmin, umin, vmax, umax = _entry_scores(
+        intr_ref,
+        rgb_ref,
+        depth_ref,
+        origin_ref,
+        trel_ref,
+        frame_ref,
+        patch=patch,
+        window=window,
+        frame_h=frame_h,
+        frame_w=frame_w,
+    )
     out_ref[0, 0] = diff
     out_ref[0, 1] = coverage
     out_ref[0, 2] = vmin

@@ -41,6 +41,19 @@ def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
+def make_stream_mesh(n_devices: int = 0) -> jax.sharding.Mesh:
+    """1-D mesh over the ``streams`` axis for sharded ``StreamPool``
+    serving (pod-scale multi-stream ingest).
+
+    ``n_devices=0`` uses every available device; a 1-device mesh is
+    valid (and bit-identical to the vmapped pool), so the same serving
+    code runs unchanged from a CPU laptop to a pod slice.
+    """
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    return jax.sharding.Mesh(devs[:n], ("streams",))
+
+
 def mesh_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
     return tuple(mesh.axis_names)
 

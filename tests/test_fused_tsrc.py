@@ -1,0 +1,151 @@
+"""Fused Pallas TSRC backend parity (interpret mode).
+
+The ``fused`` backend must (a) appear in the reproject-match registry
+and serve the standard (diff, coverage, bbox) contract through the
+untouched dispatcher, (b) agree with the ``ref`` oracle and bitwise
+with the ``pallas`` kernel, (c) produce in-kernel threshold/update-mask
+rows consistent with composing the same thresholds outside the kernel,
+and (d) drive the full EPIC pipeline to the same results as the
+composed backends."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import geometry as geo
+from repro.core import pipeline as P
+from repro.core import tsrc as tsrc_mod
+from repro.data import synthetic as SYN
+from repro.kernels.reproject_match.fused import reproject_match_fused
+from repro.kernels.reproject_match.kernel import reproject_match_pallas
+from repro.kernels.reproject_match.ops import reproject_match
+from repro.kernels.reproject_match.ref import reproject_match_ref
+
+
+def _inputs(key, n, p, hw):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    rgb = jax.random.uniform(k1, (n, p, p, 3))
+    depth = jax.random.uniform(k2, (n, p, p), minval=1.0, maxval=4.0)
+    oy = jax.random.randint(k3, (n,), 0, hw - p).astype(jnp.float32)
+    ox = jax.random.randint(k4, (n,), 0, hw - p).astype(jnp.float32)
+    origin = jnp.stack([oy, ox], -1)
+    angles = jax.random.normal(k5, (n, 3)) * 0.05
+    trans = jax.random.normal(k1, (n, 3)) * 0.1
+    t_rel = geo.pose_from_rt(geo.rotation_xyz(angles), trans)
+    frame = jax.random.uniform(k2, (hw, hw, 3))
+    intr = geo.Intrinsics.create(0.8 * hw, hw / 2.0, hw / 2.0)
+    return rgb, depth, origin, t_rel, frame, intr
+
+
+class TestRegistry:
+    def test_fused_registered(self):
+        assert "fused" in api.available_backends()
+
+    def test_dispatches_through_untouched_op(self):
+        """backend="fused" flows through ops.reproject_match purely via
+        the registry — same contract as ref/pallas."""
+        args = _inputs(jax.random.PRNGKey(3), 4, 16, 64)
+        d, c, b = reproject_match(*args, window=32, backend="fused")
+        d0, c0, b0 = reproject_match(*args, window=32, backend="ref")
+        assert d.shape == d0.shape == (4,)
+        np.testing.assert_allclose(d, d0, atol=1e-5)
+        np.testing.assert_allclose(c, c0, atol=1e-5)
+
+    def test_capability_attribute(self):
+        fn = api.get_backend("fused")
+        assert callable(getattr(fn, "fused_match"))
+        assert getattr(api.get_backend("ref"), "fused_match", None) is None
+
+
+class TestOpParity:
+    @pytest.mark.parametrize(
+        "n,p,hw,window", [(4, 16, 128, 32), (7, 16, 128, 64), (1, 8, 64, 16)]
+    )
+    def test_matches_ref(self, n, p, hw, window):
+        args = _inputs(jax.random.PRNGKey(n * 7 + p), n, p, hw)
+        d0, c0, b0 = reproject_match_ref(*args, window)
+        d, c, b, _, _ = reproject_match_fused(
+            *args, window=window, interpret=True
+        )
+        np.testing.assert_allclose(d0, d, atol=1e-5)
+        np.testing.assert_allclose(c0, c, atol=1e-5)
+        np.testing.assert_allclose(b0, b, atol=1e-3)
+
+    def test_bitwise_identical_to_pallas(self):
+        """Both kernels share _entry_scores: scores must agree bit for
+        bit, not just within tolerance."""
+        args = _inputs(jax.random.PRNGKey(11), 6, 16, 128)
+        d1, c1, b1 = reproject_match_pallas(*args, window=32, interpret=True)
+        d2, c2, b2, _, _ = reproject_match_fused(
+            *args, window=32, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+    def test_match_rows_consistent_with_composition(self):
+        """In-kernel thresholds + patch-grid overlap == composing the
+        same thresholds outside the kernel from its own outputs."""
+        tau, o_min, c_min = 0.08, 0.5, 0.6
+        p = 16
+        args = _inputs(jax.random.PRNGKey(5), 6, p, 128)
+        frame = args[4]
+        d, c, b, pair_ok, overlap_ok = reproject_match_fused(
+            *args, window=32, tau=tau, o_min=o_min, c_min=c_min,
+            interpret=True,
+        )
+        _, origins = tsrc_mod.extract_patches(frame, p)
+        overlap = geo.bbox_overlap_fraction(
+            b[:, None, :], origins[None, :, :], p
+        )
+        ref_ovok = overlap >= o_min
+        ref_pair = ((d <= tau) & (c >= c_min))[:, None] & ref_ovok
+        np.testing.assert_array_equal(
+            np.asarray(overlap_ok), np.asarray(ref_ovok)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(pair_ok), np.asarray(ref_pair)
+        )
+
+    def test_shapes(self):
+        n, p, hw = 3, 16, 64
+        args = _inputs(jax.random.PRNGKey(1), n, p, hw)
+        m = (hw // p) * (hw // p)
+        d, c, b, pair_ok, overlap_ok = reproject_match_fused(
+            *args, window=32, interpret=True
+        )
+        assert d.shape == (n,) and c.shape == (n,) and b.shape == (n, 4)
+        assert pair_ok.shape == (n, m) and pair_ok.dtype == jnp.bool_
+        assert overlap_ok.shape == (n, m)
+
+
+class TestPipelineParity:
+    """EPIC end-to-end on the fused backend vs the composed backends."""
+
+    def _run(self, backend, chunk):
+        cfg = P.EPICConfig(
+            frame_hw=(64, 64), patch=16, capacity=16,
+            tau=0.10, gamma=0.015, theta=8, window=16, backend=backend,
+        )
+        comp = api.get_compressor("epic")(cfg)
+        return jax.jit(comp.step)(comp.init(), chunk)
+
+    @pytest.fixture(scope="class")
+    def chunk(self):
+        scfg = SYN.StreamConfig(n_frames=20, hw=(64, 64), n_obj=4)
+        s, _ = SYN.generate_stream(jax.random.PRNGKey(1), scfg)
+        return api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
+
+    def test_fused_pipeline_matches_ref(self, chunk):
+        sf, tf = self._run("fused", chunk)
+        sr, tr = self._run("ref", chunk)
+        for a, b in zip(jax.tree.leaves((sf, tf)), jax.tree.leaves((sr, tr))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_fused_pipeline_matches_pallas(self, chunk):
+        sf, tf = self._run("fused", chunk)
+        sp, tp = self._run("pallas", chunk)
+        for a, b in zip(jax.tree.leaves((sf, tf)), jax.tree.leaves((sp, tp))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
