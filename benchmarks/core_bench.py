@@ -1,10 +1,12 @@
 """Core streaming throughput: frames/sec + retained bytes per method.
 
 The perf-trajectory benchmark: every registered compressor (EPIC and the
-four baselines, plus EPIC on each reproject-match kernel backend) runs
-the same seeded synthetic stream through its jitted session ``step``;
-we record steady-state frames/sec (post-compile, best-of-``repeats``
-walls), the retained-representation bytes, and total wall time.
+four baselines, plus EPIC on each reproject-match kernel backend and the
+sparse-TRD prefilter path) runs the same seeded synthetic stream through
+its jitted session ``step``; we record steady-state frames/sec
+(post-compile, best-of-``repeats`` walls), the retained-representation
+bytes, each row's backend/interpret mode, and its speedup vs the dense
+``epic`` row.
 
 ``benchmarks/run.py`` writes the summary to the repo-root
 ``BENCH_core.json`` (the checked-in perf trajectory) and the full
@@ -31,25 +33,43 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 FRAME = 64
 PATCH = 16
 N_FRAMES = 40
-CAPACITY = 24
+# The paper-default DC-buffer capacity: the dense TRD warps and
+# pixel-scores all 192 entries every processed frame, which is exactly
+# the hot loop the sparse prefilter (`epic[sparse]`) exists to avoid.
+CAPACITY = 192
+# Top-K candidate budget of the sparse row (TSRCConfig.prefilter_k).
+SPARSE_K = 24
 BUDGET = 64
-# EPIC is measured once per kernel backend: the fused Pallas TSRC step
-# runs in interpret mode on CPU, so only `ref` reflects CPU steady-state
-# speed — the others track correctness-at-speed on accelerators.
-EPIC_BACKENDS = ("ref", "pallas", "fused")
+# EPIC variants: (row tag, kernel backend, prefilter_k).  The Pallas
+# backends run in interpret mode on CPU, so only the XLA rows (`ref`
+# backend) reflect CPU steady-state speed — the interpret rows track
+# correctness-at-speed for accelerator deployment (see each row's
+# `interpret` field; `speedup_vs_epic` is relative to the dense `epic`
+# row on the same device).
+EPIC_VARIANTS = (
+    ("epic", "ref", 0),
+    ("epic[sparse]", "ref", SPARSE_K),
+    ("epic[pallas]", "pallas", 0),
+    ("epic[tiled]", "pallas_tiled", 0),
+    ("epic[fused]", "fused", 0),
+)
+QUICK_TAGS = ("epic", "epic[sparse]", "epic[fused]")
+# Backends whose CPU execution is interpret-mode Pallas (not native XLA).
+_INTERPRET_BACKENDS = ("pallas", "pallas_tiled", "fused")
 
 
-def _epic_cfg(backend: str) -> P.EPICConfig:
+def _epic_cfg(backend: str, prefilter_k: int = 0) -> P.EPICConfig:
     return P.EPICConfig(
         frame_hw=(FRAME, FRAME), patch=PATCH, capacity=CAPACITY,
         tau=0.10, gamma=0.015, theta=8, window=16, backend=backend,
+        prefilter_k=prefilter_k,
     )
 
 
-def _make(name: str, backend: str = "ref"):
+def _make(name: str, backend: str = "ref", prefilter_k: int = 0):
     cls = api.get_compressor(name)
     if name == "epic":
-        return cls(_epic_cfg(backend))
+        return cls(_epic_cfg(backend, prefilter_k))
     return cls(api.BaselineConfig(
         frame_hw=(FRAME, FRAME), patch=PATCH,
         budget_patches=BUDGET, n_frames=N_FRAMES,
@@ -85,28 +105,43 @@ def run(quick: bool = False, seed: int = 0) -> Dict:
     methods: Dict[str, Dict] = {}
     for name in sorted(api.available_compressors()):
         if name == "epic":
-            for backend in EPIC_BACKENDS if not quick else ("ref", "fused"):
-                tag = "epic" if backend == "ref" else f"epic[{backend}]"
+            for tag, backend, pk in EPIC_VARIANTS:
+                if quick and tag not in QUICK_TAGS:
+                    continue
                 methods[tag] = _bench_one(
-                    _make(name, backend), chunk, repeats
+                    _make(name, backend, pk), chunk, repeats
                 )
+                methods[tag]["backend"] = backend
+                methods[tag]["interpret"] = backend in _INTERPRET_BACKENDS
+                if pk:
+                    methods[tag]["prefilter_k"] = pk
                 print(f"[core] {tag:13s} "
                       f"{methods[tag]['frames_per_sec']:9.1f} f/s  "
                       f"{methods[tag]['retained_bytes']:8d} B retained")
         else:
             methods[name] = _bench_one(_make(name), chunk, repeats)
+            methods[name]["backend"] = "xla"
+            methods[name]["interpret"] = False
             print(f"[core] {name:13s} "
                   f"{methods[name]['frames_per_sec']:9.1f} f/s  "
                   f"{methods[name]['retained_bytes']:8d} B retained")
 
+    # Self-describing trajectory: every row carries its speed relative
+    # to the dense `epic` row, so an interpret-mode Pallas row can never
+    # again read as a CPU regression without saying so.
+    epic_ms = methods["epic"]["step_ms"]
+    for m in methods.values():
+        m["speedup_vs_epic"] = round(epic_ms / m["step_ms"], 2)
+
     out = {
-        "schema": "epic-core-bench-v1",
+        "schema": "epic-core-bench-v2",
         "quick": quick,
         "protocol": {
             "n_frames": N_FRAMES,
             "frame_hw": FRAME,
             "patch": PATCH,
             "epic_capacity": CAPACITY,
+            "sparse_prefilter_k": SPARSE_K,
             "baseline_budget_patches": BUDGET,
             "timing": f"best of {repeats} jitted steps, post-compile",
             "device": jax.devices()[0].platform,

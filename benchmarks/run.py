@@ -8,7 +8,7 @@
   ablation -> compression_sweep (motion/bypass/depth ablations)
   roofline -> roofline          (40-cell dry-run roofline terms)
 
-``python -m benchmarks.run [--quick] [--only NAME]``
+``python -m benchmarks.run [--quick] [--only NAME[,NAME...]]``
 """
 
 from __future__ import annotations
@@ -24,14 +24,27 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated sub-benchmark names "
+             "(core,table1,figure6,ablation,roofline)",
+    )
     args = ap.parse_args()
 
     t0 = time.time()
     summary = {}
+    known = {"core", "table1", "figure6", "ablation", "roofline"}
+    selected = None if args.only is None else set(args.only.split(","))
+    if selected is not None and not selected <= known:
+        # Fail loudly: a typo'd/renamed name would otherwise run nothing
+        # and exit 0 — turning the ci.sh --bench-smoke lane into a no-op.
+        ap.error(
+            f"unknown --only name(s) {sorted(selected - known)}; "
+            f"known: {sorted(known)}"
+        )
 
     def want(name):
-        return args.only in (None, name)
+        return selected is None or name in selected
 
     if want("core"):
         from benchmarks import core_bench

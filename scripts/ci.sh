@@ -4,6 +4,7 @@
 #
 #   scripts/ci.sh                     # full tier-1 suite (~10 min, 2 cores)
 #   scripts/ci.sh --kernels           # Pallas interpret-mode kernel lane
+#   scripts/ci.sh --bench-smoke       # headless benchmarks/run.py --quick
 #   scripts/ci.sh tests/test_api.py   # any extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,9 +18,21 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 if [[ "${1:-}" == "--kernels" ]]; then
   # Focused kernel lane: every Pallas kernel against its oracle in
-  # interpret mode, plus the fused-TSRC backend parity suite.
+  # interpret mode, plus the fused-TSRC and sparse-TRD parity suites.
   shift
-  exec python -m pytest -q tests/test_kernels.py tests/test_fused_tsrc.py "$@"
+  exec python -m pytest -q tests/test_kernels.py tests/test_fused_tsrc.py \
+    tests/test_sparse_tsrc.py "$@"
+fi
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+  # Headless perf-path smoke (~45 s): the quick core throughput sweep
+  # (every compressor row incl. epic[sparse]) + the figure-6 energy
+  # model, with JAX_PLATFORMS forwarded above — a broken hot path is
+  # caught here rather than discovered at bench time.  Refreshes
+  # BENCH_core.json.  The slow lanes (table1/ablation, several minutes
+  # each) stay on demand: `python -m benchmarks.run --quick`.
+  shift
+  exec python -m benchmarks.run --quick --only core,figure6 "$@"
 fi
 
 exec python -m pytest -x -q "$@"

@@ -11,7 +11,8 @@ Public surface:
   get_compressor / register_compressor /
   available_compressors, get_backend /
   register_backend / available_backends /
-  validate_backend, get_stage / make_stage /
+  validate_backend / validate_prefilter_k,
+  get_stage / make_stage /
   register_stage / available_stages           (registry)
 
 See ``src/repro/api/README.md`` for the protocol contract and the
@@ -37,6 +38,7 @@ from repro.api.registry import (  # noqa: F401
     register_compressor,
     register_stage,
     validate_backend,
+    validate_prefilter_k,
 )
 from repro.api.stages import (  # noqa: F401
     FrameCtx,
@@ -75,6 +77,7 @@ __all__ = [
     "register_compressor",
     "register_stage",
     "validate_backend",
+    "validate_prefilter_k",
     "FrameCtx",
     "FrameStage",
     "Gated",

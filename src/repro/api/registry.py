@@ -7,7 +7,7 @@ Three small registries decouple *what* runs from *how it is selected*:
   :class:`~repro.api.compressor.Compressor` class, so benchmarks iterate
   methods by name with no per-method glue.
 * **Kernel backends** — the reproject-match implementations (``"ref"``,
-  ``"pallas"``, ``"fused"``) register their callables;
+  ``"pallas"``, ``"pallas_tiled"``, ``"fused"``) register their callables;
   ``TSRCConfig.backend`` is no longer a raw string compared inside the
   op but a registry key, so new backends (and test doubles) plug in
   without touching the dispatcher.  A backend callable may additionally
@@ -114,6 +114,32 @@ def validate_backend(name: str) -> str:
     return name
 
 
+def validate_prefilter_k(k: int) -> int:
+    """Fail-fast check of the sparse-TRD ``prefilter_k`` knob.
+
+    Must be a non-negative int: ``0`` selects the dense TRD path, ``K > 0``
+    the two-phase bbox-prefiltered path with at most ``K`` candidate
+    entries per frame.  Validated at config construction (like
+    ``backend``) so a bad sweep value surfaces immediately instead of
+    deep inside the jitted scan.
+    """
+    import operator
+
+    try:
+        ki = operator.index(k)
+    except TypeError:
+        raise TypeError(
+            f"prefilter_k must be an int (0 = dense TRD), "
+            f"got {type(k).__name__}"
+        ) from None
+    if ki < 0:
+        raise ValueError(
+            f"prefilter_k must be >= 0 (0 = dense TRD, K > 0 = sparse "
+            f"top-K candidate pass), got {ki}"
+        )
+    return ki
+
+
 class BackendValidatedConfig:
     """Mixin for NamedTuple configs carrying a kernel ``backend`` field.
 
@@ -121,6 +147,8 @@ class BackendValidatedConfig:
     ``_replace`` (namedtuple's ``_replace`` rebuilds through ``_make``,
     which bypasses ``__new__`` — without the override, the idiomatic
     sweep path ``cfg._replace(backend=...)`` would skip validation).
+    Configs that also carry a sparse-TRD ``prefilter_k`` field get it
+    validated on the same two paths.
     Use as ``class MyConfig(BackendValidatedConfig, _MyConfigBase)``.
     """
 
@@ -129,11 +157,15 @@ class BackendValidatedConfig:
     def __new__(cls, *args, **kwargs):
         self = super().__new__(cls, *args, **kwargs)
         validate_backend(self.backend)
+        if hasattr(self, "prefilter_k"):
+            validate_prefilter_k(self.prefilter_k)
         return self
 
     def _replace(self, **kwargs):
         out = super()._replace(**kwargs)
         validate_backend(out.backend)
+        if hasattr(out, "prefilter_k"):
+            validate_prefilter_k(out.prefilter_k)
         return out
 
 

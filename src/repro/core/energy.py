@@ -68,7 +68,9 @@ class StreamCounters:
     depth_macs: int = 0  # FastDepth MACs (int8 on Acc)
     hir_macs: int = 0  # HIR CNN MACs
     n_bbox_checks: int = 0  # bbox reprojections (16 MACs each, ~fp)
-    n_full_checks: int = 0  # full patch reprojections
+    n_full_checks: int = 0  # full patch reprojections (with the sparse
+    #   TRD path, TSRCConfig.prefilter_k > 0, this is the measured
+    #   candidate count, not a schedule estimate)
     patch_px: int = 0  # pixels per patch (P*P)
     # Storage outcome
     stored_bytes: int = 0  # final retained bytes (DC buffer / video)

@@ -55,6 +55,7 @@ class _EPICConfig(NamedTuple):
     c_min: float = 0.6
     window: int = 32
     backend: str = "ref"
+    prefilter_k: int = 0  # 0 = dense TRD; K > 0 = sparse top-K candidates
     # Frame bypass
     gamma: float = 0.02
     theta: int = 30
@@ -93,6 +94,7 @@ class _EPICConfig(NamedTuple):
             c_min=self.c_min,
             window=self.window,
             backend=self.backend,
+            prefilter_k=self.prefilter_k,
         )
 
     def bypass_config(self) -> frame_bypass.BypassConfig:
@@ -103,8 +105,10 @@ class EPICConfig(_registry.BackendValidatedConfig, _EPICConfig):
     """EPIC pipeline configuration (see field comments above).
 
     Construction (and ``_replace``) fails fast on an unregistered
-    ``backend`` — the error lists the available reproject-match
-    registry keys instead of surfacing deep inside the jitted scan.
+    ``backend`` (the error lists the available reproject-match registry
+    keys) or a negative ``prefilter_k`` — instead of surfacing deep
+    inside the jitted scan.  ``prefilter_k > 0`` selects the two-phase
+    sparse TRD path (see :class:`repro.core.tsrc.TSRCConfig`).
     """
 
     __slots__ = ()
@@ -130,6 +134,7 @@ class FrameStats(NamedTuple):
     n_bbox_checks: Array
     n_full_checks: Array
     buffer_valid: Array
+    n_prefilter_overflow: Array  # sparse-TRD top-K truncations (0 dense)
 
 
 def init_state(cfg: EPICConfig) -> EPICState:
@@ -142,7 +147,7 @@ def init_state(cfg: EPICConfig) -> EPICState:
 
 def _zero_tsrc_stats(buf: dcb.DCBuffer) -> tsrc_mod.TSRCStats:
     z = jnp.zeros((), jnp.int32)
-    return tsrc_mod.TSRCStats(z, z, z, z, z, dcb.count_valid(buf))
+    return tsrc_mod.TSRCStats(z, z, z, z, z, dcb.count_valid(buf), z)
 
 
 def build_epic_graph(
@@ -197,6 +202,7 @@ def build_epic_graph(
             n_bbox_checks=t.n_bbox_checks,
             n_full_checks=t.n_full_checks,
             buffer_valid=t.buffer_valid,
+            n_prefilter_overflow=t.n_prefilter_overflow,
         )
 
     return StageGraph(
@@ -289,6 +295,12 @@ def compress_stream(
 
 def stream_counters(cfg: EPICConfig, stats: FrameStats, *, int8_depth=True):
     """Convert scan stats into `energy.StreamCounters` for the cost model.
+
+    With ``cfg.prefilter_k > 0`` the ``n_full_checks`` feeding the
+    energy model is the *real* per-frame candidate count of the sparse
+    TRD path — the compute performed and the energy charged finally
+    agree (dense runs keep the ASIC-schedule estimate, which coincides
+    whenever no top-K truncation would occur).
 
     All per-field reductions transfer in a single ``jax.device_get``
     (one host sync) rather than one blocking ``int(...)`` per counter.

@@ -16,6 +16,12 @@ The dense-parallel formulation computes all (entry x patch) pair scores and
 selects with masks — the TPU-native replacement for the ASIC's sequential
 newest-first early-exit scan (equivalence property-tested in
 tests/test_tsrc.py).
+
+With ``TSRCConfig.prefilter_k > 0`` the expensive pixel-level compare runs
+only on the K newest entries passing the bbox prefilter (the accelerator's
+actual two-phase schedule, Section 4.1.1) — bit-identical to dense whenever
+at most K entries pass; see ``kernels/reproject_match/sparse.py`` and the
+``n_prefilter_overflow`` counter.
 """
 
 from __future__ import annotations
@@ -28,6 +34,7 @@ import jax.numpy as jnp
 from repro.api.registry import BackendValidatedConfig, get_backend
 from repro.core import dc_buffer as dcb
 from repro.core import geometry as geo
+from repro.kernels.reproject_match import sparse as sparse_mod
 from repro.kernels.reproject_match.ops import reproject_match
 
 Array = jax.Array
@@ -39,14 +46,24 @@ class _TSRCConfig(NamedTuple):
     c_min: float = 0.6  # min warped-pixel coverage of an entry
     window: int = 64  # reproject-match sampling window
     backend: str = "ref"  # reproject-match backend (registry key)
+    prefilter_k: int = 0  # 0 = dense TRD; K > 0 = sparse top-K candidates
 
 
 class TSRCConfig(BackendValidatedConfig, _TSRCConfig):
     """TSRC thresholds + backend selection.
 
     Construction (and ``_replace``) fails fast on an unregistered
-    ``backend``, listing the available reproject-match registry keys —
-    a typo would otherwise only surface deep inside the jitted scan.
+    ``backend`` (listing the available reproject-match registry keys) or
+    a negative ``prefilter_k`` — either would otherwise only surface
+    deep inside the jitted scan.
+
+    ``prefilter_k = 0`` runs the dense TRD (every valid entry fully
+    warped and pixel-scored); ``prefilter_k = K > 0`` runs the two-phase
+    sparse path of the EPIC accelerator (Section 4.1.1): a cheap corner
+    -warp bbox prefilter over all entries, then the full reproject-match
+    on only the K newest entries whose bbox overlaps a salient patch —
+    bit-identical to dense whenever at most K entries pass (see
+    ``kernels/reproject_match/sparse.py``).
     """
 
     __slots__ = ()
@@ -59,8 +76,12 @@ class TSRCStats(NamedTuple):
     n_matched: Array  # patches found redundant (popularity bumped)
     n_inserted: Array  # new DC-buffer entries
     n_bbox_checks: Array  # bbox reprojections performed (= valid entries)
-    n_full_checks: Array  # entries needing full pixel warp (bbox prefilter hit)
+    n_full_checks: Array  # entries fully pixel-scored (sparse: real
+    #   candidate count; dense: entries the ASIC *would* score, i.e.
+    #   bbox-overlapping a salient patch — the two agree when no
+    #   prefilter truncation occurs)
     buffer_valid: Array  # occupancy after the step
+    n_prefilter_overflow: Array  # passing entries truncated by top-K (0 dense)
 
 
 def extract_patches(frame: Array, patch: int) -> Tuple[Array, Array]:
@@ -121,11 +142,49 @@ def tsrc_step(
     patch = buf.patch_size
     patches, origins = extract_patches(frame, patch)
 
-    # --- TRD: warp every buffered entry into the current view. -------------
-    t_rel = jax.vmap(lambda p: geo.relative_transform(p, pose))(buf.pose)
+    # --- TRD: warp buffered entries into the current view. ------------------
+    # One analytic pose inversion, then a broadcast batch-multiply —
+    # inv(U_t) is entry-independent, so inverting it N times under vmap
+    # (the old formulation) was pure waste.
+    t_rel = geo.invert_pose(pose) @ buf.pose
     backend_fn = get_backend(cfg.backend)
     fused_match = getattr(backend_fn, "fused_match", None)
-    if fused_match is not None:
+    if cfg.prefilter_k > 0:
+        # Two-phase sparse TRD (accelerator Section 4.1.1): corner-warp
+        # bbox prefilter over all N entries, full reproject-match on the
+        # K newest passing candidates only.  Takes precedence over a
+        # fused_match capability — the prefilter decides *which* entries
+        # are worth a full check before any pixel work happens (fusing
+        # the prefilter into the kernel itself is the follow-up).
+        pre = sparse_mod.bbox_prefilter(
+            *dcb.entry_bbox_inputs(buf),
+            t_rel,
+            buf.t,
+            buf.valid,
+            origins,
+            saliency_mask,
+            intr,
+            patch,
+            o_min=cfg.o_min,
+            k=min(cfg.prefilter_k, buf.capacity),
+        )
+        diff, coverage, _ = sparse_mod.sparse_reproject_match(
+            buf.rgb,
+            buf.depth,
+            buf.origin,
+            t_rel,
+            frame,
+            intr,
+            pre,
+            window=cfg.window,
+            backend=cfg.backend,
+        )
+        overlap_ok = pre.overlap_ok
+        entry_ok = (diff <= cfg.tau) & (coverage >= cfg.c_min) & buf.valid
+        match_ok = entry_ok[:, None] & overlap_ok & saliency_mask[None, :]
+        n_full_checks = pre.n_full
+        n_overflow = pre.n_overflow
+    elif fused_match is not None:
         # Capability-based dispatch: a backend may fuse warp + match +
         # occlusion/consistency thresholds + the per-(entry, patch)
         # update mask into one kernel (see reproject_match/fused.py).
@@ -145,6 +204,8 @@ def tsrc_step(
             c_min=cfg.c_min,
         )
         match_ok = pair_ok & buf.valid[:, None] & saliency_mask[None, :]
+        n_full_checks = None  # dense: derived from overlap_ok below
+        n_overflow = jnp.zeros((), jnp.int32)
     else:
         diff, coverage, bbox = reproject_match(
             buf.rgb,
@@ -163,7 +224,13 @@ def tsrc_step(
         overlap_ok = overlap >= cfg.o_min
         entry_ok = (diff <= cfg.tau) & (coverage >= cfg.c_min) & buf.valid
         match_ok = entry_ok[:, None] & overlap_ok & saliency_mask[None, :]
+        n_full_checks = None  # dense: derived from overlap_ok below
+        n_overflow = jnp.zeros((), jnp.int32)
     idx, matched = dcb.newest_match(match_ok, buf.t, buf.valid)
+    # Snapshot the occupancy the TRD actually ran against: insertion
+    # below permutes slots (top-k keep), so counters derived from the
+    # post-insert mask would charge work against the wrong entries.
+    valid_pre = buf.valid
 
     # --- Popularity bump for matches (step 3). ------------------------------
     buf = dcb.bump_popularity(buf, idx, matched, t_now=t_now)
@@ -179,16 +246,21 @@ def tsrc_step(
     )
     buf = dcb.insert(buf, buf_cfg, new, insert_mask, t_now)
 
-    # Energy-model counters: the ASIC fully reprojects only entries whose
-    # bbox overlaps *some* salient patch (we compute densely; it doesn't).
-    any_overlap = jnp.any(overlap_ok & saliency_mask[None, :], axis=1)
+    if n_full_checks is None:
+        # Dense paths: the ASIC would fully reproject only entries whose
+        # bbox overlaps *some* salient patch (we computed densely; it
+        # doesn't).  The sparse path reports its real candidate count —
+        # when no truncation occurs the two numbers coincide exactly.
+        any_overlap = jnp.any(overlap_ok & saliency_mask[None, :], axis=1)
+        n_full_checks = jnp.sum((any_overlap & valid_pre).astype(jnp.int32))
     stats = TSRCStats(
         n_salient=jnp.sum(saliency_mask.astype(jnp.int32)),
         n_matched=jnp.sum(matched.astype(jnp.int32)),
         n_inserted=jnp.sum(insert_mask.astype(jnp.int32)),
-        n_bbox_checks=jnp.sum(buf.valid.astype(jnp.int32)),
-        n_full_checks=jnp.sum((any_overlap & buf.valid).astype(jnp.int32)),
+        n_bbox_checks=jnp.sum(valid_pre.astype(jnp.int32)),
+        n_full_checks=n_full_checks,
         buffer_valid=dcb.count_valid(buf),
+        n_prefilter_overflow=n_overflow,
     )
     return buf, stats
 
@@ -214,7 +286,7 @@ def tsrc_step_sequential_oracle(
 
     patch = buf.patch_size
     patches, origins = extract_patches(frame, patch)
-    t_rel = jax.vmap(lambda p: geo.relative_transform(p, pose))(buf.pose)
+    t_rel = geo.invert_pose(pose) @ buf.pose  # invert once, batch-multiply
     diff, coverage, bbox = reproject_match(
         buf.rgb, buf.depth, buf.origin, t_rel, frame, intr,
         window=cfg.window, backend="ref",

@@ -53,24 +53,27 @@ _EPS = 1e-6
 
 def _entry_scores(
     intr_ref,  # (3,) [f, cx, cy] camera intrinsics
-    rgb_ref,  # (1, P, P, 3) entry pixels I_c
-    depth_ref,  # (1, P, P) entry depth d_c
-    origin_ref,  # (1, 2) entry top-left (row, col)
-    trel_ref,  # (1, 4, 4) source->current transform
+    rgb_ref,  # (E, P, P, 3) entry pixels I_c
+    depth_ref,  # (E, P, P) entry depth d_c
+    origin_ref,  # (E, 2) entry top-left (row, col)
+    trel_ref,  # (E, 4, 4) source->current transform
     frame_ref,  # (H, W, 3) current frame F_t (full block)
     *,
     patch: int,
     window: int,
     frame_h: int,
     frame_w: int,
+    e: int = 0,
 ):
     """Shared kernel body: warp one entry, sample, and score it.
 
     Returns the per-entry scalars ``(diff, coverage, vmin, umin, vmax,
     umax)``.  Factored out of :func:`_reproject_match_kernel` so the
-    fused TSRC kernel (``fused.py``) runs the *same ops in the same
-    order* — its diff/coverage/bbox outputs are bitwise identical to
-    this kernel's.
+    fused TSRC kernel (``fused.py``) and the entry-tiled kernel below
+    run the *same ops in the same order* — their diff/coverage/bbox
+    outputs are bitwise identical to this kernel's.  ``e`` indexes the
+    entry within the grid step's block (0 for the one-entry-per-step
+    kernels; the tile row for :func:`reproject_match_pallas_tiled`).
     """
     p = patch
     k = p * p
@@ -79,13 +82,13 @@ def _entry_scores(
     intr_cy = intr_ref[2]
 
     # --- Warp the entry's pixel grid into the current view (Eq. 1). --------
-    depth = depth_ref[0]  # (P, P)
-    oy = origin_ref[0, 0]
-    ox = origin_ref[0, 1]
+    depth = depth_ref[e]  # (P, P)
+    oy = origin_ref[e, 0]
+    ox = origin_ref[e, 1]
     vv = jax.lax.broadcasted_iota(jnp.float32, (p, p), 0) + oy  # rows (v)
     uu = jax.lax.broadcasted_iota(jnp.float32, (p, p), 1) + ox  # cols (u)
 
-    t = trel_ref[0]  # (4, 4)
+    t = trel_ref[e]  # (4, 4)
     x1 = (uu - intr_cx) / intr_f * depth
     y1 = (vv - intr_cy) / intr_f * depth
     z1 = depth
@@ -151,7 +154,7 @@ def _entry_scores(
 
     # --- Masked mean |I_c - sampled| + coverage. ----------------------------
     valid = (in_front.reshape(k) & in_win).astype(jnp.float32)
-    entry = rgb_ref[0].reshape(k, 3)
+    entry = rgb_ref[e].reshape(k, 3)
     absdiff = jnp.mean(jnp.abs(sampled - entry), axis=-1)  # (K,)
     nvalid = jnp.sum(valid)
     denom = jnp.maximum(nvalid, 1.0)
@@ -250,4 +253,140 @@ def reproject_match_pallas(
     diff = out[:, 0]
     coverage = out[:, 1]
     bbox = out[:, 2:6]
+    return diff, coverage, bbox
+
+
+# ---------------------------------------------------------------------------
+# Entry-tiled variant: TILE_N entries per grid step.
+# ---------------------------------------------------------------------------
+
+# Entries owned by one grid step.  The one-entry-per-step layout above
+# pays per-step dispatch/pipelining overhead that dominates at the small
+# candidate counts the sparse-TRD prefilter produces (K ~ 16-32); eight
+# entries per step amortises it while keeping the VMEM working set
+# (8 entry tiles + 8 windows + the shared frame) comfortably bounded.
+TILE_N = 8
+
+
+def _reproject_match_tiled_kernel(
+    intr_ref,
+    rgb_ref,  # (TILE_N, P, P, 3)
+    depth_ref,  # (TILE_N, P, P)
+    origin_ref,  # (TILE_N, 2)
+    trel_ref,  # (TILE_N, 4, 4)
+    frame_ref,
+    out_ref,  # (TILE_N, 8) packed rows
+    *,
+    patch: int,
+    window: int,
+    frame_h: int,
+    frame_w: int,
+    tile_n: int,
+):
+    for j in range(tile_n):  # static unroll over the tile's entries
+        diff, coverage, vmin, umin, vmax, umax = _entry_scores(
+            intr_ref,
+            rgb_ref,
+            depth_ref,
+            origin_ref,
+            trel_ref,
+            frame_ref,
+            patch=patch,
+            window=window,
+            frame_h=frame_h,
+            frame_w=frame_w,
+            e=j,
+        )
+        out_ref[j, 0] = diff
+        out_ref[j, 1] = coverage
+        out_ref[j, 2] = vmin
+        out_ref[j, 3] = umin
+        out_ref[j, 4] = vmax
+        out_ref[j, 5] = umax
+        out_ref[j, 6] = 0.0
+        out_ref[j, 7] = 0.0
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "tile_n", "interpret")
+)
+def reproject_match_pallas_tiled(
+    entry_rgb: Array,  # (N, P, P, 3)
+    entry_depth: Array,  # (N, P, P)
+    entry_origin: Array,  # (N, 2)
+    t_rel: Array,  # (N, 4, 4)
+    frame: Array,  # (H, W, 3)
+    intr: geo.Intrinsics,
+    *,
+    window: int = 64,
+    tile_n: int = TILE_N,
+    interpret: bool = True,
+) -> Tuple[Array, Array, Array]:
+    """Entry-tiled Pallas reproject-match: ``tile_n`` entries per grid step.
+
+    Same contract (and bitwise the same per-entry scores — both run
+    :func:`_entry_scores`) as :func:`reproject_match_pallas`, with
+    ``grid=(ceil(N / tile_n),)`` instead of ``grid=(N,)``.  Inputs are
+    padded to a tile multiple with benign entries (identity transform,
+    unit depth) and the padding rows are sliced off the output.
+    """
+    n, p = entry_rgb.shape[0], entry_rgb.shape[1]
+    h, w = frame.shape[0], frame.shape[1]
+    tile = max(1, min(tile_n, n)) if n else 1
+    n_pad = -(-n // tile) * tile
+    pad = n_pad - n
+    if pad:
+        entry_rgb = jnp.concatenate(
+            [entry_rgb, jnp.zeros((pad, p, p, 3), entry_rgb.dtype)], 0
+        )
+        entry_depth = jnp.concatenate(
+            [entry_depth, jnp.ones((pad, p, p), entry_depth.dtype)], 0
+        )
+        entry_origin = jnp.concatenate(
+            [entry_origin, jnp.zeros((pad, 2), entry_origin.dtype)], 0
+        )
+        t_rel = jnp.concatenate(
+            [
+                t_rel,
+                jnp.broadcast_to(
+                    jnp.eye(4, dtype=t_rel.dtype), (pad, 4, 4)
+                ),
+            ],
+            0,
+        )
+    intr_vec = jnp.stack(
+        [
+            jnp.asarray(intr.f, jnp.float32),
+            jnp.asarray(intr.cx, jnp.float32),
+            jnp.asarray(intr.cy, jnp.float32),
+        ]
+    )
+
+    kernel = functools.partial(
+        _reproject_match_tiled_kernel,
+        patch=p,
+        window=window,
+        frame_h=h,
+        frame_w=w,
+        tile_n=tile,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pad // tile,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),  # intrinsics: shared
+            pl.BlockSpec((tile, p, p, 3), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((tile, p, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 4, 4), lambda i: (i, 0, 0)),
+            pl.BlockSpec((h, w, 3), lambda i: (0, 0, 0)),  # frame: shared
+        ],
+        out_specs=pl.BlockSpec((tile, 8), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 8), jnp.float32),
+        interpret=interpret,
+    )(intr_vec, entry_rgb, entry_depth, entry_origin, t_rel, frame)
+
+    diff = out[:n, 0]
+    coverage = out[:n, 1]
+    bbox = out[:n, 2:6]
     return diff, coverage, bbox

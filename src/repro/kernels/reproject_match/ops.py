@@ -8,6 +8,11 @@ on CPU and inside SPMD lowering, where a TPU Pallas custom call cannot lower).
 
 ``backend="pallas"`` — the Pallas TPU kernel (``kernel.py``), validated in
 interpret mode on CPU; on real TPU hardware this is the deployed hot path.
+
+``backend="pallas_tiled"`` — the entry-tiled Pallas kernel (``TILE_N``
+entries per grid step); same per-entry math as ``pallas``, but the grid-step
+overhead is amortised — the right layout for the small candidate counts the
+sparse-TRD prefilter produces (``TSRCConfig.prefilter_k``).
 """
 
 from __future__ import annotations
@@ -43,6 +48,27 @@ def _pallas_backend(
     from repro.kernels.reproject_match.kernel import reproject_match_pallas
 
     return reproject_match_pallas(
+        entry_rgb,
+        entry_depth,
+        entry_origin,
+        t_rel,
+        frame,
+        intr,
+        window=window,
+        interpret=interpret,
+    )
+
+
+@register_backend("pallas_tiled")
+def _pallas_tiled_backend(
+    entry_rgb, entry_depth, entry_origin, t_rel, frame, intr,
+    *, window, interpret,
+):
+    from repro.kernels.reproject_match.kernel import (
+        reproject_match_pallas_tiled,
+    )
+
+    return reproject_match_pallas_tiled(
         entry_rgb,
         entry_depth,
         entry_origin,

@@ -1,0 +1,163 @@
+"""Two-phase sparse reproject-match (EPIC accelerator, Section 4.1.1).
+
+The dense TRD path warps and pixel-scores **all** ``N = capacity``
+DC-buffer entries every processed frame, even though only the handful of
+entries whose reprojected bounding box lands on a salient patch can
+possibly match.  The paper's reprojection engine never does that: it
+reprojects only the four patch corners of each entry first, and runs the
+expensive pixel-level compare solely on entries whose warped bbox
+overlaps a salient region.  This module is that structure as real
+compute savings (not just an energy-model counter):
+
+Phase 1 — :func:`bbox_prefilter` (cheap, all ``N`` entries)
+    Warp only the 4 patch corners (``geo.reproject_bbox``), compute the
+    bbox-overlap fraction against the current frame's patch grid
+    (``geo.bbox_overlap_fraction``), and mark the entries whose bbox
+    overlaps *some* salient patch with ``overlap >= o_min``.  A
+    composite (pass-flag, timestamp) ``top_k`` selects the ``K`` newest
+    passing entries as candidates.
+
+Phase 2 — :func:`sparse_reproject_match` (expensive, ``K`` entries)
+    Gather the candidates' ``(rgb, depth, origin, t_rel)`` slabs and run
+    the standard reproject-match backend on shape ``(K, ...)`` instead
+    of ``(N, ...)``; scatter ``diff``/``coverage``/``bbox`` back with
+    non-candidates forced non-matching (``diff = 1``, ``coverage = 0``).
+
+Exactness falls out of the match predicate: an entry can only match a
+patch when its bbox overlaps that salient patch with ``overlap >=
+o_min`` (exactly the pass condition), and ``dcb.newest_match`` already
+resolves ties by picking the newest feasible entry — so the sparse path
+is **bit-identical to dense whenever at most K entries pass** the
+prefilter.  When more than ``K`` pass, the ``K`` newest are scored and
+the rest are conservatively treated as non-matching (extra insertions,
+never false matches); ``n_overflow`` counts the truncated entries so
+callers can observe the approximation.
+
+The prefilter bbox is computed with the same :func:`geo.reproject_bbox`
+helper (same corner order, same inputs) the ``ref`` backend uses
+internally, so for the reference backend the prefilter decision is
+bitwise the decision the dense path would have made.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry as geo
+
+Array = jax.Array
+
+
+class PrefilterResult(NamedTuple):
+    """Phase-1 output: per-entry spatial association + the candidate set."""
+
+    bbox: Array  # (N, 4) corner-warp bbox of every entry (vmin,umin,vmax,umax)
+    overlap_ok: Array  # (N, M) bool — bbox overlap >= o_min per frame patch
+    passes: Array  # (N,) bool — valid AND overlaps some salient patch
+    cand_idx: Array  # (K,) int32 — candidate entry indices (newest first)
+    cand_real: Array  # (K,) bool — slot holds an actual passing entry
+    n_pass: Array  # () int32 — entries passing the prefilter
+    n_full: Array  # () int32 — candidates actually pixel-scored = min(n_pass, K)
+    n_overflow: Array  # () int32 — passing entries truncated = max(n_pass-K, 0)
+
+
+def bbox_prefilter(
+    entry_origin: Array,  # (N, 2) patch top-left (row, col) in source frame
+    corner_depths: Array,  # (N, 4) depth at [tl, tr, bl, br] corners
+    t_rel: Array,  # (N, 4, 4) source->current transforms
+    entry_t: Array,  # (N,) capture timestamps
+    entry_valid: Array,  # (N,) occupancy
+    patch_origins: Array,  # (M, 2) current-frame patch grid top-lefts
+    salient: Array,  # (M,) bool SRD saliency of the current frame
+    intr: geo.Intrinsics,
+    patch: int,
+    *,
+    o_min: float,
+    k: int,
+) -> PrefilterResult:
+    """Corner-warp prefilter + top-K newest candidate selection (phase 1).
+
+    Cost per entry is 4 corner reprojections + an ``(N, M)`` rectangle
+    intersection — no pixel gathers, no window slices.  ``k`` must be a
+    static Python int (it sizes the candidate gather); it is clamped to
+    ``N`` — more candidates than entries is just the dense set.
+    """
+    k = min(k, entry_t.shape[0])
+    bbox, _ = geo.reproject_bbox(
+        entry_origin, corner_depths, intr, t_rel, patch
+    )  # (N, 4)
+    overlap = geo.bbox_overlap_fraction(
+        bbox[:, None, :], patch_origins[None, :, :], patch
+    )  # (N, M)
+    overlap_ok = overlap >= o_min
+    passes = jnp.any(overlap_ok & salient[None, :], axis=1) & entry_valid
+
+    # Composite (pass-flag, timestamp) key: passing entries rank by
+    # recency, non-passing entries sink to -inf and only ever fill
+    # unused candidate slots (masked out via ``cand_real``).
+    key = jnp.where(passes, entry_t, -jnp.inf)
+    _, cand_idx = jax.lax.top_k(key, k)
+    cand_real = passes[cand_idx]
+
+    n_pass = jnp.sum(passes.astype(jnp.int32))
+    n_full = jnp.sum(cand_real.astype(jnp.int32))
+    return PrefilterResult(
+        bbox=bbox,
+        overlap_ok=overlap_ok,
+        passes=passes,
+        cand_idx=cand_idx.astype(jnp.int32),
+        cand_real=cand_real,
+        n_pass=n_pass,
+        n_full=n_full,
+        n_overflow=n_pass - n_full,
+    )
+
+
+def sparse_reproject_match(
+    entry_rgb: Array,  # (N, P, P, 3)
+    entry_depth: Array,  # (N, P, P)
+    entry_origin: Array,  # (N, 2)
+    t_rel: Array,  # (N, 4, 4)
+    frame: Array,  # (H, W, 3)
+    intr: geo.Intrinsics,
+    pre: PrefilterResult,
+    *,
+    window: int,
+    backend: str = "ref",
+) -> Tuple[Array, Array, Array]:
+    """Candidate gather -> backend reproject-match -> scatter (phase 2).
+
+    Runs the registered ``backend`` on the ``(K, ...)`` candidate slabs
+    only.  Returns dense ``(N,)``-shaped ``diff``/``coverage`` and an
+    ``(N, 4)`` bbox with non-candidates forced non-matching
+    (``diff = 1.0``, ``coverage = 0.0`` — the op's own "no match
+    possible" convention) and carrying their phase-1 corner bbox.
+    """
+    from repro.kernels.reproject_match.ops import reproject_match
+
+    idx = pre.cand_idx
+    c_diff, c_cov, c_bbox = reproject_match(
+        entry_rgb[idx],
+        entry_depth[idx],
+        entry_origin[idx],
+        t_rel[idx],
+        frame,
+        intr,
+        window=window,
+        backend=backend,
+    )
+    n = entry_rgb.shape[0]
+    real = pre.cand_real
+    diff = jnp.ones((n,), jnp.float32).at[idx].set(
+        jnp.where(real, c_diff, 1.0)
+    )
+    coverage = jnp.zeros((n,), jnp.float32).at[idx].set(
+        jnp.where(real, c_cov, 0.0)
+    )
+    bbox = pre.bbox.at[idx].set(
+        jnp.where(real[:, None], c_bbox, pre.bbox[idx])
+    )
+    return diff, coverage, bbox

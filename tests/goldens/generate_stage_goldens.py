@@ -6,6 +6,12 @@ the stage-graph re-expression of EPIC and all four baselines reproduces
 these outputs bit for bit.
 
   PYTHONPATH=src python tests/goldens/generate_stage_goldens.py
+
+Refreshed with the sparse-TRD PR: all state leaves and match/insert stats
+are unchanged bit for bit; only the EPIC ``n_bbox_checks``/``n_full_checks``
+counters moved (now measured against the pre-insert buffer the TRD actually
+ran on, instead of the permuted post-insert occupancy) and the
+``n_prefilter_overflow`` leaf was appended (0 on the dense path pinned here).
 """
 
 import os

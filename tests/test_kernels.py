@@ -12,7 +12,10 @@ from repro.kernels.int8_matmul.kernel import int8_matmul_pallas
 from repro.kernels.int8_matmul.ref import int8_matmul_ref
 from repro.kernels.mamba2_ssd.kernel import mamba2_ssd_pallas
 from repro.kernels.mamba2_ssd.ref import mamba2_ssd_ref
-from repro.kernels.reproject_match.kernel import reproject_match_pallas
+from repro.kernels.reproject_match.kernel import (
+    reproject_match_pallas,
+    reproject_match_pallas_tiled,
+)
 from repro.kernels.reproject_match.ref import reproject_match_ref
 from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_pallas
 from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
@@ -57,6 +60,50 @@ def test_reproject_match_matches_ref(n, p, hw, window):
     )
     d2, c2, b2 = reproject_match_pallas(
         rgb, depth, origin, t_rel, frame, intr, window=window, interpret=True
+    )
+    np.testing.assert_allclose(d1, d2, atol=1e-5)
+    np.testing.assert_allclose(c1, c2, atol=1e-5)
+    np.testing.assert_allclose(b1, b2, atol=1e-3)
+
+
+@pytest.mark.parametrize(
+    "n,tile_n",
+    [
+        (13, 8),  # ragged tail: last tile padded
+        (16, 8),  # exact multiple
+        (3, 8),  # fewer entries than one tile
+        (6, 1),  # degenerate tile == one-entry-per-step layout
+    ],
+)
+def test_reproject_match_tiled_bitwise_matches_pallas(n, tile_n):
+    """The entry-tiled kernel runs _entry_scores per tile row: its
+    outputs must equal the one-entry-per-step kernel bit for bit,
+    including when N is not a tile multiple (padding sliced off)."""
+    key = jax.random.PRNGKey(n * 13 + tile_n)
+    rgb, depth, origin, t_rel, frame, intr = _reproject_inputs(
+        key, n, 16, 128, 128
+    )
+    d1, c1, b1 = reproject_match_pallas(
+        rgb, depth, origin, t_rel, frame, intr, window=32, interpret=True
+    )
+    d2, c2, b2 = reproject_match_pallas_tiled(
+        rgb, depth, origin, t_rel, frame, intr,
+        window=32, tile_n=tile_n, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_reproject_match_tiled_matches_ref():
+    rgb, depth, origin, t_rel, frame, intr = _reproject_inputs(
+        jax.random.PRNGKey(5), 9, 16, 128, 128
+    )
+    d1, c1, b1 = reproject_match_ref(
+        rgb, depth, origin, t_rel, frame, intr, 32
+    )
+    d2, c2, b2 = reproject_match_pallas_tiled(
+        rgb, depth, origin, t_rel, frame, intr, window=32, interpret=True
     )
     np.testing.assert_allclose(d1, d2, atol=1e-5)
     np.testing.assert_allclose(c1, c2, atol=1e-5)

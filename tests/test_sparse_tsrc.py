@@ -1,0 +1,272 @@
+"""Sparse TRD (two-phase bbox-prefiltered reproject-match) test suite.
+
+Pins the tentpole contract of ``kernels/reproject_match/sparse.py`` +
+``TSRCConfig.prefilter_k``:
+
+* the prefilter's candidate selection (all passing entries chosen when
+  they fit, newest-first truncation + overflow counter when they don't);
+* **bit parity with the dense path whenever at most K entries pass** —
+  at the ``tsrc_step`` level, under jit, through the chunked
+  ``EPICCompressor`` session, and on every registered backend;
+* conservative truncation semantics when more than K entries pass
+  (extra insertions, never false matches);
+* fail-fast ``prefilter_k`` validation on ``TSRCConfig``/``EPICConfig``
+  construction and ``_replace``.
+
+The ``prefilter_k=0`` (dense) default is pinned separately by the
+pre-refactor stage-graph goldens in ``tests/test_stages.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import dc_buffer as dcb
+from repro.core import geometry as geo
+from repro.core import pipeline as P
+from repro.core import tsrc as tsrc_mod
+from repro.data import synthetic as SYN
+from repro.kernels.reproject_match import sparse as sparse_mod
+
+FRAME = 64
+PATCH = 16
+N_PATCHES = (FRAME // PATCH) ** 2
+
+
+def _intr(hw=FRAME):
+    return geo.Intrinsics.create(0.8 * hw, hw / 2.0, hw / 2.0)
+
+
+def _tree_equal_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: prefilter unit behaviour
+# ---------------------------------------------------------------------------
+
+
+class TestBboxPrefilter:
+    def _prefilter(self, origins_e, t, valid, salient, k, o_min=0.5):
+        n = t.shape[0]
+        corner_d = jnp.full((n, 4), 3.0)
+        t_rel = jnp.broadcast_to(jnp.eye(4), (n, 4, 4))
+        _, patch_origins = tsrc_mod.extract_patches(
+            jnp.zeros((FRAME, FRAME, 3)), PATCH
+        )
+        return sparse_mod.bbox_prefilter(
+            origins_e, corner_d, t_rel, t, valid, patch_origins, salient,
+            _intr(), PATCH, o_min=o_min, k=k,
+        )
+
+    def test_all_passing_selected_when_under_k(self):
+        """Identity warp: each entry sits exactly on its own patch, so
+        every valid entry over a salient patch passes and is selected."""
+        origins_e = jnp.array([[0.0, 0.0], [0.0, 16.0], [16.0, 0.0]])
+        t = jnp.array([2.0, 0.0, 1.0])
+        valid = jnp.array([True, True, True])
+        salient = jnp.ones((N_PATCHES,), bool)
+        pre = self._prefilter(origins_e, t, valid, salient, k=8)
+        assert int(pre.n_pass) == 3
+        assert int(pre.n_full) == 3
+        assert int(pre.n_overflow) == 0
+        assert set(np.asarray(pre.cand_idx[pre.cand_real]).tolist()) == {
+            0, 1, 2,
+        }
+
+    def test_invalid_and_nonsalient_do_not_pass(self):
+        origins_e = jnp.array([[0.0, 0.0], [0.0, 16.0], [16.0, 16.0]])
+        t = jnp.array([0.0, 1.0, 2.0])
+        valid = jnp.array([True, False, True])  # entry 1 is an empty slot
+        # Only the patch under entry 0 is salient.
+        salient = jnp.zeros((N_PATCHES,), bool).at[0].set(True)
+        pre = self._prefilter(origins_e, t, valid, salient, k=3)
+        np.testing.assert_array_equal(
+            np.asarray(pre.passes), [True, False, False]
+        )
+        assert int(pre.n_full) == 1
+
+    def test_truncation_keeps_newest(self):
+        origins_e = jnp.zeros((4, 2))  # all on the same (salient) patch
+        t = jnp.array([3.0, 9.0, 1.0, 7.0])
+        valid = jnp.ones((4,), bool)
+        salient = jnp.ones((N_PATCHES,), bool)
+        pre = self._prefilter(origins_e, t, valid, salient, k=2)
+        assert int(pre.n_pass) == 4
+        assert int(pre.n_full) == 2
+        assert int(pre.n_overflow) == 2
+        # The two newest (t=9 at idx 1, t=7 at idx 3) are the candidates.
+        assert set(np.asarray(pre.cand_idx).tolist()) == {1, 3}
+
+
+# ---------------------------------------------------------------------------
+# Sparse == dense bit parity when at most K entries pass
+# ---------------------------------------------------------------------------
+
+
+class TestSparseDenseParity:
+    CAP = 32
+
+    def _frames(self, seed=0):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        f1 = jax.random.uniform(k1, (FRAME, FRAME, 3))
+        f2 = f1.at[:, FRAME // 2 :].set(
+            jax.random.uniform(k2, (FRAME, FRAME // 2, 3))
+        )
+        return f1, f2
+
+    def _run_steps(self, prefilter_k, backend="ref", seed=0, jit=False):
+        buf_cfg = dcb.DCBufferConfig(capacity=self.CAP, patch=PATCH)
+        cfg = tsrc_mod.TSRCConfig(
+            window=32, backend=backend, prefilter_k=prefilter_k
+        )
+        sal = jnp.ones((N_PATCHES,), bool)
+        common = (
+            jnp.full((FRAME, FRAME), 3.0), sal, jnp.ones((N_PATCHES,)),
+            jnp.eye(4),
+        )
+        step = tsrc_mod.tsrc_step
+        if jit:
+            step = jax.jit(step, static_argnames=("buf_cfg", "cfg"))
+        f1, f2 = self._frames(seed)
+        buf = dcb.init(buf_cfg)
+        buf, _ = step(
+            buf, buf_cfg, cfg, f1, *common, jnp.float32(0), _intr()
+        )
+        buf, stats = step(
+            buf, buf_cfg, cfg, f2, *common, jnp.float32(1), _intr()
+        )
+        return buf, stats
+
+    @pytest.mark.parametrize("jit", [False, True])
+    def test_k_at_capacity_bitwise_equals_dense(self, jit):
+        """prefilter_k >= capacity can never truncate: the whole step —
+        buffer AND every stat counter — must equal dense bit for bit."""
+        dense = self._run_steps(0, jit=jit)
+        sparse = self._run_steps(self.CAP, jit=jit)
+        _tree_equal_bitwise(dense, sparse)
+        assert int(sparse[1].n_prefilter_overflow) == 0
+
+    def test_k_above_observed_passing_bitwise_equals_dense(self):
+        """A K strictly between the passing count and capacity is still
+        exact — dense n_full_checks IS the passing count, so use it."""
+        dense_buf, dense_stats = self._run_steps(0)
+        n_pass = int(dense_stats.n_full_checks)
+        assert 0 < n_pass < self.CAP
+        sparse = self._run_steps(n_pass)  # tightest exact K
+        _tree_equal_bitwise((dense_buf, dense_stats), sparse)
+
+    @pytest.mark.parametrize("backend", ["pallas", "pallas_tiled", "fused"])
+    def test_parity_on_every_backend(self, backend):
+        """The two-phase path composes with every registered backend
+        (for fused, the prefilter takes precedence over fused_match)."""
+        dense = self._run_steps(0, backend="ref")
+        sparse = self._run_steps(self.CAP, backend=backend)
+        _tree_equal_bitwise(dense, sparse)
+
+    def test_truncation_is_conservative(self):
+        """With K=1, at most one entry can match; every other salient
+        patch is (re-)inserted — extra insertions, never false matches."""
+        dense_buf, dense_stats = self._run_steps(0)
+        trunc_buf, trunc_stats = self._run_steps(1)
+        assert int(trunc_stats.n_prefilter_overflow) == (
+            int(dense_stats.n_full_checks) - 1
+        )
+        assert int(trunc_stats.n_full_checks) == 1
+        assert int(trunc_stats.n_matched) <= int(dense_stats.n_matched)
+        assert int(trunc_stats.n_inserted) >= int(dense_stats.n_inserted)
+        assert int(trunc_stats.n_matched) + int(trunc_stats.n_inserted) == (
+            int(trunc_stats.n_salient)
+        )
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: chunked EPICCompressor session parity
+# ---------------------------------------------------------------------------
+
+
+class TestSessionParity:
+    def _cfg(self, prefilter_k):
+        return P.EPICConfig(
+            frame_hw=(FRAME, FRAME), patch=PATCH, capacity=48,
+            tau=0.10, gamma=0.015, theta=8, window=16,
+            prefilter_k=prefilter_k,
+        )
+
+    @pytest.fixture(scope="class")
+    def stream(self):
+        scfg = SYN.StreamConfig(n_frames=24, hw=(FRAME, FRAME), n_obj=4)
+        s, _ = SYN.generate_stream(jax.random.PRNGKey(2), scfg)
+        return api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
+
+    def test_sparse_session_bitwise_equals_dense(self, stream):
+        """Full pipeline (bypass gate + depth + saliency + TSRC) under
+        jit: prefilter_k = capacity never truncates -> bit parity,
+        including the stats trajectory and zero overflow everywhere."""
+        dense = api.EPICCompressor(self._cfg(0))
+        sparse = api.EPICCompressor(self._cfg(48))
+        ds, dt = jax.jit(dense.step)(dense.init(), stream)
+        ss, st = jax.jit(sparse.step)(sparse.init(), stream)
+        _tree_equal_bitwise((ds, dt), (ss, st))
+        assert int(jnp.sum(st.n_prefilter_overflow)) == 0
+
+    def test_chunked_ingest_bitwise_equals_one_shot(self, stream):
+        """The session contract survives the sparse path: arbitrary
+        chunk splits are bit-identical to one big ingest."""
+        comp = api.EPICCompressor(self._cfg(48))
+        one_state, _ = jax.jit(comp.step)(comp.init(), stream)
+        step = jax.jit(comp.step)
+        state = comp.init()
+        for lo, hi in ((0, 8), (8, 16), (16, 24)):
+            state, _ = step(
+                state,
+                api.SensorChunk(
+                    stream.frames[lo:hi], stream.poses[lo:hi],
+                    stream.gazes[lo:hi],
+                    stream.depth[lo:hi],
+                ),
+            )
+        _tree_equal_bitwise(one_state, state)
+
+    def test_truncating_session_runs_and_reports_overflow(self, stream):
+        comp = api.EPICCompressor(self._cfg(2))
+        state, stats = jax.jit(comp.step)(comp.init(), stream)
+        assert int(jnp.sum(stats.n_prefilter_overflow)) > 0
+        # Per-frame candidate count is capped by K on processed frames.
+        assert int(jnp.max(stats.n_full_checks)) <= 2
+        assert int(dcb.count_valid(state.buf)) > 0
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast validation (mirrors the backend-typo contract)
+# ---------------------------------------------------------------------------
+
+
+class TestPrefilterKValidation:
+    def test_negative_rejected(self):
+        with pytest.raises(ValueError, match="prefilter_k"):
+            tsrc_mod.TSRCConfig(prefilter_k=-1)
+        with pytest.raises(ValueError, match="prefilter_k"):
+            P.EPICConfig(prefilter_k=-3)
+
+    def test_non_int_rejected(self):
+        with pytest.raises(TypeError, match="prefilter_k"):
+            tsrc_mod.TSRCConfig(prefilter_k=1.5)
+        with pytest.raises(TypeError, match="prefilter_k"):
+            P.EPICConfig(prefilter_k="16")
+
+    def test_replace_also_validates(self):
+        with pytest.raises(ValueError, match="prefilter_k"):
+            tsrc_mod.TSRCConfig()._replace(prefilter_k=-2)
+        with pytest.raises(ValueError, match="prefilter_k"):
+            P.EPICConfig()._replace(prefilter_k=-2)
+        assert P.EPICConfig()._replace(prefilter_k=16).prefilter_k == 16
+
+    def test_zero_is_dense_default(self):
+        assert tsrc_mod.TSRCConfig().prefilter_k == 0
+        assert P.EPICConfig().prefilter_k == 0
