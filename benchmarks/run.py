@@ -25,6 +25,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument(
+        "--interpret", action="store_true",
+        help="also time interpret-mode Pallas rows in the core bench "
+             "(skipped by default: ~x100 wall time, not CPU speed)",
+    )
+    ap.add_argument(
         "--only", default=None,
         help="comma-separated sub-benchmark names "
              "(core,table1,figure6,ablation,roofline)",
@@ -49,9 +54,11 @@ def main():
     if want("core"):
         from benchmarks import core_bench
 
-        r = core_bench.run(quick=args.quick)
+        r = core_bench.run(quick=args.quick, interpret=args.interpret)
         summary["core_frames_per_sec"] = {
-            name: m["frames_per_sec"] for name, m in r["methods"].items()
+            name: m["frames_per_sec"]
+            for name, m in r["methods"].items()
+            if not m.get("skipped")
         }
     if want("figure6"):
         from benchmarks import energy_model

@@ -18,21 +18,53 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 if [[ "${1:-}" == "--kernels" ]]; then
   # Focused kernel lane: every Pallas kernel against its oracle in
-  # interpret mode, plus the fused-TSRC and sparse-TRD parity suites.
+  # interpret mode, plus the fused-TSRC and sparse-TRD parity suites
+  # (v1 entry-side + v2 patch-side/fused∘sparse/adaptive-K).
   shift
   exec python -m pytest -q tests/test_kernels.py tests/test_fused_tsrc.py \
-    tests/test_sparse_tsrc.py "$@"
+    tests/test_sparse_tsrc.py tests/test_sparse_v2.py "$@"
 fi
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then
-  # Headless perf-path smoke (~45 s): the quick core throughput sweep
-  # (every compressor row incl. epic[sparse]) + the figure-6 energy
-  # model, with JAX_PLATFORMS forwarded above — a broken hot path is
-  # caught here rather than discovered at bench time.  Refreshes
-  # BENCH_core.json.  The slow lanes (table1/ablation, several minutes
-  # each) stay on demand: `python -m benchmarks.run --quick`.
+  # Headless perf-path smoke (~35 s): the quick core throughput sweep
+  # (every compressor row incl. epic[sparse]; interpret-mode Pallas
+  # rows are skipped — pass --interpret to time them) + the figure-6
+  # energy model, with JAX_PLATFORMS forwarded above — a broken hot
+  # path is caught here rather than discovered at bench time.
+  # Refreshes BENCH_core.json, then guards the sparse-TRD win: the
+  # epic[sparse] row regressing below 2.5x dense fails the lane.  The
+  # slow lanes (table1/ablation, several minutes each) stay on demand:
+  # `python -m benchmarks.run --quick`.
   shift
-  exec python -m benchmarks.run --quick --only core,figure6 "$@"
+  before_stamp=$(stat -c %Y BENCH_core.json 2>/dev/null || echo absent)
+  python -m benchmarks.run --quick --only core,figure6 "$@"
+  after_stamp=$(stat -c %Y BENCH_core.json 2>/dev/null || echo absent)
+  if [[ "$after_stamp" == "absent" || "$after_stamp" == "$before_stamp" ]]; then
+    # Pass-through args (e.g. a second --only without "core") can keep
+    # the core bench from running; guarding stale numbers would print a
+    # bogus ok.
+    echo "[bench-smoke] core bench did not refresh BENCH_core.json;" \
+         "skipping the sparse-TRD guard"
+    exit 0
+  fi
+  exec python - <<'GUARD'
+import json
+import sys
+
+d = json.load(open("BENCH_core.json"))
+row = d["methods"]["epic[sparse]"]
+speedup = row.get("speedup_vs_epic")
+floor = 2.5
+if row.get("skipped") or speedup is None:
+    sys.exit("BENCH_core.json: epic[sparse] row missing a speedup")
+if speedup < floor:
+    sys.exit(
+        f"perf regression: epic[sparse].speedup_vs_epic = {speedup} "
+        f"< {floor} (dense {d['methods']['epic']['step_ms']} ms vs "
+        f"sparse {row['step_ms']} ms)"
+    )
+print(f"[bench-smoke] sparse-TRD guard ok: {speedup}x >= {floor}x")
+GUARD
 fi
 
 exec python -m pytest -x -q "$@"

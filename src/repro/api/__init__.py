@@ -11,7 +11,8 @@ Public surface:
   get_compressor / register_compressor /
   available_compressors, get_backend /
   register_backend / available_backends /
-  validate_backend / validate_prefilter_k,
+  validate_backend / validate_prefilter_k /
+  validate_patch_k / validate_k_ladder,
   get_stage / make_stage /
   register_stage / available_stages           (registry)
 
@@ -38,6 +39,8 @@ from repro.api.registry import (  # noqa: F401
     register_compressor,
     register_stage,
     validate_backend,
+    validate_k_ladder,
+    validate_patch_k,
     validate_prefilter_k,
 )
 from repro.api.stages import (  # noqa: F401

@@ -114,15 +114,71 @@ class EPICCompressor:
     (:class:`repro.core.pipeline.EPICState`) holds the bypass gate, the
     DC buffer, and the frame clock, so chunked ingest is bit-identical
     to the legacy one-shot ``pipeline.compress_stream``.
+
+    Adaptive K (``k_ladder``): passing a static bucket ladder, e.g.
+    ``k_ladder=(8, 16, 24, 48)``, turns on a **host-side** controller
+    that walks ``cfg.prefilter_k`` across the rungs *between chunks*:
+
+    * grow one rung when the chunk reported any ``n_prefilter_overflow``
+      (the candidate budget truncated real work), and
+    * shrink one rung when the chunk's peak per-frame ``n_full_checks``
+      would fit the next-lower rung with a 2x margin (``n_full << K``).
+
+    Each visited rung compiles one jitted step, cached for the session's
+    lifetime, so revisiting a rung never recompiles.  The rule reads two
+    scalar counters per chunk (one extra host sync) and is a pure
+    function of the stats trajectory — a fixed ladder and a fixed stream
+    always produce the identical K trajectory, and a run in which the
+    controller never moves is bit-identical to the fixed-K run.  With a
+    ladder configured, ``step`` is host-driven: do not wrap it in
+    ``jax.jit`` (its per-rung inner steps are already jitted); the rung
+    is per-session state on the instance, so use one compressor instance
+    per stream.
     """
 
     def __init__(
         self,
         cfg: pipe.EPICConfig,
         models: Optional[pipe.EPICModels] = None,
+        *,
+        k_ladder: Optional[Tuple[int, ...]] = None,
+        shrink_margin: int = 2,
     ):
         self.cfg = cfg
         self.models = pipe.EPICModels() if models is None else models
+        self.k_ladder = (
+            None
+            if k_ladder is None
+            else registry_mod.validate_k_ladder(k_ladder)
+        )
+        if k_ladder is not None and (
+            not isinstance(shrink_margin, int) or shrink_margin < 1
+        ):
+            # margin < 1 makes the shrink condition vacuous: the
+            # controller would sink a rung after every overflow-free
+            # chunk and oscillate under load.
+            raise ValueError(
+                f"shrink_margin must be an int >= 1, got {shrink_margin!r}"
+            )
+        self.shrink_margin = shrink_margin
+        if self.k_ladder is not None:
+            if cfg.prefilter_k in self.k_ladder:
+                self._rung = self.k_ladder.index(cfg.prefilter_k)
+            elif cfg.prefilter_k == 0:
+                self._rung = 0
+            else:
+                raise ValueError(
+                    f"cfg.prefilter_k={cfg.prefilter_k} is not a rung of "
+                    f"k_ladder={self.k_ladder} (use 0 to start at the "
+                    f"bottom rung)"
+                )
+            self._rung_steps: dict = {}
+            #: K used by each past chunk, in order (the controller's
+            #: deterministic trajectory; exposed for tests/telemetry).
+            self.k_trajectory: list = []
+            # run_session caches a jitted step on this attribute; the
+            # adaptive step is host-driven and must not be re-jitted.
+            self._jit_step = self.step
 
     def init(self) -> pipe.EPICState:
         return pipe.init_state(self.cfg)
@@ -130,15 +186,65 @@ class EPICCompressor:
     def step(
         self, state: pipe.EPICState, chunk: SensorChunk
     ) -> Tuple[pipe.EPICState, pipe.FrameStats]:
-        return pipe.scan_frames(
-            state,
-            chunk.frames,
-            chunk.poses,
-            chunk.gazes,
-            chunk.depth,
-            self.models,
-            self.cfg,
+        if self.k_ladder is None:
+            return pipe.scan_frames(
+                state,
+                chunk.frames,
+                chunk.poses,
+                chunk.gazes,
+                chunk.depth,
+                self.models,
+                self.cfg,
+            )
+        return self._adaptive_step(state, chunk)
+
+    # -- adaptive-K controller ----------------------------------------------
+
+    def _rung_step(self, k: int):
+        """The jitted fixed-K step for one ladder rung (cached)."""
+        fn = self._rung_steps.get(k)
+        if fn is None:
+            cfg_k = self.cfg._replace(prefilter_k=k)
+
+            def _step(state, chunk, _cfg=cfg_k):
+                return pipe.scan_frames(
+                    state,
+                    chunk.frames,
+                    chunk.poses,
+                    chunk.gazes,
+                    chunk.depth,
+                    self.models,
+                    _cfg,
+                )
+
+            fn = jax.jit(_step)
+            self._rung_steps[k] = fn
+        return fn
+
+    def _adaptive_step(
+        self, state: pipe.EPICState, chunk: SensorChunk
+    ) -> Tuple[pipe.EPICState, pipe.FrameStats]:
+        k = self.k_ladder[self._rung]
+        self.k_trajectory.append(k)
+        state, stats = self._rung_step(k)(state, chunk)
+        overflow, peak_full = (
+            int(x)
+            for x in jax.device_get(
+                (
+                    jnp.sum(stats.n_prefilter_overflow),
+                    jnp.max(stats.n_full_checks),
+                )
+            )
         )
+        if overflow > 0 and self._rung < len(self.k_ladder) - 1:
+            self._rung += 1
+        elif (
+            self._rung > 0
+            and peak_full * self.shrink_margin
+            <= self.k_ladder[self._rung - 1]
+        ):
+            self._rung -= 1
+        return state, stats
 
     def export(self, state: pipe.EPICState) -> ret.RetainedPatches:
         return dcb.to_retained(state.buf)

@@ -61,6 +61,16 @@ class StreamPool:
         axis: Optional[str] = None,
         donate: Optional[bool] = None,
     ):
+        if getattr(compressor, "k_ladder", None) is not None:
+            # The adaptive-K controller is host-driven (device_get +
+            # Python rung state between chunks): vmapping its step would
+            # die deep inside the trace with a ConcretizationTypeError.
+            raise ValueError(
+                "StreamPool cannot batch an adaptive-K compressor "
+                "(k_ladder is host-side, per-session state); pool a "
+                "fixed-K compressor, or run one adaptive session per "
+                "stream"
+            )
         self.compressor = compressor
         self.n_streams = n_streams
         self.mesh = mesh

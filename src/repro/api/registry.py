@@ -114,6 +114,23 @@ def validate_backend(name: str) -> str:
     return name
 
 
+def _validate_topk_knob(name: str, k: int, dense_doc: str) -> int:
+    """Shared fail-fast check for the sparse-TRD top-K knobs."""
+    import operator
+
+    try:
+        ki = operator.index(k)
+    except TypeError:
+        raise TypeError(
+            f"{name} must be an int ({dense_doc}), got {type(k).__name__}"
+        ) from None
+    if ki < 0:
+        raise ValueError(
+            f"{name} must be >= 0 ({dense_doc}), got {ki}"
+        )
+    return ki
+
+
 def validate_prefilter_k(k: int) -> int:
     """Fail-fast check of the sparse-TRD ``prefilter_k`` knob.
 
@@ -123,21 +140,53 @@ def validate_prefilter_k(k: int) -> int:
     ``backend``) so a bad sweep value surfaces immediately instead of
     deep inside the jitted scan.
     """
+    return _validate_topk_knob(
+        "prefilter_k", k, "0 = dense TRD, K > 0 = sparse top-K candidates"
+    )
+
+
+def validate_patch_k(k: int) -> int:
+    """Fail-fast check of the patch-side sparsity ``patch_k`` knob.
+
+    Must be a non-negative int: ``0`` runs the match algebra over the
+    full patch grid, ``P_k > 0`` compacts it to the top ``P_k`` salient
+    patch slots (see ``kernels/reproject_match/sparse.py``).  Validated
+    at config construction exactly like ``prefilter_k``.
+    """
+    return _validate_topk_knob(
+        "patch_k", k, "0 = dense patch axis, P_k > 0 = salient compaction"
+    )
+
+
+def validate_k_ladder(ladder) -> Tuple[int, ...]:
+    """Fail-fast check of an adaptive-K bucket ladder.
+
+    Must be a non-empty sequence of strictly increasing positive ints —
+    the static ``prefilter_k`` buckets the host-side controller in
+    :class:`repro.api.compressor.EPICCompressor` walks between chunks.
+    Each bucket compiles (and caches) its own jitted step, so a typo'd
+    ladder should fail at construction, not at the first bucket switch.
+    """
     import operator
 
     try:
-        ki = operator.index(k)
+        rungs = tuple(operator.index(k) for k in ladder)
     except TypeError:
         raise TypeError(
-            f"prefilter_k must be an int (0 = dense TRD), "
-            f"got {type(k).__name__}"
+            f"k_ladder must be a sequence of ints, got {ladder!r}"
         ) from None
-    if ki < 0:
+    if not rungs:
+        raise ValueError("k_ladder must be non-empty")
+    if any(k <= 0 for k in rungs):
         raise ValueError(
-            f"prefilter_k must be >= 0 (0 = dense TRD, K > 0 = sparse "
-            f"top-K candidate pass), got {ki}"
+            f"k_ladder buckets must be positive prefilter_k values, "
+            f"got {rungs}"
         )
-    return ki
+    if any(b <= a for a, b in zip(rungs, rungs[1:])):
+        raise ValueError(
+            f"k_ladder must be strictly increasing, got {rungs}"
+        )
+    return rungs
 
 
 class BackendValidatedConfig:
@@ -147,26 +196,27 @@ class BackendValidatedConfig:
     ``_replace`` (namedtuple's ``_replace`` rebuilds through ``_make``,
     which bypasses ``__new__`` — without the override, the idiomatic
     sweep path ``cfg._replace(backend=...)`` would skip validation).
-    Configs that also carry a sparse-TRD ``prefilter_k`` field get it
-    validated on the same two paths.
+    Configs that also carry the sparse-TRD ``prefilter_k`` /
+    ``patch_k`` fields get them validated on the same two paths.
     Use as ``class MyConfig(BackendValidatedConfig, _MyConfigBase)``.
     """
 
     __slots__ = ()
 
+    @staticmethod
+    def _validate(cfg):
+        validate_backend(cfg.backend)
+        if hasattr(cfg, "prefilter_k"):
+            validate_prefilter_k(cfg.prefilter_k)
+        if hasattr(cfg, "patch_k"):
+            validate_patch_k(cfg.patch_k)
+        return cfg
+
     def __new__(cls, *args, **kwargs):
-        self = super().__new__(cls, *args, **kwargs)
-        validate_backend(self.backend)
-        if hasattr(self, "prefilter_k"):
-            validate_prefilter_k(self.prefilter_k)
-        return self
+        return cls._validate(super().__new__(cls, *args, **kwargs))
 
     def _replace(self, **kwargs):
-        out = super()._replace(**kwargs)
-        validate_backend(out.backend)
-        if hasattr(out, "prefilter_k"):
-            validate_prefilter_k(out.prefilter_k)
-        return out
+        return self._validate(super()._replace(**kwargs))
 
 
 def _ensure_builtin_backends() -> None:

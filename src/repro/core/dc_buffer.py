@@ -145,6 +145,12 @@ def insert(
     top-``capacity`` by retention score. New entries are initialised with
     ``P_t = 1`` (paper) and score as such; masked-out candidates score -inf.
     Ties favour existing entries (stable ordering via index penalty).
+
+    (Perf note, measured for the sparse-TRD PRs: gather-from-two-sources
+    and gather-then-scatter reformulations of the final keep both lose
+    to this concatenate-then-gather form in the jitted scan on CPU —
+    XLA fuses the concat into the gather; don't "optimise" this without
+    an in-scan A/B.)
     """
     n = buf.capacity
     m = new.rgb.shape[0]
@@ -222,6 +228,13 @@ def newest_match(
     Dense-parallel equivalent of the ASIC's sequential early-exit scan: all
     pair feasibilities are computed, then argmax over (feasible * timestamp)
     returns the same entry the sequential newest-first scan would stop at.
+
+    Shape-polymorphic over both axes: the sparse TRD calls it on
+    ``(K, P_k)`` compacted candidate/patch slabs (entry axis = candidate
+    slots, ``entry_t``/``entry_valid`` gathered to match) and scatters
+    the result back — the argmax tie-break (lowest index on equal
+    timestamps) is preserved because the candidate order is (timestamp
+    desc, entry index asc).
 
     Args:
       match_ok: (N, M) bool feasibility of (entry, patch) pairs.

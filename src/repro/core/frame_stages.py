@@ -132,9 +132,10 @@ class TSRCStage:
     """TSRC update (Section 3.4): owns the DC buffer state.
 
     ``tsrc_cfg.prefilter_k`` selects dense (0) vs two-phase sparse TRD
-    (K > 0, the accelerator's bbox-prefiltered schedule) — the stage
-    body is agnostic; the knob flows through ``TSRCConfig`` into
-    :func:`repro.core.tsrc.tsrc_step`.
+    (K > 0, the accelerator's bbox-prefiltered schedule) and
+    ``tsrc_cfg.patch_k`` the patch-side compaction of the match algebra
+    — the stage body is agnostic; both knobs flow through ``TSRCConfig``
+    into :func:`repro.core.tsrc.tsrc_step`.
     """
 
     name = "tsrc"

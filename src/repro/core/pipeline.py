@@ -29,6 +29,7 @@ the contribution of each learned module.
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
@@ -56,6 +57,7 @@ class _EPICConfig(NamedTuple):
     window: int = 32
     backend: str = "ref"
     prefilter_k: int = 0  # 0 = dense TRD; K > 0 = sparse top-K candidates
+    patch_k: int = 0  # 0 = dense patch axis; P_k > 0 = salient compaction
     # Frame bypass
     gamma: float = 0.02
     theta: int = 30
@@ -95,6 +97,7 @@ class _EPICConfig(NamedTuple):
             window=self.window,
             backend=self.backend,
             prefilter_k=self.prefilter_k,
+            patch_k=self.patch_k,
         )
 
     def bypass_config(self) -> frame_bypass.BypassConfig:
@@ -106,9 +109,11 @@ class EPICConfig(_registry.BackendValidatedConfig, _EPICConfig):
 
     Construction (and ``_replace``) fails fast on an unregistered
     ``backend`` (the error lists the available reproject-match registry
-    keys) or a negative ``prefilter_k`` — instead of surfacing deep
-    inside the jitted scan.  ``prefilter_k > 0`` selects the two-phase
-    sparse TRD path (see :class:`repro.core.tsrc.TSRCConfig`).
+    keys) or a negative ``prefilter_k`` / ``patch_k`` — instead of
+    surfacing deep inside the jitted scan.  ``prefilter_k > 0`` selects
+    the two-phase sparse TRD path; ``patch_k > 0`` additionally compacts
+    the patch axis of the match algebra (see
+    :class:`repro.core.tsrc.TSRCConfig`).
     """
 
     __slots__ = ()
@@ -135,6 +140,8 @@ class FrameStats(NamedTuple):
     n_full_checks: Array
     buffer_valid: Array
     n_prefilter_overflow: Array  # sparse-TRD top-K truncations (0 dense)
+    n_patch_overflow: Array  # patch-compaction truncations (0 dense)
+    n_patch_checked: Array  # compacted patch slots gathered (0 dense)
 
 
 def init_state(cfg: EPICConfig) -> EPICState:
@@ -147,7 +154,21 @@ def init_state(cfg: EPICConfig) -> EPICState:
 
 def _zero_tsrc_stats(buf: dcb.DCBuffer) -> tsrc_mod.TSRCStats:
     z = jnp.zeros((), jnp.int32)
-    return tsrc_mod.TSRCStats(z, z, z, z, z, dcb.count_valid(buf), z)
+    return tsrc_mod.TSRCStats(z, z, z, z, z, dcb.count_valid(buf), z, z, z)
+
+
+# Memoized graph construction: eager per-frame callers (process_frame
+# outside jit, REPL exploration) used to rebuild the stage graph — six
+# registry lookups + stage construction — on *every* frame.  Keyed on
+# ``(cfg, id(models))`` identity with the models object pinned in the
+# value so a recycled id can never alias a dead entry; bounded LRU so
+# config sweeps don't grow it without limit.  Graphs are stateless
+# composition objects (pure functions of cfg + models), so sharing one
+# instance across calls is observationally identical.
+_GRAPH_CACHE: "OrderedDict[Any, Tuple[EPICModels, StageGraph]]" = (
+    OrderedDict()
+)
+_GRAPH_CACHE_MAX = 32
 
 
 def build_epic_graph(
@@ -161,7 +182,38 @@ def build_epic_graph(
     constructed through the registry, so alternative implementations
     slot in by name; the graph state flattens to exactly the
     :class:`EPICState` leaves ``(bypass, buf, t)``.
+
+    Construction is memoized on ``(cfg, models)`` identity, so per-frame
+    eager callers pay it once per configuration, not once per frame.
+    Inside an active jit/vmap trace the cache is bypassed both ways:
+    stage construction stages array constants (omnistaging), so a graph
+    built under one trace must neither be stored (its tracers would leak
+    into later traces) nor served from an eager build into a trace
+    context where cached eager constants are fine — the latter is safe,
+    so reads are allowed; only writes are gated.
     """
+    key = (cfg, id(models))
+    hit = _GRAPH_CACHE.get(key)
+    if hit is not None and hit[0] is models:
+        _GRAPH_CACHE.move_to_end(key)
+        return hit[1]
+    graph = _build_epic_graph(cfg, models)
+    if _trace_state_clean():
+        _GRAPH_CACHE[key] = (models, graph)
+        while len(_GRAPH_CACHE) > _GRAPH_CACHE_MAX:
+            _GRAPH_CACHE.popitem(last=False)
+    return graph
+
+
+def _trace_state_clean() -> bool:
+    """True when no jax trace is active (safe to cache staged constants)."""
+    try:
+        return bool(jax.core.trace_state_clean())
+    except AttributeError:  # future-proof: changed private API -> no cache
+        return False
+
+
+def _build_epic_graph(cfg: EPICConfig, models: EPICModels) -> StageGraph:
     make = _registry.make_stage
     gated_stages = [
         make("depth", params=models.depth_params),
@@ -203,6 +255,8 @@ def build_epic_graph(
             n_full_checks=t.n_full_checks,
             buffer_valid=t.buffer_valid,
             n_prefilter_overflow=t.n_prefilter_overflow,
+            n_patch_overflow=t.n_patch_overflow,
+            n_patch_checked=t.n_patch_checked,
         )
 
     return StageGraph(
@@ -310,7 +364,7 @@ def stream_counters(cfg: EPICConfig, stats: FrameStats, *, int8_depth=True):
 
     h, w = cfg.frame_hw
     t = int(stats.processed.shape[0])
-    n_proc, full_checks, bbox_checks, inserted, final_valid = (
+    n_proc, full_checks, bbox_checks, inserted, final_valid, pair_reads = (
         int(x)
         for x in jax.device_get(
             (
@@ -319,6 +373,13 @@ def stream_counters(cfg: EPICConfig, stats: FrameStats, *, int8_depth=True):
                 jnp.sum(stats.n_bbox_checks),
                 jnp.sum(stats.n_inserted),
                 stats.buffer_valid[-1],
+                # Patch-compacted association gathers: per frame, each of
+                # the n_full_checks candidates' bbox rows is read against
+                # each compacted patch slot.  n_patch_checked is 0 when
+                # no compaction ran, so dense runs charge exactly what
+                # they did before (their association is in-engine work,
+                # not DC traffic).
+                jnp.sum(stats.n_full_checks * stats.n_patch_checked),
             )
         )
     )
@@ -334,7 +395,11 @@ def stream_counters(cfg: EPICConfig, stats: FrameStats, *, int8_depth=True):
         n_full_checks=full_checks,
         patch_px=cfg.patch * cfg.patch,
         stored_bytes=final_valid * entry_bytes,
-        dc_traffic_bytes=full_checks * patch_bytes + inserted * entry_bytes,
+        dc_traffic_bytes=(
+            full_checks * patch_bytes
+            + inserted * entry_bytes
+            + pair_reads * ret.bbox_row_bytes()
+        ),
     )
 
 

@@ -54,6 +54,16 @@ def dc_entry_bytes(patch: int) -> int:
     )
 
 
+def bbox_row_bytes() -> int:
+    """One warped-bbox metadata row (4 x fp32: vmin, umin, vmax, umax).
+
+    The unit the patch-compacted sparse TRD's association gathers are
+    charged at — each (candidate entry, compacted patch slot) pair reads
+    the entry's bbox row once (see ``pipeline.stream_counters``).
+    """
+    return 4 * 4
+
+
 class RetainedPatches(NamedTuple):
     """Method-agnostic retained representation (fixed capacity, masked).
 

@@ -22,6 +22,21 @@ only on the K newest entries passing the bbox prefilter (the accelerator's
 actual two-phase schedule, Section 4.1.1) — bit-identical to dense whenever
 at most K entries pass; see ``kernels/reproject_match/sparse.py`` and the
 ``n_prefilter_overflow`` counter.
+
+Sparse TRD v2 makes the sparsity two-sided and backend-complete:
+
+* ``TSRCConfig.patch_k > 0`` mirrors the entry-side candidate select
+  onto the *patch* axis: the match mask and ``dcb.newest_match`` run on
+  ``(K, P_k)`` compacted slabs (salient-patch compaction, see
+  ``compact_salient_patches``) instead of ``(K, M)`` — bit-identical to
+  the dense patch axis whenever at most ``P_k`` salient patches exist;
+  ``n_patch_overflow`` counts truncations.
+* A backend's ``fused_match`` capability now *composes* with the
+  prefilter instead of being bypassed by it: the fused kernel runs
+  directly on the gathered ``(K, ...)`` candidate slabs and its
+  per-(entry, patch) mask rows feed the (optionally compacted)
+  association — bitwise the scores ``"pallas"`` produces on the same
+  slabs.
 """
 
 from __future__ import annotations
@@ -47,6 +62,7 @@ class _TSRCConfig(NamedTuple):
     window: int = 64  # reproject-match sampling window
     backend: str = "ref"  # reproject-match backend (registry key)
     prefilter_k: int = 0  # 0 = dense TRD; K > 0 = sparse top-K candidates
+    patch_k: int = 0  # 0 = dense patch axis; P_k > 0 = salient compaction
 
 
 class TSRCConfig(BackendValidatedConfig, _TSRCConfig):
@@ -54,8 +70,8 @@ class TSRCConfig(BackendValidatedConfig, _TSRCConfig):
 
     Construction (and ``_replace``) fails fast on an unregistered
     ``backend`` (listing the available reproject-match registry keys) or
-    a negative ``prefilter_k`` — either would otherwise only surface
-    deep inside the jitted scan.
+    a negative ``prefilter_k`` / ``patch_k`` — any of which would
+    otherwise only surface deep inside the jitted scan.
 
     ``prefilter_k = 0`` runs the dense TRD (every valid entry fully
     warped and pixel-scored); ``prefilter_k = K > 0`` runs the two-phase
@@ -64,6 +80,12 @@ class TSRCConfig(BackendValidatedConfig, _TSRCConfig):
     on only the K newest entries whose bbox overlaps a salient patch —
     bit-identical to dense whenever at most K entries pass (see
     ``kernels/reproject_match/sparse.py``).
+
+    ``patch_k = P_k > 0`` additionally compacts the *patch* axis of the
+    match algebra to the top ``P_k`` salient patch slots (bit-identical
+    whenever at most ``P_k`` salient patches exist); it implies the
+    sparse TRD machinery — with ``prefilter_k = 0`` the candidate set is
+    simply every entry (never truncating the entry axis).
     """
 
     __slots__ = ()
@@ -82,6 +104,9 @@ class TSRCStats(NamedTuple):
     #   prefilter truncation occurs)
     buffer_valid: Array  # occupancy after the step
     n_prefilter_overflow: Array  # passing entries truncated by top-K (0 dense)
+    n_patch_overflow: Array  # salient patches truncated by top-P_k (0 dense)
+    n_patch_checked: Array  # compacted patch slots gathered (0 = no
+    #   patch compaction ran; drives the measured patch-read traffic)
 
 
 def extract_patches(frame: Array, patch: int) -> Tuple[Array, Array]:
@@ -149,13 +174,19 @@ def tsrc_step(
     t_rel = geo.invert_pose(pose) @ buf.pose
     backend_fn = get_backend(cfg.backend)
     fused_match = getattr(backend_fn, "fused_match", None)
-    if cfg.prefilter_k > 0:
+    n_patches = origins.shape[0]
+    zero = jnp.zeros((), jnp.int32)
+    if cfg.prefilter_k > 0 or cfg.patch_k > 0:
         # Two-phase sparse TRD (accelerator Section 4.1.1): corner-warp
         # bbox prefilter over all N entries, full reproject-match on the
-        # K newest passing candidates only.  Takes precedence over a
-        # fused_match capability — the prefilter decides *which* entries
-        # are worth a full check before any pixel work happens (fusing
-        # the prefilter into the kernel itself is the follow-up).
+        # K newest passing candidates only.  patch_k > 0 with
+        # prefilter_k == 0 runs the same machinery with the candidate
+        # budget at capacity (entry axis never truncates).
+        k_entries = (
+            min(cfg.prefilter_k, buf.capacity)
+            if cfg.prefilter_k > 0
+            else buf.capacity
+        )
         pre = sparse_mod.bbox_prefilter(
             *dcb.entry_bbox_inputs(buf),
             t_rel,
@@ -166,22 +197,80 @@ def tsrc_step(
             intr,
             patch,
             o_min=cfg.o_min,
-            k=min(cfg.prefilter_k, buf.capacity),
+            k=k_entries,
         )
-        diff, coverage, _ = sparse_mod.sparse_reproject_match(
-            buf.rgb,
-            buf.depth,
-            buf.origin,
-            t_rel,
-            frame,
-            intr,
-            pre,
-            window=cfg.window,
-            backend=cfg.backend,
-        )
-        overlap_ok = pre.overlap_ok
-        entry_ok = (diff <= cfg.tau) & (coverage >= cfg.c_min) & buf.valid
-        match_ok = entry_ok[:, None] & overlap_ok & saliency_mask[None, :]
+        idx = pre.cand_idx
+        cand_valid = buf.valid[idx] & pre.cand_real
+        if fused_match is not None:
+            # Fused ∘ sparse composition: the fused kernel runs directly
+            # on the gathered (K, ...) candidate slabs — warp + match +
+            # thresholds + the per-(entry, patch) mask rows in one pass,
+            # bitwise the scores "pallas" produces on the same slabs.
+            _, _, _, c_pair, _ = fused_match(
+                buf.rgb[idx],
+                buf.depth[idx],
+                buf.origin[idx],
+                t_rel[idx],
+                frame,
+                intr,
+                window=cfg.window,
+                tau=cfg.tau,
+                o_min=cfg.o_min,
+                c_min=cfg.c_min,
+            )
+            pair_rows = c_pair & cand_valid[:, None]  # (K, M)
+        else:
+            c_diff, c_cov, _ = reproject_match(
+                buf.rgb[idx],
+                buf.depth[idx],
+                buf.origin[idx],
+                t_rel[idx],
+                frame,
+                intr,
+                window=cfg.window,
+                backend=cfg.backend,
+            )
+            entry_ok_c = (
+                (c_diff <= cfg.tau) & (c_cov >= cfg.c_min) & cand_valid
+            )
+            pair_rows = entry_ok_c[:, None] & pre.overlap_ok[idx]  # (K, M)
+        if 0 < cfg.patch_k < n_patches:
+            # Patch-side sparsity: association on (K, P_k) compacted
+            # slabs, matched/chosen scattered back to the dense grid
+            # (non-selected patches report unmatched -> re-inserted).
+            # P_k >= M would compact to an identity permutation — the
+            # dense-M algebra below is the same result without the
+            # top-P_k select, gather and scatter.
+            pc = sparse_mod.compact_salient_patches(
+                saliency_mask,
+                pre.overlap_ok,
+                pre.passes,
+                k=min(cfg.patch_k, n_patches),
+            )
+            match_c = pair_rows[:, pc.idx] & pc.real[None, :]  # (K, P_k)
+            idx_c, matched_c = dcb.newest_match(
+                match_c, buf.t[idx], cand_valid
+            )
+            matched = (
+                jnp.zeros((n_patches,), bool)
+                .at[pc.idx]
+                .set(matched_c & pc.real)
+            )
+            chosen = (
+                jnp.zeros((n_patches,), jnp.int32)
+                .at[pc.idx]
+                .set(jnp.where(pc.real, idx[idx_c], 0))
+            )
+            n_patch_overflow = pc.n_overflow
+            n_patch_checked = pc.n_compacted
+        else:
+            match_ok_c = pair_rows & saliency_mask[None, :]  # (K, M)
+            idx_c, matched = dcb.newest_match(
+                match_ok_c, buf.t[idx], cand_valid
+            )
+            chosen = idx[idx_c]
+            n_patch_overflow = zero
+            n_patch_checked = zero
         n_full_checks = pre.n_full
         n_overflow = pre.n_overflow
     elif fused_match is not None:
@@ -204,8 +293,11 @@ def tsrc_step(
             c_min=cfg.c_min,
         )
         match_ok = pair_ok & buf.valid[:, None] & saliency_mask[None, :]
+        chosen, matched = dcb.newest_match(match_ok, buf.t, buf.valid)
         n_full_checks = None  # dense: derived from overlap_ok below
-        n_overflow = jnp.zeros((), jnp.int32)
+        n_overflow = zero
+        n_patch_overflow = zero
+        n_patch_checked = zero
     else:
         diff, coverage, bbox = reproject_match(
             buf.rgb,
@@ -224,16 +316,18 @@ def tsrc_step(
         overlap_ok = overlap >= cfg.o_min
         entry_ok = (diff <= cfg.tau) & (coverage >= cfg.c_min) & buf.valid
         match_ok = entry_ok[:, None] & overlap_ok & saliency_mask[None, :]
+        chosen, matched = dcb.newest_match(match_ok, buf.t, buf.valid)
         n_full_checks = None  # dense: derived from overlap_ok below
-        n_overflow = jnp.zeros((), jnp.int32)
-    idx, matched = dcb.newest_match(match_ok, buf.t, buf.valid)
+        n_overflow = zero
+        n_patch_overflow = zero
+        n_patch_checked = zero
     # Snapshot the occupancy the TRD actually ran against: insertion
     # below permutes slots (top-k keep), so counters derived from the
     # post-insert mask would charge work against the wrong entries.
     valid_pre = buf.valid
 
     # --- Popularity bump for matches (step 3). ------------------------------
-    buf = dcb.bump_popularity(buf, idx, matched, t_now=t_now)
+    buf = dcb.bump_popularity(buf, chosen, matched, t_now=t_now)
 
     # --- Insert unmatched salient patches. ----------------------------------
     insert_mask = saliency_mask & ~matched
@@ -261,6 +355,8 @@ def tsrc_step(
         n_full_checks=n_full_checks,
         buffer_valid=dcb.count_valid(buf),
         n_prefilter_overflow=n_overflow,
+        n_patch_overflow=n_patch_overflow,
+        n_patch_checked=n_patch_checked,
     )
     return buf, stats
 

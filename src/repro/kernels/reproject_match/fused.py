@@ -27,6 +27,14 @@ registers under ``"fused"``; the whole-step entry point is attached as
 its ``fused_match`` capability attribute, which ``tsrc_step`` picks up
 via ``getattr`` — neither the op dispatcher in ``ops.py`` nor the TSRC
 step body needs editing for a new fused backend to slot in.
+
+Candidate-slab composition (sparse TRD v2): the entry point is shape-
+polymorphic over its leading entry axis, so the sparse prefilter feeds
+it the gathered ``(K, ...)`` candidate slabs directly — fused ∘ sparse,
+one kernel pass per *candidate* instead of per entry, with the mask
+rows bitwise the thresholded ``"pallas"`` scores on the same slabs
+(``tests/test_sparse_v2.py``).  The former "prefilter takes precedence
+over fused_match" carve-out in ``tsrc_step`` is gone.
 """
 
 from __future__ import annotations

@@ -23,6 +23,20 @@ Phase 2 — :func:`sparse_reproject_match` (expensive, ``K`` entries)
     of ``(N, ...)``; scatter ``diff``/``coverage``/``bbox`` back with
     non-candidates forced non-matching (``diff = 1``, ``coverage = 0``).
 
+Patch-side mirror — :func:`compact_salient_patches` (sparse TRD v2)
+    The entry axis is not the only dense axis: with only the candidate
+    entries scored, the match-mask algebra and ``dcb.newest_match``
+    still ran over all ``M`` frame patches.  ``compact_salient_patches``
+    applies the same composite top-K trick on the *patch* axis — a
+    static top-``P_k`` gather keyed on ``(salient, has-passing-entry)``
+    so downstream association runs on ``(K, P_k)`` compacted slabs and
+    scatters back.  Bit-identical to the dense patch axis whenever at
+    most ``P_k`` salient patches exist (every salient patch outranks
+    every non-salient one); when more exist, the ones some passing entry
+    overlaps win the slots, and the truncated remainder is conservative
+    (those patches can't match, so they are re-inserted — never falsely
+    matched).  ``n_overflow`` counts the truncated salient patches.
+
 Exactness falls out of the match predicate: an entry can only match a
 patch when its bbox overlaps that salient patch with ``overlap >=
 o_min`` (exactly the pass condition), and ``dcb.newest_match`` already
@@ -116,6 +130,54 @@ def bbox_prefilter(
     )
 
 
+class PatchCompaction(NamedTuple):
+    """Patch-axis mirror of the candidate set: top-``P_k`` salient slots."""
+
+    idx: Array  # (P_k,) int32 — compacted patch-slot indices
+    real: Array  # (P_k,) bool — slot holds an actual salient patch
+    n_salient: Array  # () int32 — salient patches in the frame
+    n_compacted: Array  # () int32 — salient patches that won a slot
+    n_overflow: Array  # () int32 — salient patches truncated
+
+
+def compact_salient_patches(
+    salient: Array,  # (M,) bool SRD saliency of the current frame
+    overlap_ok: Array,  # (N, M) bool — phase-1 bbox-overlap bits
+    passes: Array,  # (N,) bool — phase-1 per-entry pass flags
+    *,
+    k: int,
+) -> PatchCompaction:
+    """Static top-``P_k`` gather of the salient patch slots.
+
+    Composite key (same trick as the entry-side candidate select):
+    salient patches that some *passing* entry bbox-overlaps rank
+    highest (they are the only ones that can match), bare salient
+    patches next, non-salient patches last (they only ever fill unused
+    slots, masked out via ``real``).  ``k`` must be a static Python int
+    (it sizes the patch gather); callers clamp it to ``M``.
+
+    Whenever at most ``P_k`` salient patches exist, every salient patch
+    wins a slot and the compacted association is bit-identical to the
+    dense patch axis.  Truncation drops salient patches from the match
+    algebra only — they are conservatively treated as unmatched (extra
+    insertions, never false matches).
+    """
+    k = min(k, salient.shape[0])
+    has_entry = jnp.any(overlap_ok & passes[:, None], axis=0)  # (M,)
+    key = salient.astype(jnp.int32) + (salient & has_entry).astype(jnp.int32)
+    _, idx = jax.lax.top_k(key, k)  # ties broken by lowest index
+    real = salient[idx]
+    n_salient = jnp.sum(salient.astype(jnp.int32))
+    n_compacted = jnp.sum(real.astype(jnp.int32))
+    return PatchCompaction(
+        idx=idx.astype(jnp.int32),
+        real=real,
+        n_salient=n_salient,
+        n_compacted=n_compacted,
+        n_overflow=n_salient - n_compacted,
+    )
+
+
 def sparse_reproject_match(
     entry_rgb: Array,  # (N, P, P, 3)
     entry_depth: Array,  # (N, P, P)
@@ -135,6 +197,12 @@ def sparse_reproject_match(
     ``(N, 4)`` bbox with non-candidates forced non-matching
     (``diff = 1.0``, ``coverage = 0.0`` — the op's own "no match
     possible" convention) and carrying their phase-1 corner bbox.
+
+    This is the standard-contract composition for callers that want
+    dense-shaped op outputs.  ``tsrc_step`` itself no longer scatters:
+    since sparse TRD v2 it keeps the whole match algebra on the
+    ``(K, ...)`` candidate axis (optionally ``(K, P_k)`` patch-compacted)
+    and scatters only the per-patch ``matched``/``chosen`` results.
     """
     from repro.kernels.reproject_match.ops import reproject_match
 

@@ -12,6 +12,10 @@ are unchanged bit for bit; only the EPIC ``n_bbox_checks``/``n_full_checks``
 counters moved (now measured against the pre-insert buffer the TRD actually
 ran on, instead of the permuted post-insert occupancy) and the
 ``n_prefilter_overflow`` leaf was appended (0 on the dense path pinned here).
+
+Refreshed again with Sparse TRD v2: every pre-existing leaf is unchanged
+bit for bit; only the ``n_patch_overflow`` / ``n_patch_checked`` counter
+leaves were appended (both 0 on the dense path pinned here).
 """
 
 import os
