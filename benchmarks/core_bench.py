@@ -165,8 +165,20 @@ def run(quick: bool = False, seed: int = 0, interpret: bool = False) -> Dict:
         if not m.get("skipped"):
             m["speedup_vs_epic"] = round(epic_ms / m["step_ms"], 2)
 
+    # The serving-runtime row (benchmarks/serve_bench.py) lives in the
+    # same trajectory file but is produced by a different bench; keep
+    # it across core rewrites so `--only core` can't silently drop it.
+    prev_serve = None
+    try:
+        with open(os.path.join(REPO_ROOT, "BENCH_core.json")) as f:
+            prev_serve = json.load(f).get("methods", {}).get("serve")
+    except (OSError, json.JSONDecodeError):
+        pass
+    if prev_serve is not None:
+        methods["serve"] = prev_serve
+
     out = {
-        "schema": "epic-core-bench-v3",
+        "schema": "epic-core-bench-v4",
         "quick": quick,
         "protocol": {
             "n_frames": N_FRAMES,

@@ -77,10 +77,11 @@ def run(seed: int = 0) -> Dict:
         pool.init(),
         api.SensorChunk(batch.frames, batch.poses, batch.gazes, batch.depth),
     )
-    counters = [
-        P.stream_counters(ecfg, jax.tree.map(lambda x: x[i], stats))
-        for i in range(N_STREAMS)
-    ]
+    # Batched per-stream counter readback: one device_get for the whole
+    # pool instead of one blocking sync per stream (serve/telemetry.py).
+    from repro.serve import pool_stream_counters
+
+    counters = pool_stream_counters(ecfg, stats)
 
     def avg(field):
         return float(np.mean([getattr(c, field) for c in counters]))

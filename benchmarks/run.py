@@ -3,6 +3,9 @@
   core     -> core_bench        (frames/sec + retained bytes per method;
                                  also writes the repo-root BENCH_core.json
                                  perf trajectory)
+  serve    -> serve_bench       (StreamServer steady-state frames/sec
+                                 under 25% churn; merges the `serve` row
+                                 into BENCH_core.json)
   table1   -> evu_accuracy      (EVU accuracy vs memory, 5 methods)
   figure6  -> energy_model      (system energy + memory, 7 systems)
   ablation -> compression_sweep (motion/bypass/depth ablations)
@@ -32,13 +35,13 @@ def main():
     ap.add_argument(
         "--only", default=None,
         help="comma-separated sub-benchmark names "
-             "(core,table1,figure6,ablation,roofline)",
+             "(core,serve,table1,figure6,ablation,roofline)",
     )
     args = ap.parse_args()
 
     t0 = time.time()
     summary = {}
-    known = {"core", "table1", "figure6", "ablation", "roofline"}
+    known = {"core", "serve", "table1", "figure6", "ablation", "roofline"}
     selected = None if args.only is None else set(args.only.split(","))
     if selected is not None and not selected <= known:
         # Fail loudly: a typo'd/renamed name would otherwise run nothing
@@ -58,7 +61,15 @@ def main():
         summary["core_frames_per_sec"] = {
             name: m["frames_per_sec"]
             for name, m in r["methods"].items()
-            if not m.get("skipped")
+            # the preserved `serve` row carries its own per-pool fields
+            if not m.get("skipped") and "frames_per_sec" in m
+        }
+    if want("serve"):
+        from benchmarks import serve_bench
+
+        r = serve_bench.run(quick=args.quick)
+        summary["serve_frames_per_sec"] = {
+            name: p["frames_per_sec"] for name, p in r["pools"].items()
         }
     if want("figure6"):
         from benchmarks import energy_model

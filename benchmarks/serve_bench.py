@@ -1,0 +1,208 @@
+"""Serving throughput: steady-state frames/sec of a churning StreamServer.
+
+The serving-runtime perf row: a :class:`repro.serve.StreamServer` pool
+(EPIC with the sparse-TRD config of the ``epic[sparse]`` core row)
+ingests a live population with **25% churn** — every churn interval a
+quarter of the slots are evicted and fresh sessions admitted into them
+— at pool sizes 4 and 16.  Because admission/eviction are masked
+scatters on a fixed-capacity pool, churn costs no recompiles; the
+number reported is the post-warmup steady state (double-buffered
+ingest, one host sync per tick).
+
+``benchmarks/run.py --only serve`` merges the summary as the ``serve``
+row of the repo-root ``BENCH_core.json`` (schema v4 — ``core_bench``
+preserves the row when it rewrites the file) and writes the full
+detail to ``benchmarks/results/serve_bench.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+
+from repro import api
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+from repro.serve import Prefetch, ServerConfig, StreamServer
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FRAME = 64
+PATCH = 16
+CHUNK_FRAMES = 8
+# Same knobs as the core bench's epic[sparse] row, so the serve numbers
+# sit on the same per-stream cost basis.
+CAPACITY = 192
+SPARSE_K = 24
+SPARSE_PATCH_K = 16
+POOL_SIZES = (4, 16)
+CHURN_FRACTION = 0.25
+# Evict/admit churn_fraction of the pool every CHURN_EVERY timed ticks.
+CHURN_EVERY = 2
+
+
+def _cfg() -> P.EPICConfig:
+    return P.EPICConfig(
+        frame_hw=(FRAME, FRAME), patch=PATCH, capacity=CAPACITY,
+        tau=0.10, gamma=0.015, theta=8, window=16,
+        prefilter_k=SPARSE_K, patch_k=SPARSE_PATCH_K,
+    )
+
+
+def _chunk_feed(key, n_chunks: int):
+    """An endless-enough synthetic sensor feed, pre-generated on host."""
+    scfg = SYN.StreamConfig(
+        n_frames=n_chunks * CHUNK_FRAMES, hw=(FRAME, FRAME), n_obj=5
+    )
+    s, _ = SYN.generate_stream(key, scfg)
+    return [
+        api.SensorChunk(
+            s.frames[lo:lo + CHUNK_FRAMES],
+            s.poses[lo:lo + CHUNK_FRAMES],
+            s.gazes[lo:lo + CHUNK_FRAMES],
+            s.depth[lo:lo + CHUNK_FRAMES],
+        )
+        for lo in range(0, scfg.n_frames, CHUNK_FRAMES)
+    ]
+
+
+def _bench_pool(pool_size: int, seed: int, warmup: int, timed: int) -> Dict:
+    key = jax.random.PRNGKey(seed)
+    srv = StreamServer(
+        api.EPICCompressor(_cfg()),
+        ServerConfig(capacity=pool_size, chunk_frames=CHUNK_FRAMES,
+                     queue_depth=2),
+    )
+    n_chunks = warmup + timed + 2
+    feeds = {
+        i: iter(Prefetch(_chunk_feed(jax.random.fold_in(key, i), n_chunks)))
+        for i in range(pool_size)
+    }
+    fresh_id = pool_size
+    n_churn = max(1, int(pool_size * CHURN_FRACTION))
+
+    def tick():
+        for sid in list(srv.live_sessions):
+            srv.submit(sid, next(feeds[sid]))
+        srv.tick()
+
+    for i in range(pool_size):
+        srv.admit(i)
+    for _ in range(warmup):
+        tick()
+    jax.block_until_ready(srv.pool.states.sessions)
+
+    frames0 = srv.frames_served
+    t0 = time.perf_counter()
+    for t in range(timed):
+        if t and t % CHURN_EVERY == 0:
+            # 25% churn: evict the longest-lived quarter, admit fresh
+            # sessions (fresh synthetic feeds) into the freed slots.
+            victims = sorted(srv.live_sessions,
+                             key=lambda s: srv.telemetry(s).admitted_tick
+                             )[:n_churn]
+            for sid in victims:
+                srv.close(sid)
+                feeds.pop(sid)
+            for _ in range(n_churn):
+                sid = fresh_id
+                fresh_id += 1
+                srv.admit(sid)
+                feeds[sid] = iter(Prefetch(
+                    _chunk_feed(jax.random.fold_in(key, 1000 + sid),
+                                n_chunks)
+                ))
+        tick()
+    jax.block_until_ready(srv.pool.states.sessions)
+    wall = time.perf_counter() - t0
+
+    frames = srv.frames_served - frames0
+    assert srv.n_evicted >= n_churn, "churn never happened"
+    sizes = srv.pool.step_cache_sizes()
+    assert all(v == 1 for v in sizes.values()), (
+        f"serving path retraced: {sizes}"
+    )
+    return {
+        "frames_per_sec": round(frames / wall, 2),
+        "tick_ms": round(wall / timed * 1e3, 3),
+        "frames": frames,
+        "n_evicted": srv.n_evicted,
+        "n_admitted": srv.n_admitted,
+    }
+
+
+def _merge_bench_core(row: Dict) -> None:
+    """Insert/refresh the ``serve`` row of the repo-root trajectory."""
+    path = os.path.join(REPO_ROOT, "BENCH_core.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        # No trajectory yet: a serve-only skeleton (core_bench stamps
+        # the real schema + protocol when it next runs).
+        doc = {"schema": "epic-core-bench-v4", "methods": {}}
+    # Never relabel an existing file: its core rows were produced under
+    # whatever schema it declares; only the serve row is refreshed here.
+    doc.setdefault("methods", {})["serve"] = row
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def run(quick: bool = False, seed: int = 0) -> Dict:
+    t0 = time.time()
+    warmup = 2 if quick else 3
+    timed = 6 if quick else 12
+    pools = {}
+    for n in POOL_SIZES:
+        pools[f"pool{n}"] = _bench_pool(n, seed, warmup, timed)
+        print(f"[serve] pool={n:3d} 25% churn  "
+              f"{pools[f'pool{n}']['frames_per_sec']:9.1f} f/s  "
+              f"({pools[f'pool{n}']['tick_ms']:.1f} ms/tick)")
+
+    row = {
+        "backend": "ref",
+        "interpret": False,
+        "prefilter_k": SPARSE_K,
+        "patch_k": SPARSE_PATCH_K,
+        "chunk_frames": CHUNK_FRAMES,
+        "churn_pct": int(CHURN_FRACTION * 100),
+        **{
+            f"pool{n}_frames_per_sec": pools[f"pool{n}"]["frames_per_sec"]
+            for n in POOL_SIZES
+        },
+    }
+    out = {
+        "schema": "epic-serve-bench-v1",
+        "quick": quick,
+        "protocol": {
+            "frame_hw": FRAME,
+            "patch": PATCH,
+            "epic_capacity": CAPACITY,
+            "chunk_frames": CHUNK_FRAMES,
+            "pool_sizes": list(POOL_SIZES),
+            "churn": f"{int(CHURN_FRACTION * 100)}% of slots every "
+                     f"{CHURN_EVERY} ticks",
+            "timing": f"{timed} ticks post-warmup ({warmup} warmup), "
+                      "double-buffered ingest",
+            "device": jax.devices()[0].platform,
+        },
+        "pools": pools,
+        "serve_row": row,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "serve_bench.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    _merge_bench_core(row)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--quick" in sys.argv)

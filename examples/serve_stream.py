@@ -1,14 +1,17 @@
-"""Serving example: a mesh-sharded EPIC StreamPool feeding EPIC-compressed
-patches as cross-attention context for a (reduced) llama-3.2-vision-style
-VLM — prefill then batched greedy decode, exactly the paper's Figure 1
-deployment: a pod of glasses streams compresses, the EFM answers from the
-retained patches.
+"""Serving example: a live, mesh-sharded EPIC StreamServer feeding
+EPIC-compressed patches as cross-attention context for a (reduced)
+llama-3.2-vision-style VLM — prefill then batched greedy decode, exactly
+the paper's Figure 1 deployment: a pod of glasses streams compresses,
+the EFM answers from the retained patches.
 
-The pool ingests ``N_STREAMS`` concurrent glasses streams in 10-frame
-chunks.  With more than one device it shards the stream axis across a
-``("streams",)`` mesh (each device carrying its own donated shard of
-session state); on a single device it automatically falls back to the
-plain vmapped pool — the program is identical either way.
+The server admits ``N_STREAMS`` glasses streams into a slotted pool and
+ingests 10-frame chunks through double-buffered (prefetched) queues,
+with per-stream adaptive-K rung state.  Mid-run one user takes the
+glasses off (eviction) and a new one is admitted into the freed slot —
+no recompiles, the pool program is fixed-capacity.  With more than one
+device the slot axis is sharded across a ``("streams",)`` mesh; on a
+single device it automatically falls back to the plain vmapped pool —
+the program is identical either way.
 
 Also demonstrates the serving-memory story per family: the same token
 budget is served against a dense-KV arch vs an O(1)-state arch (rwkv6).
@@ -28,67 +31,125 @@ from repro.core import packing
 from repro.core import pipeline as P
 from repro.data import synthetic as SYN
 from repro.launch.mesh import make_stream_mesh
-from repro.launch.serve import greedy_decode_loop
 from repro.models import build_model
+from repro.serve import (
+    Prefetch,
+    ServerConfig,
+    StreamServer,
+    greedy_decode_loop,
+    pool_stream_counters,
+)
 
 N_STREAMS = 4
 CHUNK_FRAMES = 10
+N_FRAMES = 40
+
+
+def _chunks(s):
+    for lo in range(0, N_FRAMES, CHUNK_FRAMES):
+        yield api.SensorChunk(
+            s.frames[lo:lo + CHUNK_FRAMES],
+            s.poses[lo:lo + CHUNK_FRAMES],
+            s.gazes[lo:lo + CHUNK_FRAMES],
+            s.depth[lo:lo + CHUNK_FRAMES],
+        )
 
 
 def compress(key):
-    """A pool of EPIC sessions: chunked ingest (10-frame spans, as live
-    feeds would deliver them), then token export for the EFM."""
-    scfg = SYN.StreamConfig(n_frames=40, hw=(64, 64), n_obj=5)
+    """A live server of EPIC sessions: slotted admission, chunked
+    prefetched ingest, mid-run churn, then token export for the EFM."""
+    scfg = SYN.StreamConfig(n_frames=N_FRAMES, hw=(64, 64), n_obj=5)
     ecfg = P.EPICConfig(frame_hw=(64, 64), patch=16, capacity=16,
-                        tau=0.10, gamma=0.015, theta=8, window=16)
+                        tau=0.10, gamma=0.015, theta=8, window=16,
+                        prefilter_k=4)
     streams = [
         SYN.generate_stream(jax.random.fold_in(key, i), scfg)[0]
-        for i in range(N_STREAMS)
+        for i in range(N_STREAMS + 1)  # +1 joins after the eviction
     ]
-    batch = jax.tree.map(lambda *xs: jnp.stack(xs), *streams)
-    stream = api.SensorChunk(
-        batch.frames, batch.poses, batch.gazes, batch.depth
-    )
 
-    comp = api.get_compressor("epic")(ecfg)
     n_dev = len(jax.devices())
     if n_dev > 1 and N_STREAMS % n_dev == 0:
         mesh = make_stream_mesh()
-        pool = api.StreamPool(comp, N_STREAMS, mesh=mesh)
         mode = f"shard_map over {n_dev}-device ('streams',) mesh"
     else:
-        pool = api.StreamPool(comp, N_STREAMS)
+        mesh = None
         mode = (
             "vmap fallback (single device)" if n_dev == 1
-            else f"vmap fallback ({N_STREAMS} streams don't divide over "
+            else f"vmap fallback ({N_STREAMS} slots don't divide over "
                  f"{n_dev} devices)"
         )
-    print(f"StreamPool({N_STREAMS}): {mode}")
+    srv = StreamServer(
+        api.get_compressor("epic")(ecfg),
+        ServerConfig(capacity=N_STREAMS, chunk_frames=CHUNK_FRAMES,
+                     k_ladder=(4, 8, 16)),
+        mesh=mesh,
+    )
+    print(f"StreamServer({N_STREAMS} slots): {mode}")
 
-    states = pool.init()
-    for start in range(0, scfg.n_frames, CHUNK_FRAMES):
-        states, _ = pool.step(
-            states,
-            api.SensorChunk(
-                stream.frames[:, start:start + CHUNK_FRAMES],
-                stream.poses[:, start:start + CHUNK_FRAMES],
-                stream.gazes[:, start:start + CHUNK_FRAMES],
-                stream.depth[:, start:start + CHUNK_FRAMES],
-            ),
-        )
-    pool_ts = pool.tokens(states, 16)
-    kept = int(pool_ts.mask.sum())
-    print(f"EPIC pool retained {kept}/{N_STREAMS * 640} patches across "
-          f"{N_STREAMS} streams -> {pool_ts.tokens.shape[1]} "
-          f"cross-attention tokens each")
+    # Admit the initial population; stream 1 leaves after 2 chunks and a
+    # late joiner is admitted into its freed slot (fresh session, same
+    # compiled programs — admission/eviction never retrace).
+    feeds = {i: iter(Prefetch(_chunks(streams[i])))
+             for i in range(N_STREAMS)}
+    for i in range(N_STREAMS):
+        srv.admit(i)
+    for tick in range(N_FRAMES // CHUNK_FRAMES):
+        if tick == 2:
+            tele = srv.close(1)
+            print(f"  tick {tick}: evicted stream 1 "
+                  f"(served {tele.n_frames} frames, "
+                  f"k_trajectory={tele.k_trajectory}); admitting 'late' "
+                  f"into slot {srv.admit('late')}")
+            feeds["late"] = iter(Prefetch(_chunks(streams[N_STREAMS])))
+        for sid in srv.live_sessions:
+            srv.submit(sid, next(feeds[sid]))
+        srv.tick()
+
+    counters = srv.server_counters()
+    print(f"  {counters['frames_served']} frames over "
+          f"{counters['n_ticks']} ticks, {counters['n_admitted']} "
+          f"admissions / {counters['n_evicted']} evictions; per-stream "
+          f"K rungs: "
+          f"{ {s: srv.telemetry(s).k_trajectory[-1] for s in srv.live_sessions} }")
+    print(f"  steady-state jit traces per rung: "
+          f"{srv.pool.step_cache_sizes()} (no churn retraces)")
+
+    ts0 = srv.tokens(0, 16)
+    kept = sum(int(srv.export(s).valid.sum()) for s in srv.live_sessions)
+    print(f"EPIC server retained {kept} patches across "
+          f"{len(srv.live_sessions)} live streams -> "
+          f"{ts0.tokens.shape[0]} cross-attention tokens each")
     # Serve stream 0's context to the EFM below.
-    return jax.tree.map(lambda x: x[0], pool_ts)
+    return ts0
+
+
+def energy_counters(key):
+    """The energy-model bridge over a batched pool: per-stream counters
+    read back in ONE device_get (serve/telemetry.py), not one blocking
+    sync per stream."""
+    scfg = SYN.StreamConfig(n_frames=N_FRAMES, hw=(64, 64), n_obj=5)
+    ecfg = P.EPICConfig(frame_hw=(64, 64), patch=16, capacity=16,
+                        tau=0.10, gamma=0.015, theta=8, window=16)
+    streams = [
+        SYN.generate_stream(jax.random.fold_in(key, 10 + i), scfg)[0]
+        for i in range(N_STREAMS)
+    ]
+    batch = jax.tree.map(lambda *xs: jnp.stack(xs), *streams)
+    pool = api.StreamPool(api.get_compressor("epic")(ecfg), N_STREAMS)
+    _, stats = pool.step(pool.init(), api.SensorChunk(
+        batch.frames, batch.poses, batch.gazes, batch.depth
+    ))
+    counters = pool_stream_counters(ecfg, stats)
+    traffic = [c.dc_traffic_bytes for c in counters]
+    print(f"pool DC traffic per stream (batched single-sync readback): "
+          f"{traffic} bytes")
 
 
 def main():
     key = jax.random.PRNGKey(0)
     batch = 4
     ts = compress(jax.random.fold_in(key, 0))
+    energy_counters(jax.random.fold_in(key, 4))
 
     # --- VLM: EPIC patches ARE the cross-attn KV ---------------------------
     cfg = get_smoke_config("llama-3.2-vision-11b")

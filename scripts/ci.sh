@@ -5,6 +5,7 @@
 #   scripts/ci.sh                     # full tier-1 suite (~10 min, 2 cores)
 #   scripts/ci.sh --kernels           # Pallas interpret-mode kernel lane
 #   scripts/ci.sh --bench-smoke       # headless benchmarks/run.py --quick
+#   scripts/ci.sh --serve             # serving-runtime suite + bench smoke
 #   scripts/ci.sh tests/test_api.py   # any extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -23,6 +24,17 @@ if [[ "${1:-}" == "--kernels" ]]; then
   shift
   exec python -m pytest -q tests/test_kernels.py tests/test_fused_tsrc.py \
     tests/test_sparse_tsrc.py tests/test_sparse_v2.py "$@"
+fi
+
+if [[ "${1:-}" == "--serve" ]]; then
+  # Serving-runtime lane: the repro.serve suite (slotted admission/
+  # eviction, per-stream adaptive-K parity, prefetch bit-identity,
+  # 2-device shard_map subprocess, the churn soak) followed by a
+  # smoke of the serve bench — refreshes the `serve` row of
+  # BENCH_core.json and fails if the serving path retraced.
+  shift
+  python -m pytest -q tests/test_serve.py "$@"
+  exec python -m benchmarks.run --quick --only serve
 fi
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then

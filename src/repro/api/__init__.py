@@ -14,7 +14,14 @@ Public surface:
   validate_backend / validate_prefilter_k /
   validate_patch_k / validate_k_ladder,
   get_stage / make_stage /
-  register_stage / available_stages           (registry)
+  register_stage / available_stages,
+  get_combinator / make_combinator /
+  register_combinator /
+  available_combinators                       (registry)
+
+The live serving runtime above the pool — slotted admission/eviction,
+per-stream adaptive K, double-buffered ingest — lives in
+:mod:`repro.serve` (``StreamServer`` / ``SlottedPool``).
 
 See ``src/repro/api/README.md`` for the protocol contract and the
 migration guide from the legacy one-shot ``pipeline.compress_stream``.
@@ -29,13 +36,17 @@ from __future__ import annotations
 
 from repro.api.registry import (  # noqa: F401
     available_backends,
+    available_combinators,
     available_compressors,
     available_stages,
     get_backend,
+    get_combinator,
     get_compressor,
     get_stage,
+    make_combinator,
     make_stage,
     register_backend,
+    register_combinator,
     register_compressor,
     register_stage,
     validate_backend,
@@ -70,13 +81,17 @@ __all__ = [
     "iter_chunks",
     "concat_stats",
     "available_backends",
+    "available_combinators",
     "available_compressors",
     "available_stages",
     "get_backend",
+    "get_combinator",
     "get_compressor",
     "get_stage",
+    "make_combinator",
     "make_stage",
     "register_backend",
+    "register_combinator",
     "register_compressor",
     "register_stage",
     "validate_backend",

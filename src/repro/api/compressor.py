@@ -133,7 +133,10 @@ class EPICCompressor:
     ladder configured, ``step`` is host-driven: do not wrap it in
     ``jax.jit`` (its per-rung inner steps are already jitted); the rung
     is per-session state on the instance, so use one compressor instance
-    per stream.
+    per stream — or serve many adaptive streams from one batched pool
+    via ``repro.serve.StreamServer``, which holds one
+    :class:`repro.serve.adaptive.KLadderController` (the same rule,
+    extracted) per stream and buckets slots by rung.
     """
 
     def __init__(
@@ -144,41 +147,29 @@ class EPICCompressor:
         k_ladder: Optional[Tuple[int, ...]] = None,
         shrink_margin: int = 2,
     ):
+        from repro.serve.adaptive import make_controller
+
         self.cfg = cfg
         self.models = pipe.EPICModels() if models is None else models
-        self.k_ladder = (
-            None
-            if k_ladder is None
-            else registry_mod.validate_k_ladder(k_ladder)
+        self._ctl = make_controller(
+            k_ladder,
+            start_k=cfg.prefilter_k,
+            shrink_margin=shrink_margin,
+            what="cfg.prefilter_k",
         )
-        if k_ladder is not None and (
-            not isinstance(shrink_margin, int) or shrink_margin < 1
-        ):
-            # margin < 1 makes the shrink condition vacuous: the
-            # controller would sink a rung after every overflow-free
-            # chunk and oscillate under load.
-            raise ValueError(
-                f"shrink_margin must be an int >= 1, got {shrink_margin!r}"
-            )
+        self.k_ladder = None if self._ctl is None else self._ctl.ladder
         self.shrink_margin = shrink_margin
-        if self.k_ladder is not None:
-            if cfg.prefilter_k in self.k_ladder:
-                self._rung = self.k_ladder.index(cfg.prefilter_k)
-            elif cfg.prefilter_k == 0:
-                self._rung = 0
-            else:
-                raise ValueError(
-                    f"cfg.prefilter_k={cfg.prefilter_k} is not a rung of "
-                    f"k_ladder={self.k_ladder} (use 0 to start at the "
-                    f"bottom rung)"
-                )
+        if self._ctl is not None:
             self._rung_steps: dict = {}
-            #: K used by each past chunk, in order (the controller's
-            #: deterministic trajectory; exposed for tests/telemetry).
-            self.k_trajectory: list = []
             # run_session caches a jitted step on this attribute; the
             # adaptive step is host-driven and must not be re-jitted.
             self._jit_step = self.step
+
+    @property
+    def k_trajectory(self) -> list:
+        """K used by each past chunk, in order (the controller's
+        deterministic trajectory; exposed for tests/telemetry)."""
+        return self._ctl.k_trajectory
 
     def init(self) -> pipe.EPICState:
         return pipe.init_state(self.cfg)
@@ -224,8 +215,7 @@ class EPICCompressor:
     def _adaptive_step(
         self, state: pipe.EPICState, chunk: SensorChunk
     ) -> Tuple[pipe.EPICState, pipe.FrameStats]:
-        k = self.k_ladder[self._rung]
-        self.k_trajectory.append(k)
+        k = self._ctl.begin_chunk()
         state, stats = self._rung_step(k)(state, chunk)
         overflow, peak_full = (
             int(x)
@@ -236,14 +226,7 @@ class EPICCompressor:
                 )
             )
         )
-        if overflow > 0 and self._rung < len(self.k_ladder) - 1:
-            self._rung += 1
-        elif (
-            self._rung > 0
-            and peak_full * self.shrink_margin
-            <= self.k_ladder[self._rung - 1]
-        ):
-            self._rung -= 1
+        self._ctl.update(overflow, peak_full)
         return state, stats
 
     def export(self, state: pipe.EPICState) -> ret.RetainedPatches:

@@ -63,13 +63,18 @@ class StreamPool:
     ):
         if getattr(compressor, "k_ladder", None) is not None:
             # The adaptive-K controller is host-driven (device_get +
-            # Python rung state between chunks): vmapping its step would
-            # die deep inside the trace with a ConcretizationTypeError.
+            # Python rung state between chunks): the legacy lock-step
+            # vmap of this pool genuinely cannot express per-stream
+            # rungs — vmapping the host-driven step would die deep
+            # inside the trace with a ConcretizationTypeError.  The
+            # serving runtime CAN: it holds one controller per slot and
+            # buckets slots by rung.
             raise ValueError(
-                "StreamPool cannot batch an adaptive-K compressor "
-                "(k_ladder is host-side, per-session state); pool a "
-                "fixed-K compressor, or run one adaptive session per "
-                "stream"
+                "StreamPool runs every stream in lock-step and cannot "
+                "batch an adaptive-K compressor (k_ladder is host-side, "
+                "per-session state); serve adaptive streams through "
+                "repro.serve.StreamServer(ServerConfig(k_ladder=...)), "
+                "which keeps per-stream rung state over a slotted pool"
             )
         self.compressor = compressor
         self.n_streams = n_streams

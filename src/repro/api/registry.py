@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, Tuple
 _COMPRESSORS: Dict[str, type] = {}
 _KERNEL_BACKENDS: Dict[str, Callable] = {}
 _STAGES: Dict[str, Callable] = {}
+_COMBINATORS: Dict[str, Callable] = {}
 
 
 def register_compressor(name: str) -> Callable[[type], type]:
@@ -260,3 +261,52 @@ def available_stages() -> Tuple[str, ...]:
 def _ensure_builtin_stages() -> None:
     # The built-in stages register themselves on import.
     from repro.core import frame_stages  # noqa: F401
+
+
+def register_combinator(name: str) -> Callable[[Any], Any]:
+    """Decorator: register a pipeline *combinator* under ``name``.
+
+    Combinators are the structural pieces a stage graph or a serving
+    loop composes around stages — they take pipelines/iterables, not
+    frames: ``"gated"`` (:class:`repro.api.stages.Gated`) wraps stages
+    in the frame-bypass ``lax.cond``; ``"prefetch"``
+    (:class:`repro.serve.ingest.Prefetch`) wraps a chunk source in
+    double-buffered host→device transfer.  Registered separately from
+    stages because their constructor contracts differ (a combinator is
+    not a ``FrameStage``).
+    """
+
+    def deco(factory: Any) -> Any:
+        _COMBINATORS[name] = factory
+        return factory
+
+    return deco
+
+
+def get_combinator(name: str) -> Callable:
+    """Look up a combinator factory by registry name (e.g. ``"gated"``)."""
+    _ensure_builtin_combinators()
+    try:
+        return _COMBINATORS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown combinator {name!r}; "
+            f"available: {sorted(_COMBINATORS)}"
+        ) from None
+
+
+def make_combinator(name: str, *args: Any, **kwargs: Any) -> Any:
+    """Construct a registered combinator: ``get_combinator(name)(...)``."""
+    return get_combinator(name)(*args, **kwargs)
+
+
+def available_combinators() -> Tuple[str, ...]:
+    _ensure_builtin_combinators()
+    return tuple(sorted(_COMBINATORS))
+
+
+def _ensure_builtin_combinators() -> None:
+    # "gated" registers when repro.api.stages imports; "prefetch" lives
+    # in the serving runtime (dependency-light module: jax + api.types).
+    from repro.api import stages  # noqa: F401
+    from repro.serve import ingest  # noqa: F401

@@ -43,6 +43,8 @@ from typing import (
 import jax
 import jax.numpy as jnp
 
+from repro.api.registry import register_combinator
+
 Array = jax.Array
 
 
@@ -98,6 +100,7 @@ class FrameStage(Protocol):
         ...
 
 
+@register_combinator("gated")
 class Gated:
     """Combinator: run ``stages`` under ``lax.cond(ctx.process, ...)``.
 

@@ -17,6 +17,13 @@ the baseline compositions in ``api/compressor``) construct them by name:
   ``retain``     — fixed-capacity append of selected patches (the
                    baselines' retained-buffer state).
 
+Structural *combinators* register separately
+(``repro.api.registry.register_combinator``): ``"gated"``
+(:class:`repro.api.stages.Gated`, the frame-bypass ``lax.cond`` these
+stages compose under) and ``"prefetch"``
+(:class:`repro.serve.ingest.Prefetch`, chunk-axis double buffering for
+the serving runtime) — see ``api.available_combinators()``.
+
 The stage bodies are the *same ops in the same order* as the former
 monolithic scan bodies — bit-identical outputs are pinned against
 pre-refactor goldens in ``tests/test_stages.py``.

@@ -358,49 +358,74 @@ def stream_counters(cfg: EPICConfig, stats: FrameStats, *, int8_depth=True):
 
     All per-field reductions transfer in a single ``jax.device_get``
     (one host sync) rather than one blocking ``int(...)`` per counter.
+    One-stream adapter over :func:`pool_stream_counters` — the byte
+    accounting lives in exactly one place.
+    """
+    return pool_stream_counters(
+        cfg, jax.tree.map(lambda x: x[None], stats)
+    )[0]
+
+
+def pool_stream_counters(cfg: EPICConfig, stats: FrameStats, *,
+                         streams=None):
+    """Per-stream ``energy.StreamCounters`` over a pooled stats pytree.
+
+    ``stats`` leaves carry leading ``(n_streams, T)`` axes (a
+    ``StreamPool``/``SlottedPool`` result).  Same numbers as calling
+    :func:`stream_counters` per stream — the reductions commute with
+    the leading-axis slice — but the whole pool transfers in a
+    **single** ``jax.device_get`` instead of one blocking sync per
+    stream.  ``streams`` optionally selects a subset of indices.
+    Re-exported as ``repro.serve.pool_stream_counters`` for the
+    serving-telemetry path.
     """
     from repro.core import energy
     from repro.core import retained as ret
 
     h, w = cfg.frame_hw
-    t = int(stats.processed.shape[0])
+    t = int(stats.processed.shape[1])
     n_proc, full_checks, bbox_checks, inserted, final_valid, pair_reads = (
-        int(x)
-        for x in jax.device_get(
+        jax.device_get(
             (
-                jnp.sum(stats.processed.astype(jnp.int32)),
-                jnp.sum(stats.n_full_checks),
-                jnp.sum(stats.n_bbox_checks),
-                jnp.sum(stats.n_inserted),
-                stats.buffer_valid[-1],
+                jnp.sum(stats.processed.astype(jnp.int32), axis=1),
+                jnp.sum(stats.n_full_checks, axis=1),
+                jnp.sum(stats.n_bbox_checks, axis=1),
+                jnp.sum(stats.n_inserted, axis=1),
+                stats.buffer_valid[:, -1],
                 # Patch-compacted association gathers: per frame, each of
                 # the n_full_checks candidates' bbox rows is read against
                 # each compacted patch slot.  n_patch_checked is 0 when
                 # no compaction ran, so dense runs charge exactly what
                 # they did before (their association is in-engine work,
                 # not DC traffic).
-                jnp.sum(stats.n_full_checks * stats.n_patch_checked),
+                jnp.sum(stats.n_full_checks * stats.n_patch_checked,
+                        axis=1),
             )
         )
     )
     patch_bytes = ret.patch_rgb_bytes(cfg.patch)
     entry_bytes = ret.dc_entry_bytes(cfg.patch)
-    return energy.StreamCounters(
-        n_frames=t,
-        frame_px=h * w,
-        n_processed=n_proc,
-        depth_macs=depth_mod_macs() * n_proc,
-        hir_macs=hir_macs() * n_proc,
-        n_bbox_checks=bbox_checks,
-        n_full_checks=full_checks,
-        patch_px=cfg.patch * cfg.patch,
-        stored_bytes=final_valid * entry_bytes,
-        dc_traffic_bytes=(
-            full_checks * patch_bytes
-            + inserted * entry_bytes
-            + pair_reads * ret.bbox_row_bytes()
-        ),
-    )
+    if streams is None:
+        streams = range(stats.processed.shape[0])
+    return [
+        energy.StreamCounters(
+            n_frames=t,
+            frame_px=h * w,
+            n_processed=int(n_proc[i]),
+            depth_macs=depth_mod_macs() * int(n_proc[i]),
+            hir_macs=hir_macs() * int(n_proc[i]),
+            n_bbox_checks=int(bbox_checks[i]),
+            n_full_checks=int(full_checks[i]),
+            patch_px=cfg.patch * cfg.patch,
+            stored_bytes=int(final_valid[i]) * entry_bytes,
+            dc_traffic_bytes=(
+                int(full_checks[i]) * patch_bytes
+                + int(inserted[i]) * entry_bytes
+                + int(pair_reads[i]) * ret.bbox_row_bytes()
+            ),
+        )
+        for i in streams
+    ]
 
 
 def depth_mod_macs() -> int:

@@ -1,0 +1,61 @@
+"""repro.serve — the live multi-stream serving runtime.
+
+The static batching layer (:mod:`repro.api.pool`) answers "ingest N
+streams in lock-step"; this package answers the deployment questions
+above it (ROADMAP north-star: production-scale serving):
+
+  SlottedPool, SlotStates          (slots)     fixed-capacity live pool:
+                                               per-slot active masks +
+                                               generation counters,
+                                               admit/evict without retrace
+  KLadderController               (adaptive)   per-stream adaptive-K rung
+                                               state (lifted out of
+                                               EPICCompressor)
+  Prefetch, ChunkQueue            (ingest)     double-buffered host→device
+                                               chunk transfer + bounded
+                                               per-stream queues
+  StreamServer, ServerConfig      (server)     the serving loop: admission,
+                                               rung-bucketed dispatch,
+                                               eviction policies,
+                                               backpressure
+  StreamTelemetry, tick_readback,
+  pool_stream_counters            (telemetry)  per-stream counters, one
+                                               batched device_get per tick
+  jit_prefill, jit_decode_step,
+  greedy_decode_loop              (efm)        the EFM prefill/decode steps
+                                               (moved from launch/serve)
+
+Everything loads lazily: dependency-light modules (``adaptive``,
+``ingest``) are imported by ``repro.api`` internals, so this package
+must not pull the full serving stack (or the model zoo in ``efm``) at
+import time.
+"""
+
+from __future__ import annotations
+
+_LAZY = {
+    "SlottedPool": "repro.serve.slots",
+    "SlotStates": "repro.serve.slots",
+    "KLadderController": "repro.serve.adaptive",
+    "Prefetch": "repro.serve.ingest",
+    "ChunkQueue": "repro.serve.ingest",
+    "StreamServer": "repro.serve.server",
+    "ServerConfig": "repro.serve.server",
+    "StreamTelemetry": "repro.serve.telemetry",
+    "tick_readback": "repro.serve.telemetry",
+    "pool_stream_counters": "repro.serve.telemetry",
+    "jit_prefill": "repro.serve.efm",
+    "jit_decode_step": "repro.serve.efm",
+    "greedy_decode_loop": "repro.serve.efm",
+}
+
+__all__ = list(_LAZY)
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

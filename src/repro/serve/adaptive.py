@@ -1,0 +1,129 @@
+"""Per-stream adaptive-K: the host-side bucket-ladder controller.
+
+PR 4 introduced adaptive K as a controller embedded in
+:class:`repro.api.compressor.EPICCompressor` — one rung of state per
+*compressor instance*, which made the controller unusable from any
+batched serving path (``StreamPool`` had to fail fast on it).  This
+module lifts the controller out into :class:`KLadderController`, a
+plain host-side object with no jax state at all:
+
+* ``EPICCompressor`` now owns one controller per session (behaviour and
+  ``k_trajectory`` bitwise unchanged — pinned by
+  ``tests/test_sparse_v2.py``), and
+* :class:`repro.serve.server.StreamServer` owns one controller per
+  *slot*, batching all slots that currently sit on the same rung into
+  one cached jitted pool step per rung (bucketed dispatch).
+
+The decision rule is unchanged from PR 4 and is a pure function of the
+per-chunk stats trajectory:
+
+* **grow** one rung when the chunk reported any
+  ``n_prefilter_overflow`` (the candidate budget truncated real work);
+* **shrink** one rung when the chunk's peak per-frame ``n_full_checks``
+  would fit the next-lower rung with a ``shrink_margin``× margin.
+
+A fixed ladder and a fixed chunk sequence therefore always produce the
+identical K trajectory, and a controller that never moves is
+bit-identical to the fixed-K run.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.api import registry as _registry
+
+
+def validate_shrink_margin(shrink_margin: int) -> int:
+    """Fail-fast check of the controller's shrink margin.
+
+    ``margin < 1`` makes the shrink condition vacuous: the controller
+    would sink a rung after every overflow-free chunk and oscillate
+    under load.
+    """
+    if not isinstance(shrink_margin, int) or shrink_margin < 1:
+        raise ValueError(
+            f"shrink_margin must be an int >= 1, got {shrink_margin!r}"
+        )
+    return shrink_margin
+
+
+class KLadderController:
+    """Host-side rung state of one adaptive-K stream.
+
+    Args:
+      ladder: static, strictly increasing ``prefilter_k`` buckets
+        (validated like ``EPICConfig`` knobs — fail fast on a typo).
+      start_k: the rung to start on.  ``0`` starts at the bottom rung;
+        any other value must be a ladder rung.
+      shrink_margin: shrink to the next-lower rung only when the peak
+        candidate count fits it with this multiplicative margin.
+      what: name used in the ``start_k`` error message (callers pass
+        the config field the value came from).
+    """
+
+    def __init__(
+        self,
+        ladder: Sequence[int],
+        *,
+        start_k: int = 0,
+        shrink_margin: int = 2,
+        what: str = "start_k",
+    ):
+        self.ladder: Tuple[int, ...] = _registry.validate_k_ladder(ladder)
+        self.shrink_margin = validate_shrink_margin(shrink_margin)
+        if start_k in self.ladder:
+            self._rung = self.ladder.index(start_k)
+        elif start_k == 0:
+            self._rung = 0
+        else:
+            raise ValueError(
+                f"{what}={start_k} is not a rung of "
+                f"k_ladder={self.ladder} (use 0 to start at the "
+                f"bottom rung)"
+            )
+        #: K used by each past chunk, in order (the controller's
+        #: deterministic trajectory; exposed for tests/telemetry).
+        self.k_trajectory: List[int] = []
+
+    @property
+    def k(self) -> int:
+        """The current rung's ``prefilter_k``."""
+        return self.ladder[self._rung]
+
+    def begin_chunk(self) -> int:
+        """Record the K the next chunk will run with, and return it."""
+        k = self.k
+        self.k_trajectory.append(k)
+        return k
+
+    def update(self, overflow: int, peak_full: int) -> int:
+        """Advance the rung from one chunk's scalar counters.
+
+        ``overflow`` is the chunk's summed ``n_prefilter_overflow``;
+        ``peak_full`` its max per-frame ``n_full_checks``.  Returns the
+        K the *next* chunk will use.
+        """
+        if overflow > 0 and self._rung < len(self.ladder) - 1:
+            self._rung += 1
+        elif (
+            self._rung > 0
+            and peak_full * self.shrink_margin <= self.ladder[self._rung - 1]
+        ):
+            self._rung -= 1
+        return self.k
+
+
+def make_controller(
+    ladder: Optional[Sequence[int]],
+    *,
+    start_k: int = 0,
+    shrink_margin: int = 2,
+    what: str = "start_k",
+) -> Optional[KLadderController]:
+    """``None``-propagating constructor: no ladder -> no controller."""
+    if ladder is None:
+        return None
+    return KLadderController(
+        ladder, start_k=start_k, shrink_margin=shrink_margin, what=what
+    )

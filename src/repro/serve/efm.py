@@ -1,0 +1,82 @@
+"""EFM serving steps: prefill and batched decode, pjit'ed on the mesh.
+
+Moved from ``repro.launch.serve`` (which remains as a deprecation
+shim): the serving runtime owns the full Figure-1 path — compressor
+pool (``serve.server``) feeding the Embodied Foundation Model's
+prefill/decode programs below.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ShapeSpec
+from repro.launch import sharding as S
+from repro.models.model import Model
+
+
+def jit_prefill(model: Model, mesh, shape_spec: ShapeSpec):
+    """pjit'ed full-context ingest. Lowered for the prefill_* shapes."""
+    pshape = model.param_spec()
+    pspecs = S.param_specs(model.cfg, pshape, mesh)
+    bspecs = S.batch_specs(model.cfg, shape_spec, mesh)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return jax.jit(
+        prefill,
+        in_shardings=(S.named(mesh, pspecs), S.named(mesh, bspecs)),
+    ), {"params": pspecs, "batch": bspecs}
+
+
+def jit_decode_step(model: Model, mesh, shape_spec: ShapeSpec):
+    """pjit'ed one-token decode against a seq_len cache (decode_* shapes)."""
+    b = shape_spec.global_batch
+    pshape = model.param_spec()
+    pspecs = S.param_specs(model.cfg, pshape, mesh)
+    sshape = model.serve_spec(b, shape_spec.seq_len)
+    sspecs = S.serve_specs(model.cfg, sshape, mesh, b)
+    dp = S._dp(mesh, b)
+    tok_spec = P(dp if dp else None, None)
+
+    def decode(params, state, token, pos):
+        return model.decode_step(params, state, token, pos)
+
+    return (
+        jax.jit(
+            decode,
+            in_shardings=(
+                S.named(mesh, pspecs),
+                S.named(mesh, sspecs),
+                S.named(mesh, tok_spec),
+                S.named(mesh, P()),
+            ),
+            out_shardings=(
+                S.named(mesh, P()),  # logits: let GSPMD pick layout in
+                S.named(mesh, sspecs),
+            ),
+            donate_argnums=(1,),
+        ),
+        {"params": pspecs, "state": sspecs, "token": tok_spec},
+    )
+
+
+def greedy_decode_loop(
+    model: Model, params, state, first_token, start_pos: int, n_tokens: int
+) -> Tuple[jax.Array, Any]:
+    """Host-side greedy loop for the examples (small models)."""
+    tok = first_token
+    out = [tok]
+    step = jax.jit(model.decode_step)
+    for i in range(n_tokens):
+        logits, state = step(
+            params, state, tok, jnp.int32(start_pos + i)
+        )
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), state

@@ -1,0 +1,113 @@
+"""Double-buffered async chunk ingest.
+
+Two pieces, both **bit-identical** to synchronous ingest (pinned in
+``tests/test_serve.py``) — they only move *when* bytes cross the
+host→device boundary, never what is computed:
+
+* :class:`Prefetch` — a chunk-axis combinator (registered as
+  ``"prefetch"`` in the combinator registry, next to the frame-axis
+  ``"gated"``): wraps any iterable of :class:`~repro.api.types.
+  SensorChunk` and keeps ``depth`` chunks in flight with
+  ``jax.device_put`` issued *ahead* of consumption.  Because jax
+  dispatch is asynchronous, the transfer of chunk ``i+1`` overlaps the
+  scan of chunk ``i`` — the classic double buffer at ``depth=1``.
+
+* :class:`ChunkQueue` — the server-side bounded per-stream queue.  A
+  live stream pushes chunks as its sensors produce them; the serving
+  tick pops at most one per stream.  When a producer outruns the
+  server, the queue applies **backpressure**: the push is refused and
+  counted (``n_overflow``) instead of growing host memory without
+  bound.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Deque, Iterable, Iterator, Optional
+
+import jax
+
+from repro.api.registry import register_combinator
+from repro.api.types import SensorChunk
+
+
+@register_combinator("prefetch")
+class Prefetch:
+    """Iterate chunks with host→device transfer running ahead.
+
+    Args:
+      chunks: the upstream chunk source (any iterable of pytrees; the
+        canonical payload is :class:`SensorChunk`).
+      depth: how many chunks to keep in flight beyond the one being
+        consumed (``1`` = double buffering).
+      sharding: optional target sharding/device for ``jax.device_put``
+        (e.g. a pool's stream-axis ``NamedSharding``); ``None`` puts to
+        the default device.
+
+    ``device_put`` only stages a copy of the same values, so iterating
+    through a ``Prefetch`` is bit-identical to iterating the source —
+    the combinator is pure overlap.
+    """
+
+    name = "prefetch"
+
+    def __init__(
+        self,
+        chunks: Iterable[Any],
+        *,
+        depth: int = 1,
+        sharding: Optional[Any] = None,
+    ):
+        if depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+        self.chunks = chunks
+        self.depth = depth
+        self.sharding = sharding
+
+    def _put(self, chunk: Any) -> Any:
+        return jax.tree.map(
+            lambda x: jax.device_put(x, self.sharding), chunk
+        )
+
+    def __iter__(self) -> Iterator[Any]:
+        buf: Deque[Any] = deque()
+        for chunk in self.chunks:
+            buf.append(self._put(chunk))
+            if len(buf) > self.depth:
+                yield buf.popleft()
+        while buf:
+            yield buf.popleft()
+
+
+class ChunkQueue:
+    """Bounded FIFO of pending :class:`SensorChunk` for one stream.
+
+    ``maxlen`` bounds host memory per stream; a push onto a full queue
+    is *refused* (returns ``False``) and counted in ``n_overflow`` —
+    the server surfaces the aggregate as its backpressure telemetry.
+    """
+
+    def __init__(self, maxlen: int = 2):
+        if maxlen < 1:
+            raise ValueError(f"queue maxlen must be >= 1, got {maxlen}")
+        self.maxlen = maxlen
+        self._q: Deque[SensorChunk] = deque()
+        self.n_pushed = 0
+        self.n_overflow = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, chunk: SensorChunk) -> bool:
+        if len(self._q) >= self.maxlen:
+            self.n_overflow += 1
+            return False
+        self._q.append(chunk)
+        self.n_pushed += 1
+        return True
+
+    def pop(self) -> Optional[SensorChunk]:
+        return self._q.popleft() if self._q else None
+
+    def peek(self) -> Optional[SensorChunk]:
+        return self._q[0] if self._q else None

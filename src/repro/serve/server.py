@@ -1,0 +1,414 @@
+"""StreamServer — the live multi-stream serving loop.
+
+Ties the serving runtime together (paper Figure 1's deployment: one
+accelerator ingesting a churning population of glasses streams):
+
+* a :class:`~repro.serve.slots.SlottedPool` holds the device state —
+  admission/eviction are O(1) masked scatters that never retrace;
+* each live stream gets a bounded :class:`~repro.serve.ingest.
+  ChunkQueue` (backpressure, counted) and, with a ``k_ladder``
+  configured, its own :class:`~repro.serve.adaptive.KLadderController`;
+* every :meth:`tick` pops at most one pending chunk per stream,
+  buckets the ready slots **by rung**, and runs one cached jitted
+  full-capacity masked step per rung in use — per-stream adaptive K
+  over a batched pool, with each stream's ``k_trajectory`` bitwise
+  equal to a solo ``EPICCompressor`` fed the same chunks (pinned in
+  ``tests/test_serve.py``);
+* the tick's host sync is a single batched ``device_get``
+  (:func:`repro.serve.telemetry.tick_readback`) feeding the
+  controllers and the per-stream :class:`~repro.serve.telemetry.
+  StreamTelemetry`;
+* :meth:`drain` is the double-buffered loop: the next tick's chunks
+  are queued (host→device transfer via :class:`~repro.serve.ingest.
+  Prefetch` semantics) *between* dispatching the current step and its
+  readback, so transfer overlaps compute.
+
+Eviction policies: ``"explicit"`` (only :meth:`close`), ``"idle"``
+(streams idle ≥ ``idle_frames`` frames are closed at tick end), and
+``"lru"`` (a full pool evicts the least-recently-stepped stream to
+admit a new one).
+"""
+
+from __future__ import annotations
+
+import operator
+from functools import reduce
+from typing import (
+    Any,
+    Dict,
+    Hashable,
+    Iterable,
+    List,
+    NamedTuple,
+    Optional,
+    Tuple,
+)
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.types import SensorChunk
+from repro.serve.adaptive import KLadderController
+from repro.serve.ingest import ChunkQueue
+from repro.serve.slots import SlottedPool
+from repro.serve.telemetry import StreamTelemetry, tick_readback
+
+_EVICTION_POLICIES = ("explicit", "idle", "lru")
+
+
+class ServerConfig(NamedTuple):
+    """Static configuration of a :class:`StreamServer`.
+
+    ``chunk_frames`` is the serving quantum: every submitted chunk must
+    carry exactly this many frames, so every pool program compiles for
+    one chunk shape.  ``k_ladder=None`` serves fixed-K; a ladder turns
+    on per-stream adaptive K with rung-bucketed dispatch.
+    ``queue_depth`` bounds pending chunks per stream (backpressure
+    beyond it).  ``idle_frames`` only applies to the ``"idle"``
+    eviction policy.
+    """
+
+    capacity: int = 8
+    chunk_frames: int = 8
+    k_ladder: Optional[Tuple[int, ...]] = None
+    shrink_margin: int = 2
+    eviction: str = "explicit"
+    idle_frames: int = 64
+    queue_depth: int = 2
+
+
+class StreamServer:
+    """A live serving runtime over a slotted compressor pool."""
+
+    def __init__(
+        self,
+        compressor,
+        config: ServerConfig = ServerConfig(),
+        *,
+        mesh=None,
+        axis: Optional[str] = None,
+        donate: Optional[bool] = None,
+    ):
+        if config.eviction not in _EVICTION_POLICIES:
+            raise ValueError(
+                f"unknown eviction policy {config.eviction!r}; "
+                f"available: {_EVICTION_POLICIES}"
+            )
+        if config.chunk_frames < 1:
+            raise ValueError(
+                f"chunk_frames must be >= 1, got {config.chunk_frames}"
+            )
+        if getattr(compressor, "k_ladder", None) is not None:
+            raise ValueError(
+                "pass the ladder as ServerConfig.k_ladder, not on the "
+                "compressor: the server owns one rung controller per "
+                "stream (a ladder-configured compressor carries a "
+                "single per-instance rung)"
+            )
+        self.cfg = config
+        self.compressor = compressor
+        if config.k_ladder is not None:
+            if not hasattr(getattr(compressor, "cfg", None), "prefilter_k"):
+                raise ValueError(
+                    "k_ladder needs a compressor whose cfg carries "
+                    "prefilter_k (the EPIC sparse-TRD knob); "
+                    f"got {type(compressor).__name__}"
+                )
+            # Fail fast on ladder / margin / start-rung problems here:
+            # every admit() builds a controller with exactly these
+            # arguments, and a per-admit failure would leave a
+            # half-admitted slot behind.
+            self._make_controller(compressor, config)
+        self.pool = SlottedPool(
+            compressor, config.capacity, mesh=mesh, axis=axis, donate=donate
+        )
+        # Per-rung fixed-K compressors (adaptive mode), built lazily:
+        # one per ladder rung, shared by every stream on that rung.
+        self._rung_comps: Dict[int, Any] = {}
+        self._queues: Dict[Hashable, ChunkQueue] = {}
+        self._controllers: Dict[Hashable, KLadderController] = {}
+        self._telemetry: Dict[Hashable, StreamTelemetry] = {}
+        self.evicted: List[StreamTelemetry] = []
+        self._zero_chunk: Optional[SensorChunk] = None
+        self.n_ticks = 0
+        self.n_admitted = 0
+        self.n_evicted = 0
+        self.n_admit_rejected = 0
+        self.n_backpressure = 0
+        self.frames_served = 0
+
+    # -- admission / eviction ------------------------------------------------
+
+    def admit(self, session_id: Hashable) -> int:
+        """Admit a stream into a free slot (fresh session state).
+
+        With the ``"lru"`` policy a full pool evicts its least-recently
+        stepped stream to make room; other policies raise
+        ``RuntimeError`` when full.
+        """
+        if session_id in self._queues:
+            # Must precede the LRU branch: a duplicate admit on a full
+            # pool must not evict an innocent stream (or silently reset
+            # the duplicate itself).
+            raise ValueError(f"session {session_id!r} already admitted")
+        if not self.pool.free_slots():
+            if self.cfg.eviction == "lru":
+                self.close(self._lru_session())
+            else:
+                self.n_admit_rejected += 1
+                raise RuntimeError(
+                    f"pool full ({self.cfg.capacity} slots); close a "
+                    f"stream or use the 'lru' eviction policy"
+                )
+        slot = self.pool.admit(session_id)
+        self._queues[session_id] = ChunkQueue(self.cfg.queue_depth)
+        if self.cfg.k_ladder is not None:
+            self._controllers[session_id] = self._make_controller(
+                self.compressor, self.cfg
+            )
+        self._telemetry[session_id] = StreamTelemetry(
+            session_id=session_id,
+            slot=slot,
+            generation=self.pool.generation_of(slot),
+            admitted_tick=self.n_ticks,
+        )
+        self.n_admitted += 1
+        return slot
+
+    @staticmethod
+    def _make_controller(compressor, config: ServerConfig):
+        return KLadderController(
+            config.k_ladder,
+            start_k=compressor.cfg.prefilter_k,
+            shrink_margin=config.shrink_margin,
+            what="cfg.prefilter_k",
+        )
+
+    def try_admit(self, session_id: Hashable) -> Optional[int]:
+        """``admit`` that reports a full pool as ``None`` (counted)."""
+        try:
+            return self.admit(session_id)
+        except RuntimeError:
+            return None
+
+    def close(self, session_id: Hashable) -> StreamTelemetry:
+        """Explicitly evict a stream; returns its final telemetry."""
+        self.pool.evict_session(session_id)
+        self._queues.pop(session_id)
+        self._controllers.pop(session_id, None)
+        tele = self._telemetry.pop(session_id)
+        self.evicted.append(tele)
+        self.n_evicted += 1
+        return tele
+
+    def _lru_session(self) -> Hashable:
+        return min(
+            self._telemetry.values(),
+            key=lambda t: (t.last_step_tick, t.slot),
+        ).session_id
+
+    # -- ingest --------------------------------------------------------------
+
+    def submit(self, session_id: Hashable, chunk: SensorChunk) -> bool:
+        """Queue one chunk for a live stream.
+
+        Returns ``False`` (and counts backpressure) when the stream's
+        bounded queue is full — the producer should retry after a tick.
+        """
+        if chunk.n_frames != self.cfg.chunk_frames:
+            raise ValueError(
+                f"serving quantum is {self.cfg.chunk_frames} frames per "
+                f"chunk, got {chunk.n_frames} (pad or re-chunk upstream)"
+            )
+        q = self._queues.get(session_id)
+        if q is None:
+            raise KeyError(f"session {session_id!r} is not admitted")
+        if self._zero_chunk is None:
+            self._zero_chunk = jax.tree.map(jnp.zeros_like, chunk)
+        ok = q.push(chunk)
+        if not ok:
+            self._telemetry[session_id].n_queue_overflow += 1
+            self.n_backpressure += 1
+        return ok
+
+    # -- the serving tick ----------------------------------------------------
+
+    def _rung_comp(self, k: int):
+        comp = self._rung_comps.get(k)
+        if comp is None:
+            comp = type(self.compressor)(
+                self.compressor.cfg._replace(prefilter_k=k),
+                self.compressor.models,
+            )
+            self._rung_comps[k] = comp
+        return comp
+
+    def _pop_ready(self) -> Dict[Hashable, SensorChunk]:
+        ready = {}
+        for sid in list(self._queues):
+            chunk = self._queues[sid].pop()
+            if chunk is not None:
+                ready[sid] = chunk
+        return ready
+
+    def _dispatch(self, ready: Dict[Hashable, SensorChunk]):
+        """Assemble the tick batch and dispatch one masked pool step
+        per rung in use.  Returns the (still in-flight) combined stats
+        and the per-rung stepped session lists."""
+        cap = self.cfg.capacity
+        rows = [self._zero_chunk] * cap
+        for sid, chunk in ready.items():
+            rows[self.pool.slot_of(sid)] = chunk
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+        if self.cfg.k_ladder is None:
+            groups = {None: list(ready)}
+        else:
+            groups: Dict[Optional[int], List[Hashable]] = {}
+            for sid in ready:
+                k = self._controllers[sid].begin_chunk()
+                groups.setdefault(k, []).append(sid)
+
+        stats_parts = []
+        for k, sids in groups.items():
+            mask = jnp.zeros((cap,), bool).at[
+                jnp.array([self.pool.slot_of(s) for s in sids], jnp.int32)
+            ].set(True)
+            step_fn = None if k is None else self._rung_comp(k).step
+            stats_parts.append(
+                self.pool.step(batch, mask=mask, step_fn=step_fn, key=k)
+            )
+        # Rung masks are disjoint and masked-out slots are zeroed, so
+        # the union of the per-rung stats is an elementwise combine.
+        stats = jax.tree.map(
+            lambda *xs: reduce(
+                jnp.logical_or if xs[0].dtype == bool else operator.add, xs
+            ),
+            *stats_parts,
+        )
+        return stats, groups
+
+    def _finish(self, stats, groups) -> None:
+        """One batched readback; feed controllers + telemetry; apply
+        the idle eviction policy."""
+        stepped = [sid for sids in groups.values() for sid in sids]
+        if stepped:
+            rb = tick_readback(stats)
+            for sid in stepped:
+                tele = self._telemetry[sid]
+                slot = tele.slot
+                tele.n_chunks += 1
+                tele.n_frames += self.cfg.chunk_frames
+                tele.n_processed += int(rb.processed[slot])
+                tele.n_inserted += int(rb.inserted[slot])
+                tele.buffer_valid = int(rb.buffer_valid[slot])
+                tele.idle_frames = 0
+                tele.last_step_tick = self.n_ticks
+                ctl = self._controllers.get(sid)
+                if ctl is not None:
+                    ctl.update(
+                        int(rb.overflow[slot]), int(rb.peak_full[slot])
+                    )
+                    tele.k_trajectory = ctl.k_trajectory
+            self.frames_served += len(stepped) * self.cfg.chunk_frames
+        stepped_set = set(stepped)
+        for sid in list(self._telemetry):
+            if sid not in stepped_set:
+                self._telemetry[sid].idle_frames += self.cfg.chunk_frames
+        self.n_ticks += 1
+        if self.cfg.eviction == "idle":
+            for sid in list(self._telemetry):
+                if self._telemetry[sid].idle_frames >= self.cfg.idle_frames:
+                    self.close(sid)
+
+    def tick(self) -> List[Hashable]:
+        """Serve one tick: step every stream with a pending chunk.
+
+        Returns the session ids stepped this tick.  A tick with no
+        pending work still advances the clock and the idle accounting.
+        """
+        ready = self._pop_ready()
+        if not ready:
+            self._finish(None, {})
+            return []
+        stats, groups = self._dispatch(ready)
+        self._finish(stats, groups)
+        return [sid for sids in groups.values() for sid in sids]
+
+    def drain(
+        self,
+        feeds: Dict[Hashable, Iterable[SensorChunk]],
+        *,
+        max_ticks: Optional[int] = None,
+    ) -> int:
+        """Double-buffered serving loop over per-stream chunk sources.
+
+        Every iteration dispatches the current tick's pool steps, then
+        — while that compute is in flight — pulls and submits the next
+        chunk of every feed (the host→device transfer of tick ``i+1``
+        overlaps the scan of tick ``i``; jax dispatch is async), and
+        only then performs the tick's single readback.  Bit-identical
+        to submit-then-tick in a strict sequence.  Returns the number
+        of ticks run.
+        """
+        iters = {sid: iter(src) for sid, src in feeds.items()}
+        for sid in iters:
+            if sid not in self._queues:
+                self.admit(sid)
+        ticks = 0
+        self._refill(iters)
+        while iters or any(len(q) for q in self._queues.values()):
+            ready = self._pop_ready()
+            inflight = self._dispatch(ready) if ready else None
+            self._refill(iters)  # overlaps the dispatched compute
+            if inflight is not None:
+                self._finish(*inflight)
+            else:
+                self._finish(None, {})
+            ticks += 1
+            if max_ticks is not None and ticks >= max_ticks:
+                break
+        return ticks
+
+    def _refill(self, iters: Dict[Hashable, Any]) -> None:
+        for sid in list(iters):
+            if sid not in self._queues:  # evicted mid-run: drop its feed
+                del iters[sid]
+                continue
+            if len(self._queues[sid]) >= self.cfg.queue_depth:
+                continue
+            try:
+                chunk = next(iters[sid])
+            except StopIteration:
+                del iters[sid]
+                continue
+            self.submit(sid, chunk)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def live_sessions(self) -> List[Hashable]:
+        return list(self._queues)
+
+    def telemetry(self, session_id: Hashable) -> StreamTelemetry:
+        return self._telemetry[session_id]
+
+    def server_counters(self) -> Dict[str, int]:
+        return {
+            "n_ticks": self.n_ticks,
+            "n_live": len(self._queues),
+            "n_admitted": self.n_admitted,
+            "n_evicted": self.n_evicted,
+            "n_admit_rejected": self.n_admit_rejected,
+            "n_backpressure": self.n_backpressure,
+            "frames_served": self.frames_served,
+        }
+
+    def state(self, session_id: Hashable):
+        return self.pool.session_state(session_id)
+
+    def export(self, session_id: Hashable):
+        return self.pool.export(session_id)
+
+    def tokens(self, session_id: Hashable, seq_len: int):
+        return self.pool.tokens(session_id, seq_len)

@@ -1,0 +1,120 @@
+"""Serving telemetry: per-stream counters without per-stream host syncs.
+
+Two aggregation paths, both designed around the rule that a serving
+loop pays **at most one ``jax.device_get`` per tick** (a host sync per
+stream per tick is how a 1k-stream pool spends its wall clock on
+transfers):
+
+* :func:`tick_readback` — the per-tick scalar reductions the server
+  needs (adaptive-K controller inputs + stream counters), reduced on
+  device to ``(capacity,)`` vectors and fetched in one transfer.
+* :func:`pool_stream_counters` — the energy-model bridge
+  (:func:`repro.core.pipeline.stream_counters`) over a pooled stats
+  pytree: per-slot reductions batched into a single ``device_get``
+  instead of one blocking transfer per stream (the examples/benchmarks
+  previously looped ``stream_counters`` per stream).
+
+:class:`StreamTelemetry` is the host-side per-stream accumulator the
+server keeps per live session (and hands back on eviction).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclass
+class StreamTelemetry:
+    """Host-side per-stream serving counters (one per live session)."""
+
+    session_id: Any
+    slot: int
+    generation: int
+    admitted_tick: int
+    n_chunks: int = 0
+    n_frames: int = 0
+    n_processed: int = 0
+    n_inserted: int = 0
+    buffer_valid: int = 0
+    n_queue_overflow: int = 0
+    idle_frames: int = 0
+    last_step_tick: int = -1
+    k_trajectory: List[int] = field(default_factory=list)
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dict(self.__dict__)
+        d["k_trajectory"] = list(self.k_trajectory)
+        return d
+
+
+class TickReadback:
+    """The per-slot scalars of one serving tick, fetched in one sync."""
+
+    __slots__ = (
+        "overflow", "peak_full", "processed", "inserted", "buffer_valid"
+    )
+
+    def __init__(self, overflow, peak_full, processed, inserted,
+                 buffer_valid):
+        self.overflow = overflow
+        self.peak_full = peak_full
+        self.processed = processed
+        self.inserted = inserted
+        self.buffer_valid = buffer_valid
+
+
+def tick_readback(stats: Any) -> TickReadback:
+    """Reduce a pooled stats pytree to per-slot tick scalars.
+
+    ``stats`` leaves are ``(capacity, T, ...)`` (masked slots zeroed —
+    see ``SlottedPool.step``).  Works for EPIC ``FrameStats`` and the
+    baselines' stats alike: the sparse-TRD counters are read when
+    present, zero otherwise.  All reductions transfer in **one**
+    ``jax.device_get``.
+    """
+    zeros = jnp.zeros(stats.processed.shape[:1], jnp.int32)
+    overflow = getattr(stats, "n_prefilter_overflow", None)
+    full = getattr(stats, "n_full_checks", None)
+    out = jax.device_get((
+        zeros if overflow is None else jnp.sum(overflow, axis=1),
+        zeros if full is None else jnp.max(full, axis=1),
+        jnp.sum(stats.processed.astype(jnp.int32), axis=1),
+        jnp.sum(stats.n_inserted, axis=1),
+        stats.buffer_valid[:, -1],
+    ))
+    return TickReadback(*(np.asarray(x) for x in out))
+
+
+def pool_stream_counters(
+    cfg,
+    stats: Any,
+    *,
+    streams: Optional[Sequence[int]] = None,
+) -> List[Any]:
+    """Per-stream ``energy.StreamCounters`` over a pooled stats pytree.
+
+    Batched equivalent of calling
+    ``pipeline.stream_counters(cfg, tree.map(lambda x: x[i], stats))``
+    for every stream ``i`` — same numbers (the reductions commute with
+    the leading-axis slice), but the whole pool transfers in a single
+    ``device_get`` instead of one blocking sync per stream.
+
+    Thin serving-layer alias: the byte-accounting formula itself lives
+    in :func:`repro.core.pipeline.pool_stream_counters` (one copy,
+    shared with the one-stream ``stream_counters``).
+
+    Args:
+      cfg: the pool's ``EPICConfig``.
+      stats: stats pytree with leading ``(n_streams, T)`` axes.
+      streams: optional subset of stream indices (default: all).
+    """
+    from repro.core import pipeline as pipe
+
+    return pipe.pool_stream_counters(cfg, stats, streams=streams)

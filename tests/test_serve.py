@@ -1,0 +1,677 @@
+"""Serving-runtime tests (`repro.serve`): slotted admission/eviction
+determinism, per-stream adaptive-K parity vs solo sessions, prefetch
+ingest bit-identity, masked-slot isolation, the 2-device shard_map
+path, and the long-running soak of the acceptance criteria (mixed
+rungs + churn, bitwise vs solo, zero retraces after warmup)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro import serve
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+from repro.serve import (
+    ChunkQueue,
+    KLadderController,
+    Prefetch,
+    ServerConfig,
+    SlottedPool,
+    StreamServer,
+)
+
+FRAME = 64
+PATCH = 16
+CHUNK = 8
+
+_SUB_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+for _k in ("JAX_PLATFORMS", "XLA_FLAGS", "HOME"):
+    if _k in os.environ:
+        _SUB_ENV[_k] = os.environ[_k]
+
+
+def _ecfg(**kw):
+    base = dict(
+        frame_hw=(FRAME, FRAME), patch=PATCH, capacity=32,
+        tau=0.10, gamma=0.015, theta=8, window=16,
+    )
+    base.update(kw)
+    return P.EPICConfig(**base)
+
+
+def _stream(seed, n_frames=16, n_obj=4):
+    scfg = SYN.StreamConfig(n_frames=n_frames, hw=(FRAME, FRAME), n_obj=n_obj)
+    return SYN.generate_stream(jax.random.PRNGKey(seed), scfg)[0]
+
+
+def _chunks(s, n=CHUNK):
+    for lo in range(0, s.frames.shape[0], n):
+        yield api.SensorChunk(
+            s.frames[lo:lo + n], s.poses[lo:lo + n],
+            s.gazes[lo:lo + n], s.depth[lo:lo + n],
+        )
+
+
+def _solo_final_state(cfg, chunks, k_ladder=None):
+    comp = api.EPICCompressor(cfg, k_ladder=k_ladder)
+    step = comp.step if k_ladder is not None else jax.jit(comp.step)
+    state = comp.init()
+    for c in chunks:
+        state, _ = step(state, c)
+    return comp, state
+
+
+def _assert_tree_bitwise(a, b, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=f"{msg} leaf {i}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# SlottedPool: admission/eviction semantics
+# ---------------------------------------------------------------------------
+
+
+class TestSlottedPool:
+    def test_admit_evict_bookkeeping(self):
+        pool = SlottedPool(api.EPICCompressor(_ecfg(capacity=8)), 3)
+        assert pool.free_slots() == [0, 1, 2]
+        assert pool.admit("a") == 0
+        assert pool.admit("b") == 1
+        assert pool.n_active == 2
+        assert bool(pool.states.active[0]) and bool(pool.states.active[1])
+        assert pool.generation_of(0) == 1
+        pool.evict_session("a")
+        assert not bool(pool.states.active[0])
+        assert pool.free_slots() == [0, 2]
+        # re-admission into the same slot bumps the generation
+        assert pool.admit("c", slot=0) == 0
+        assert pool.generation_of(0) == 2
+        with pytest.raises(ValueError, match="already admitted"):
+            pool.admit("c")
+        with pytest.raises(RuntimeError, match="pool full"):
+            pool.admit("d"), pool.admit("e")
+        with pytest.raises(KeyError, match="not admitted"):
+            pool.slot_of("zz")
+
+    def test_adaptive_compressor_rejected(self):
+        comp = api.EPICCompressor(
+            _ecfg(prefilter_k=4), k_ladder=(4, 8)
+        )
+        with pytest.raises(ValueError, match="StreamServer"):
+            SlottedPool(comp, 2)
+
+    def test_masked_step_equals_sessions_and_isolation(self):
+        """Active slots step bit-identically to solo sessions; inactive
+        slots' state is untouched by any number of pool steps."""
+        streams = [_stream(10 + i) for i in range(3)]
+        cfg = _ecfg(capacity=16)
+        pool = SlottedPool(api.EPICCompressor(cfg), 4)
+        for i in range(3):
+            pool.admit(i)
+        frozen_idle = jax.tree.map(
+            lambda x: np.asarray(x[3]), pool.states.sessions
+        )
+        zero = jax.tree.map(jnp.zeros_like, next(_chunks(streams[0])))
+        for step_i in range(2):
+            rows = [
+                list(_chunks(s))[step_i] for s in streams
+            ] + [zero]
+            batch = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+            stats = pool.step(batch)
+        # inactive slot 3: bit-identical to its pre-serving bytes
+        idle_now = jax.tree.map(lambda x: x[3], pool.states.sessions)
+        _assert_tree_bitwise(idle_now, frozen_idle, "idle slot")
+        # stats on the inactive slot are zeroed
+        assert int(jnp.sum(stats.processed[3])) == 0
+        # active slots: solo parity
+        for i, s in enumerate(streams):
+            _, ref = _solo_final_state(cfg, _chunks(s))
+            _assert_tree_bitwise(
+                pool.session_state(i), ref, f"stream {i}"
+            )
+
+    def test_evict_readmit_is_fresh_session_bitwise(self):
+        """Evicting a slot and re-admitting into it == a fresh session:
+        the leftover state bytes of the previous tenant are dead."""
+        s_old, s_new = _stream(1), _stream(2)
+        cfg = _ecfg(capacity=16)
+        pool = SlottedPool(api.EPICCompressor(cfg), 2)
+        pool.admit("old", slot=0)
+        pool.admit("other", slot=1)
+        zero = jax.tree.map(jnp.zeros_like, next(_chunks(s_old)))
+        for c in _chunks(s_old):
+            batch = jax.tree.map(lambda *xs: jnp.stack(xs), c, zero)
+            pool.step(batch)
+        pool.evict(0)
+        pool.admit("new", slot=0)
+        for c in _chunks(s_new):
+            batch = jax.tree.map(lambda *xs: jnp.stack(xs), c, zero)
+            pool.step(batch)
+        _, ref = _solo_final_state(cfg, _chunks(s_new))
+        _assert_tree_bitwise(
+            pool.session_state("new"), ref, "readmitted slot"
+        )
+
+    def test_mask_cannot_step_evicted_slot(self):
+        cfg = _ecfg(capacity=16)
+        pool = SlottedPool(api.EPICCompressor(cfg), 2)
+        pool.admit("a", slot=0)
+        chunk = next(_chunks(_stream(3)))
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), chunk, chunk)
+        before = jax.tree.map(
+            lambda x: np.asarray(x[1]), pool.states.sessions
+        )
+        # slot 1 was never admitted: an all-true mask must not touch it
+        pool.step(batch, mask=jnp.ones((2,), bool))
+        after = jax.tree.map(lambda x: x[1], pool.states.sessions)
+        _assert_tree_bitwise(after, before, "never-admitted slot")
+
+    def test_step_shape_validation(self):
+        pool = SlottedPool(api.EPICCompressor(_ecfg(capacity=8)), 2)
+        chunk = next(_chunks(_stream(0)))
+        with pytest.raises(ValueError, match="leading slot axis"):
+            pool.step(chunk)
+
+    def test_no_retrace_across_churn(self):
+        """admit/evict/step each compile exactly once, regardless of
+        which slots churn."""
+        cfg = _ecfg(capacity=16)
+        pool = SlottedPool(api.EPICCompressor(cfg), 3)
+        chunk = next(_chunks(_stream(4)))
+        batch = jax.tree.map(
+            lambda *xs: jnp.stack(xs), chunk, chunk, chunk
+        )
+        pool.admit("a")
+        pool.step(batch)
+        pool.admit("b")
+        pool.step(batch)
+        pool.evict_session("a")
+        pool.admit("c")
+        pool.step(batch)
+        assert pool.step_cache_sizes() == {None: 1}
+        assert int(pool._admit_fn._cache_size()) == 1
+        assert int(pool._evict_fn._cache_size()) == 1
+
+
+# ---------------------------------------------------------------------------
+# KLadderController (extracted controller) + EPICCompressor compatibility
+# ---------------------------------------------------------------------------
+
+
+class TestKLadderController:
+    def test_walk(self):
+        ctl = KLadderController((4, 8, 16), start_k=0)
+        assert ctl.k == 4
+        assert ctl.begin_chunk() == 4
+        assert ctl.update(overflow=1, peak_full=4) == 8  # grow
+        assert ctl.update(overflow=1, peak_full=8) == 16  # grow
+        assert ctl.update(overflow=1, peak_full=16) == 16  # top rung
+        assert ctl.update(overflow=0, peak_full=3) == 8  # 3*2 <= 8
+        assert ctl.update(overflow=0, peak_full=3) == 8  # 3*2 > 4
+        assert ctl.k_trajectory == [4]
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="not a rung"):
+            KLadderController((4, 8), start_k=5)
+        with pytest.raises(ValueError, match="strictly increasing"):
+            KLadderController((8, 4))
+        with pytest.raises(ValueError, match="shrink_margin"):
+            KLadderController((4, 8), shrink_margin=0)
+
+    def test_compressor_uses_extracted_controller(self):
+        comp = api.EPICCompressor(
+            _ecfg(prefilter_k=8), k_ladder=(4, 8, 16)
+        )
+        assert isinstance(comp._ctl, KLadderController)
+        assert comp.k_ladder == (4, 8, 16)
+        assert comp.k_trajectory is comp._ctl.k_trajectory
+
+
+# ---------------------------------------------------------------------------
+# Prefetch ingest + ChunkQueue
+# ---------------------------------------------------------------------------
+
+
+class TestIngest:
+    def test_prefetch_bit_identical_to_sync(self):
+        s = _stream(7, n_frames=32)
+        cfg = _ecfg(capacity=16)
+        _, ref = _solo_final_state(cfg, _chunks(s))
+        comp = api.EPICCompressor(cfg)
+        step = jax.jit(comp.step)
+        state = comp.init()
+        n = 0
+        for c in Prefetch(_chunks(s), depth=2):
+            state, _ = step(state, c)
+            n += 1
+        assert n == 4
+        _assert_tree_bitwise(state, ref, "prefetched session")
+
+    def test_prefetch_registered_combinator(self):
+        assert set(api.available_combinators()) >= {"gated", "prefetch"}
+        pf = api.make_combinator("prefetch", [1, 2, 3])
+        assert isinstance(pf, Prefetch)
+        assert [int(jax.device_get(x)) for x in pf] == [1, 2, 3]
+        with pytest.raises(KeyError, match="unknown combinator"):
+            api.get_combinator("zipline")
+
+    def test_prefetch_depth_validation(self):
+        with pytest.raises(ValueError, match="depth"):
+            Prefetch([], depth=0)
+
+    def test_chunk_queue_backpressure(self):
+        q = ChunkQueue(maxlen=2)
+        assert q.push("c0") and q.push("c1")
+        assert not q.push("c2")
+        assert q.n_overflow == 1 and q.n_pushed == 2
+        assert q.pop() == "c0"
+        assert q.push("c2")
+        assert [q.pop(), q.pop(), q.pop()] == ["c1", "c2", None]
+
+
+# ---------------------------------------------------------------------------
+# StreamServer: policies, backpressure, telemetry
+# ---------------------------------------------------------------------------
+
+
+class TestStreamServer:
+    def _server(self, capacity=2, **kw):
+        cfgkw = dict(capacity=capacity, chunk_frames=CHUNK)
+        cfgkw.update(kw)
+        return StreamServer(
+            api.EPICCompressor(_ecfg(capacity=16)), ServerConfig(**cfgkw)
+        )
+
+    def test_validation(self):
+        comp = api.EPICCompressor(_ecfg(capacity=16))
+        with pytest.raises(ValueError, match="eviction policy"):
+            StreamServer(comp, ServerConfig(eviction="random"))
+        with pytest.raises(ValueError, match="ServerConfig.k_ladder"):
+            StreamServer(
+                api.EPICCompressor(_ecfg(prefilter_k=4), k_ladder=(4, 8)),
+                ServerConfig(),
+            )
+        with pytest.raises(ValueError, match="prefilter_k"):
+            StreamServer(
+                api.get_compressor("fv")(api.BaselineConfig()),
+                ServerConfig(k_ladder=(4, 8)),
+            )
+        # a start K off the ladder fails at construction, not at the
+        # first admit (which would leave a half-admitted slot behind)
+        with pytest.raises(ValueError, match="not a rung"):
+            StreamServer(
+                api.EPICCompressor(_ecfg(prefilter_k=24)),
+                ServerConfig(k_ladder=(4, 8)),
+            )
+        with pytest.raises(ValueError, match="shrink_margin"):
+            StreamServer(
+                api.EPICCompressor(_ecfg(prefilter_k=4)),
+                ServerConfig(k_ladder=(4, 8), shrink_margin=0),
+            )
+
+    def test_full_pool_rejects_then_lru_evicts(self):
+        srv = self._server(capacity=2)
+        srv.admit("a"), srv.admit("b")
+        with pytest.raises(RuntimeError, match="pool full"):
+            srv.admit("c")
+        assert srv.try_admit("c") is None
+        assert srv.n_admit_rejected == 2
+
+        lru = self._server(capacity=2, eviction="lru")
+        lru.admit("a"), lru.admit("b")
+        # a duplicate admit must not evict an innocent LRU victim
+        with pytest.raises(ValueError, match="already admitted"):
+            lru.admit("a")
+        assert set(lru.live_sessions) == {"a", "b"}
+        c0 = next(_chunks(_stream(0)))
+        lru.submit("b", c0)
+        lru.tick()  # "b" stepped; "a" never stepped -> LRU victim
+        lru.admit("c")
+        assert set(lru.live_sessions) == {"b", "c"}
+        assert lru.n_evicted == 1
+        assert lru.evicted[0].session_id == "a"
+
+    def test_submit_validates_quantum_and_backpressure(self):
+        srv = self._server(capacity=1, queue_depth=1)
+        srv.admit("a")
+        s = _stream(0)
+        with pytest.raises(ValueError, match="quantum"):
+            srv.submit("a", api.SensorChunk(
+                s.frames[:4], s.poses[:4], s.gazes[:4], s.depth[:4]
+            ))
+        with pytest.raises(KeyError, match="not admitted"):
+            srv.submit("ghost", next(_chunks(s)))
+        assert srv.submit("a", next(_chunks(s)))
+        assert not srv.submit("a", next(_chunks(s)))  # queue full
+        assert srv.n_backpressure == 1
+        assert srv.telemetry("a").n_queue_overflow == 1
+
+    def test_idle_eviction(self):
+        srv = self._server(capacity=2, eviction="idle",
+                           idle_frames=2 * CHUNK)
+        srv.admit("busy"), srv.admit("lazy")
+        chunks = list(_chunks(_stream(0), CHUNK)) * 2
+        for c in chunks[:3]:
+            srv.submit("busy", c)
+            srv.tick()
+        assert srv.live_sessions == ["busy"]
+        assert srv.evicted and srv.evicted[0].session_id == "lazy"
+        # the evicted stream's telemetry survives
+        assert srv.evicted[0].idle_frames >= 2 * CHUNK
+
+    def test_telemetry_counters(self):
+        srv = self._server(capacity=1)
+        srv.admit("a")
+        for c in _chunks(_stream(5)):
+            srv.submit("a", c)
+            srv.tick()
+        tele = srv.telemetry("a")
+        assert tele.n_chunks == 2 and tele.n_frames == 16
+        assert tele.n_processed >= 1
+        assert tele.buffer_valid > 0
+        c = srv.server_counters()
+        assert c["frames_served"] == 16 and c["n_ticks"] == 2
+
+    def test_drain_matches_submit_tick(self):
+        s = _stream(9, n_frames=32)
+        cfg = _ecfg(capacity=16)
+        a = StreamServer(
+            api.EPICCompressor(cfg),
+            ServerConfig(capacity=2, chunk_frames=CHUNK),
+        )
+        a.admit("x")
+        for c in _chunks(s):
+            a.submit("x", c)
+            a.tick()
+        b = StreamServer(
+            api.EPICCompressor(cfg),
+            ServerConfig(capacity=2, chunk_frames=CHUNK),
+        )
+        b.drain({"x": Prefetch(_chunks(s))})
+        _assert_tree_bitwise(a.state("x"), b.state("x"), "drain vs ticks")
+
+    def test_export_and_tokens(self):
+        from repro.core import packing
+        from repro.core import retained as ret
+
+        srv = self._server(capacity=1)
+        srv.admit("a")
+        srv.submit("a", next(_chunks(_stream(5))))
+        srv.tick()
+        assert isinstance(srv.export("a"), ret.RetainedPatches)
+        assert srv.tokens("a", 16).tokens.shape == (
+            16, packing.TOKEN_FEAT
+        )
+
+
+# ---------------------------------------------------------------------------
+# Per-stream adaptive K over the pool == solo adaptive sessions
+# ---------------------------------------------------------------------------
+
+
+class TestPerStreamAdaptiveK:
+    LADDER = (4, 8, 16, 48)
+
+    def test_mixed_rungs_parity(self):
+        """Streams of different complexity settle on different rungs,
+        yet every per-stream state and k_trajectory is bitwise the solo
+        adaptive session."""
+        cfg = _ecfg(capacity=48, prefilter_k=4)
+        streams = {
+            "calm": _stream(20, n_frames=32, n_obj=1),
+            "busy": _stream(21, n_frames=32, n_obj=6),
+            "mid": _stream(22, n_frames=32, n_obj=3),
+        }
+        srv = StreamServer(
+            api.EPICCompressor(cfg),
+            ServerConfig(capacity=4, chunk_frames=CHUNK,
+                         k_ladder=self.LADDER),
+        )
+        srv.drain({sid: _chunks(s) for sid, s in streams.items()})
+        rungs_seen = set()
+        for sid, s in streams.items():
+            solo, ref = _solo_final_state(
+                cfg, _chunks(s), k_ladder=self.LADDER
+            )
+            assert srv.telemetry(sid).k_trajectory == solo.k_trajectory, sid
+            _assert_tree_bitwise(srv.state(sid), ref, sid)
+            rungs_seen.update(solo.k_trajectory)
+        # the scenario genuinely exercises bucketed dispatch
+        assert len(rungs_seen) >= 2
+        assert set(srv.pool.step_cache_sizes()) == rungs_seen
+
+    def test_one_compile_per_rung(self):
+        cfg = _ecfg(capacity=48, prefilter_k=4)
+        srv = StreamServer(
+            api.EPICCompressor(cfg),
+            ServerConfig(capacity=2, chunk_frames=CHUNK,
+                         k_ladder=self.LADDER),
+        )
+        srv.drain({
+            "a": _chunks(_stream(23, n_frames=32, n_obj=5)),
+            "b": _chunks(_stream(24, n_frames=32, n_obj=5)),
+        })
+        sizes = srv.pool.step_cache_sizes()
+        assert sizes and all(v == 1 for v in sizes.values()), sizes
+
+
+# ---------------------------------------------------------------------------
+# Acceptance soak: churn + mixed rungs, bitwise vs solo, zero retraces
+# ---------------------------------------------------------------------------
+
+
+class TestSoak:
+    def test_soak_churn_parity_and_no_retrace(self):
+        """>= 200 frames through a pool of 8 with >= 3 evictions and
+        >= 3 admissions and mixed adaptive-K rungs: every session's
+        final state is bitwise the solo adaptive run over exactly the
+        chunks it was served, and after each rung's first compile the
+        jit caches never grow again."""
+        cfg = _ecfg(capacity=48, prefilter_k=4)
+        ladder = (4, 8, 16)
+        srv = StreamServer(
+            api.EPICCompressor(cfg),
+            ServerConfig(capacity=8, chunk_frames=CHUNK, k_ladder=ladder),
+        )
+        # Scripted population: 6 founders of varying complexity, then a
+        # churn wave (3 closures + 3 re-admissions into freed slots).
+        def feed(seed, n_obj, n_frames):
+            return list(_chunks(_stream(seed, n_frames=n_frames,
+                                        n_obj=n_obj)))
+
+        founders = {
+            f"s{i}": feed(30 + i, n_obj=1 + (i % 3) * 2, n_frames=32)
+            for i in range(6)
+        }
+        late = {
+            f"l{i}": feed(40 + i, n_obj=2 + i, n_frames=24)
+            for i in range(3)
+        }
+        served = {sid: [] for sid in list(founders) + list(late)}
+
+        def serve_tick(submissions):
+            for sid, chunk in submissions:
+                srv.submit(sid, chunk)
+                served[sid].append(chunk)
+            srv.tick()
+
+        for sid in founders:
+            srv.admit(sid)
+        # phase 1: founders stream 2 chunks each (warmup visits rungs)
+        for step_i in range(2):
+            serve_tick(
+                (sid, chunks[step_i]) for sid, chunks in founders.items()
+            )
+        warm_sizes = dict(srv.pool.step_cache_sizes())
+        # phase 2: churn — close 3 founders, admit 3 late joiners into
+        # the freed slots; survivors keep streaming where they left off
+        for sid in ("s0", "s2", "s4"):
+            srv.close(sid)
+        for sid in late:
+            srv.admit(sid)
+        for step_i in range(2):
+            serve_tick(
+                [(sid, founders[sid][2 + step_i])
+                 for sid in ("s1", "s3", "s5")]
+                + [(sid, chunks[step_i]) for sid, chunks in late.items()]
+            )
+        # phase 3: only the late joiners still have data (ragged tail)
+        serve_tick((sid, chunks[2]) for sid, chunks in late.items())
+
+        assert srv.n_evicted >= 3 and srv.n_admitted >= 9
+        assert srv.frames_served >= 200, srv.frames_served
+        # mixed rungs were genuinely in play
+        assert len(srv.pool.step_cache_sizes()) >= 2
+        # zero retraces after warmup: every rung visited during warmup
+        # still holds exactly one compiled trace, and rungs first
+        # visited later also compiled exactly once
+        end_sizes = srv.pool.step_cache_sizes()
+        for k, n in end_sizes.items():
+            assert n == 1, (k, end_sizes)
+        for k, n in warm_sizes.items():
+            assert end_sizes[k] == n, (warm_sizes, end_sizes)
+        assert int(srv.pool._admit_fn._cache_size()) == 1
+        assert int(srv.pool._evict_fn._cache_size()) == 1
+
+        # bitwise parity: live sessions vs solo adaptive replays of
+        # exactly the chunks each was served
+        for sid in srv.live_sessions:
+            solo, ref = _solo_final_state(
+                cfg, served[sid], k_ladder=ladder
+            )
+            assert srv.telemetry(sid).k_trajectory == solo.k_trajectory
+            _assert_tree_bitwise(srv.state(sid), ref, sid)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: batched pool counters == per-stream loop, one device_get
+# ---------------------------------------------------------------------------
+
+
+class TestTelemetryCounters:
+    def test_pool_stream_counters_matches_per_stream(self, monkeypatch):
+        streams = [_stream(50 + i) for i in range(3)]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *streams)
+        cfg = _ecfg(capacity=16)
+        pool = api.StreamPool(api.EPICCompressor(cfg), 3)
+        _, stats = pool.step(pool.init(), api.SensorChunk(
+            batch.frames, batch.poses, batch.gazes, batch.depth
+        ))
+        expect = [
+            P.stream_counters(cfg, jax.tree.map(lambda x: x[i], stats))
+            for i in range(3)
+        ]
+        calls = []
+        real = jax.device_get
+        monkeypatch.setattr(
+            jax, "device_get", lambda x: calls.append(1) or real(x)
+        )
+        got = serve.pool_stream_counters(cfg, stats)
+        monkeypatch.undo()
+        assert len(calls) == 1  # the whole pool in one host sync
+        assert got == expect
+        sub = serve.pool_stream_counters(cfg, stats, streams=[2])
+        assert sub == [expect[2]]
+
+
+# ---------------------------------------------------------------------------
+# shard_map serving path (2 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+class TestShardedServe:
+    def test_two_device_server_matches_single(self):
+        prog = """
+import jax, jax.numpy as jnp, numpy as np
+from repro import api
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+from repro.launch.mesh import make_stream_mesh
+from repro.serve import ServerConfig, StreamServer
+
+assert len(jax.devices()) == 2, jax.devices()
+cfg = P.EPICConfig(frame_hw=(64, 64), patch=16, capacity=12,
+                   tau=0.10, gamma=0.015, theta=8, window=16,
+                   prefilter_k=4)
+scfg = SYN.StreamConfig(n_frames=16, hw=(64, 64), n_obj=3)
+streams = {i: SYN.generate_stream(jax.random.PRNGKey(i), scfg)[0]
+           for i in range(3)}
+
+def chunks(s, n=8):
+    for lo in range(0, 16, n):
+        yield api.SensorChunk(s.frames[lo:lo+n], s.poses[lo:lo+n],
+                              s.gazes[lo:lo+n], s.depth[lo:lo+n])
+
+def run(mesh):
+    srv = StreamServer(
+        api.EPICCompressor(cfg),
+        ServerConfig(capacity=4, chunk_frames=8, k_ladder=(4, 8, 16)),
+        mesh=mesh, donate=False,
+    )
+    for i in streams:
+        srv.admit(i)
+    for step_i in range(2):
+        for i, s in streams.items():
+            srv.submit(i, list(chunks(s))[step_i])
+        srv.tick()
+    # churn on the live sharded pool
+    srv.close(1)
+    srv.admit("fresh")
+    srv.submit("fresh", next(chunks(streams[1])))
+    srv.tick()
+    return srv
+
+sharded = run(make_stream_mesh())
+local = run(None)
+for sid in (0, 2, "fresh"):
+    for a, b in zip(jax.tree.leaves(sharded.state(sid)),
+                    jax.tree.leaves(local.state(sid))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (sharded.telemetry(sid).k_trajectory
+            == local.telemetry(sid).k_trajectory)
+try:
+    StreamServer(api.EPICCompressor(cfg),
+                 ServerConfig(capacity=3, chunk_frames=8),
+                 mesh=make_stream_mesh())
+except ValueError as e:
+    assert "divide evenly" in str(e), e
+else:
+    raise AssertionError("expected divisibility ValueError")
+print("SHARDED_SERVE_OK")
+"""
+        env = dict(_SUB_ENV)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=2"
+        ).strip()
+        r = subprocess.run(
+            [sys.executable, "-c", prog],
+            capture_output=True, text=True, timeout=500, env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "SHARDED_SERVE_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# launch/serve deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def test_launch_serve_shim_reexports():
+    from repro.launch import serve as legacy
+    from repro.serve import efm
+
+    assert legacy.greedy_decode_loop is efm.greedy_decode_loop
+    assert legacy.jit_prefill is efm.jit_prefill
+    assert legacy.jit_decode_step is efm.jit_decode_step
