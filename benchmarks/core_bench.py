@@ -165,20 +165,22 @@ def run(quick: bool = False, seed: int = 0, interpret: bool = False) -> Dict:
         if not m.get("skipped"):
             m["speedup_vs_epic"] = round(epic_ms / m["step_ms"], 2)
 
-    # The serving-runtime row (benchmarks/serve_bench.py) lives in the
-    # same trajectory file but is produced by a different bench; keep
-    # it across core rewrites so `--only core` can't silently drop it.
-    prev_serve = None
+    # The serving-runtime row (benchmarks/serve_bench.py) and the wire
+    # ingest row (benchmarks/ingest_bench.py) live in the same
+    # trajectory file but are produced by different benches; keep them
+    # across core rewrites so `--only core` can't silently drop them.
+    prev_methods = {}
     try:
         with open(os.path.join(REPO_ROOT, "BENCH_core.json")) as f:
-            prev_serve = json.load(f).get("methods", {}).get("serve")
+            prev_methods = json.load(f).get("methods", {})
     except (OSError, json.JSONDecodeError):
         pass
-    if prev_serve is not None:
-        methods["serve"] = prev_serve
+    for row_name in ("serve", "wire"):
+        if row_name in prev_methods:
+            methods[row_name] = prev_methods[row_name]
 
     out = {
-        "schema": "epic-core-bench-v4",
+        "schema": "epic-core-bench-v5",
         "quick": quick,
         "protocol": {
             "n_frames": N_FRAMES,

@@ -1,0 +1,214 @@
+"""Ingest latency: wire frames → loopback server → StreamServer, timed.
+
+The ROADMAP asked for "pool 16 at 25% churn" to become **latency
+percentiles under realistic traffic**; this bench is that number.  A
+seeded :class:`repro.wire.loadgen.LoadGen` (Poisson session arrivals,
+log-normal heavy-tailed session lengths, periodic 2x bursts) drives a
+:class:`repro.wire.server.IngestServer` over the in-process loopback
+transport — real encoded wire frames through the codec → demux →
+``ChunkQueue`` → masked pool step path — at pool sizes 4 and 16, with
+the EPIC sparse-TRD config of the ``epic[sparse]`` core row.
+
+Per pool size the report is the attached
+:class:`~repro.wire.latency.LatencyRecorder`'s enqueue→readback
+percentiles (p50/p95/p99), the queueing-delay split, and the
+backpressure/admission NACK counts — plus served frames/sec for
+cross-reference against the ``serve`` row.
+
+``benchmarks/run.py --only ingest`` merges the summary as the ``wire``
+row of the repo-root ``BENCH_core.json`` (schema v5; ``core_bench``
+preserves the row when it rewrites the file) and writes full detail to
+``benchmarks/results/ingest_bench.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Dict
+
+import jax
+
+from repro import api
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+from repro.serve import ServerConfig, StreamServer
+from repro.wire import codec
+from repro.wire.latency import LatencyRecorder
+from repro.wire.loadgen import LoadConfig, LoadGen
+from repro.wire.server import IngestServer, Loopback
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FRAME = 64
+PATCH = 16
+CHUNK_FRAMES = 8
+# Same knobs as the core bench's epic[sparse] row and the serve bench,
+# so the latency numbers sit on the same per-stream cost basis.
+CAPACITY = 192
+SPARSE_K = 24
+SPARSE_PATCH_K = 16
+POOL_SIZES = (4, 16)
+BANK_CHUNKS = 6  # distinct payload chunks in the pre-rendered bank
+
+
+def _cfg() -> P.EPICConfig:
+    return P.EPICConfig(
+        frame_hw=(FRAME, FRAME), patch=PATCH, capacity=CAPACITY,
+        tau=0.10, gamma=0.015, theta=8, window=16,
+        prefilter_k=SPARSE_K, patch_k=SPARSE_PATCH_K,
+    )
+
+
+def _bank(seed: int):
+    scfg = SYN.StreamConfig(
+        n_frames=BANK_CHUNKS * CHUNK_FRAMES, hw=(FRAME, FRAME), n_obj=5
+    )
+    s, _ = SYN.generate_stream(jax.random.PRNGKey(seed), scfg)
+    stream = api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
+    return list(api.iter_chunks(stream, CHUNK_FRAMES, remainder="drop"))
+
+
+def _load_cfg(pool_size: int, seed: int, ticks: int) -> LoadConfig:
+    # Oversubscribe admission (~1.3x the pool's drain rate) so the run
+    # exercises pool-full NACKs, and burst 2x every 5 ticks so bounded
+    # queues exercise backpressure NACKs — while the steady state keeps
+    # most slots busy (the latency number is a loaded-server number).
+    mean_len = 6.0  # chunks; lognormal(mu, 0.7) has mean ~ e^{mu+0.245}
+    mu = math.log(mean_len) - 0.245
+    return LoadConfig(
+        seed=seed,
+        ticks=ticks,
+        arrival_rate=1.3 * pool_size / mean_len,
+        session_len_mu=mu,
+        session_len_sigma=0.7,
+        burst_factor=2.0,
+        burst_every=5,
+        submit_per_tick=1,
+    )
+
+
+def _bench_pool(pool_size: int, seed: int, ticks: int) -> Dict:
+    srv = StreamServer(
+        api.EPICCompressor(_cfg()),
+        ServerConfig(capacity=pool_size, chunk_frames=CHUNK_FRAMES,
+                     queue_depth=2),
+    )
+    ingest = IngestServer(srv)
+    bank = _bank(seed)
+
+    # Warm up the pool programs (one masked full-capacity step per
+    # variant) so the recorded percentiles measure serving, not XLA.
+    loop = Loopback(ingest)
+    loop.send(codec.encode_control(codec.OP_OPEN, 1 << 32))
+    for seq in range(2):
+        loop.send(codec.encode_chunk(
+            bank[seq], stream_id=1 << 32, seq=seq, timestamp_ns=0
+        ))
+        ingest.tick()
+    loop.send(codec.encode_control(codec.OP_CLOSE, 1 << 32))
+    jax.block_until_ready(srv.pool.states.sessions)
+
+    srv.latency = LatencyRecorder()
+    frames0 = srv.frames_served
+    t0 = time.perf_counter()
+    summary = LoadGen(_load_cfg(pool_size, seed, ticks), bank, ingest).run()
+    jax.block_until_ready(srv.pool.states.sessions)
+    wall = time.perf_counter() - t0
+
+    lat = srv.latency.summary()
+    sizes = srv.pool.step_cache_sizes()
+    assert all(v == 1 for v in sizes.values()), (
+        f"ingest path retraced: {sizes}"
+    )
+    frames = srv.frames_served - frames0
+    return {
+        "latency": lat,
+        "load": summary,
+        "server": ingest.counters(),
+        "frames_per_sec": round(frames / wall, 2),
+        "wall_s": round(wall, 2),
+    }
+
+
+def _pool_row(r: Dict) -> Dict:
+    """The flat per-pool slice of the BENCH_core wire row."""
+    total, qwait = r["latency"]["total"], r["latency"]["queue_wait"]
+    nacks = r["load"]["nacks"]
+    return {
+        "p50_ms": total["p50_ms"],
+        "p95_ms": total["p95_ms"],
+        "p99_ms": total["p99_ms"],
+        "queue_wait_p95_ms": qwait["p95_ms"],
+        "n_chunks": total["count"],
+        "n_backpressure": nacks.get("backpressure", 0),
+        "n_pool_full": nacks.get("pool_full", 0),
+        "frames_per_sec": r["frames_per_sec"],
+    }
+
+
+def _merge_bench_core(row: Dict) -> None:
+    """Insert/refresh the ``wire`` row of the repo-root trajectory."""
+    path = os.path.join(REPO_ROOT, "BENCH_core.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        doc = {"schema": "epic-core-bench-v5", "methods": {}}
+    doc.setdefault("methods", {})["wire"] = row
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def run(quick: bool = False, seed: int = 0) -> Dict:
+    t0 = time.time()
+    ticks = 24 if quick else 60
+    pools = {}
+    for n in POOL_SIZES:
+        pools[f"pool{n}"] = _bench_pool(n, seed, ticks)
+        lat = pools[f"pool{n}"]["latency"]["total"]
+        print(f"[ingest] pool={n:3d}  p50={lat['p50_ms']:8.2f} ms  "
+              f"p95={lat['p95_ms']:8.2f} ms  p99={lat['p99_ms']:8.2f} ms  "
+              f"({lat['count']} chunks)")
+
+    row = {
+        "transport": "loopback",
+        "chunk_frames": CHUNK_FRAMES,
+        "prefilter_k": SPARSE_K,
+        "patch_k": SPARSE_PATCH_K,
+        "load": "poisson arrivals x1.3 oversubscribed, "
+                "lognormal(~6, 0.7) chunks/session, 2x burst every 5",
+        **{f"pool{n}": _pool_row(pools[f"pool{n}"]) for n in POOL_SIZES},
+    }
+    out = {
+        "schema": "epic-ingest-bench-v1",
+        "quick": quick,
+        "protocol": {
+            "frame_hw": FRAME,
+            "patch": PATCH,
+            "epic_capacity": CAPACITY,
+            "chunk_frames": CHUNK_FRAMES,
+            "pool_sizes": list(POOL_SIZES),
+            "ticks": ticks,
+            "timing": "enqueue->readback per chunk, post-warmup, "
+                      "loopback transport",
+            "device": jax.devices()[0].platform,
+        },
+        "pools": pools,
+        "wire_row": row,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "ingest_bench.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    _merge_bench_core(row)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--quick" in sys.argv)

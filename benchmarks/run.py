@@ -6,6 +6,9 @@
   serve    -> serve_bench       (StreamServer steady-state frames/sec
                                  under 25% churn; merges the `serve` row
                                  into BENCH_core.json)
+  ingest   -> ingest_bench      (wire-frame loadgen -> loopback ingest
+                                 server latency percentiles; merges the
+                                 `wire` row into BENCH_core.json)
   table1   -> evu_accuracy      (EVU accuracy vs memory, 5 methods)
   figure6  -> energy_model      (system energy + memory, 7 systems)
   ablation -> compression_sweep (motion/bypass/depth ablations)
@@ -35,13 +38,16 @@ def main():
     ap.add_argument(
         "--only", default=None,
         help="comma-separated sub-benchmark names "
-             "(core,serve,table1,figure6,ablation,roofline)",
+             "(core,serve,ingest,table1,figure6,ablation,roofline)",
     )
     args = ap.parse_args()
 
     t0 = time.time()
     summary = {}
-    known = {"core", "serve", "table1", "figure6", "ablation", "roofline"}
+    known = {
+        "core", "serve", "ingest", "table1", "figure6", "ablation",
+        "roofline",
+    }
     selected = None if args.only is None else set(args.only.split(","))
     if selected is not None and not selected <= known:
         # Fail loudly: a typo'd/renamed name would otherwise run nothing
@@ -70,6 +76,14 @@ def main():
         r = serve_bench.run(quick=args.quick)
         summary["serve_frames_per_sec"] = {
             name: p["frames_per_sec"] for name, p in r["pools"].items()
+        }
+    if want("ingest"):
+        from benchmarks import ingest_bench
+
+        r = ingest_bench.run(quick=args.quick)
+        summary["ingest_p99_ms"] = {
+            name: p["latency"]["total"]["p99_ms"]
+            for name, p in r["pools"].items()
         }
     if want("figure6"):
         from benchmarks import energy_model

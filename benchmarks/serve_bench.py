@@ -60,15 +60,10 @@ def _chunk_feed(key, n_chunks: int):
         n_frames=n_chunks * CHUNK_FRAMES, hw=(FRAME, FRAME), n_obj=5
     )
     s, _ = SYN.generate_stream(key, scfg)
-    return [
-        api.SensorChunk(
-            s.frames[lo:lo + CHUNK_FRAMES],
-            s.poses[lo:lo + CHUNK_FRAMES],
-            s.gazes[lo:lo + CHUNK_FRAMES],
-            s.depth[lo:lo + CHUNK_FRAMES],
-        )
-        for lo in range(0, scfg.n_frames, CHUNK_FRAMES)
-    ]
+    stream = api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
+    # remainder="drop": the serving quantum is a compile axis — a ragged
+    # final chunk would retrace every pool program for its odd T.
+    return list(api.iter_chunks(stream, CHUNK_FRAMES, remainder="drop"))
 
 
 def _bench_pool(pool_size: int, seed: int, warmup: int, timed: int) -> Dict:
@@ -145,7 +140,7 @@ def _merge_bench_core(row: Dict) -> None:
     except (OSError, json.JSONDecodeError):
         # No trajectory yet: a serve-only skeleton (core_bench stamps
         # the real schema + protocol when it next runs).
-        doc = {"schema": "epic-core-bench-v4", "methods": {}}
+        doc = {"schema": "epic-core-bench-v5", "methods": {}}
     # Never relabel an existing file: its core rows were produced under
     # whatever schema it declares; only the serve row is refreshed here.
     doc.setdefault("methods", {})["serve"] = row

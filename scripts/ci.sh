@@ -6,6 +6,7 @@
 #   scripts/ci.sh --kernels           # Pallas interpret-mode kernel lane
 #   scripts/ci.sh --bench-smoke       # headless benchmarks/run.py --quick
 #   scripts/ci.sh --serve             # serving-runtime suite + bench smoke
+#   scripts/ci.sh --wire              # wire ingest-frontier suite
 #   scripts/ci.sh tests/test_api.py   # any extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -37,6 +38,14 @@ if [[ "${1:-}" == "--serve" ]]; then
   exec python -m benchmarks.run --quick --only serve
 fi
 
+if [[ "${1:-}" == "--wire" ]]; then
+  # Ingest-frontier lane: the wire codec round-trip/rejection
+  # properties, loopback server -> StreamServer bitwise parity, trace
+  # record/replay parity, and seeded loadgen determinism.
+  shift
+  exec python -m pytest -q tests/test_wire.py "$@"
+fi
+
 if [[ "${1:-}" == "--bench-smoke" ]]; then
   # Headless perf-path smoke (~35 s): the quick core throughput sweep
   # (every compressor row incl. epic[sparse]; interpret-mode Pallas
@@ -59,6 +68,9 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
          "skipping the sparse-TRD guard"
     exit 0
   fi
+  # The ingest smoke runs after the stamp check (it rewrites
+  # BENCH_core.json too, which would defeat the staleness detection).
+  python -m benchmarks.run --quick --only ingest
   exec python - <<'GUARD'
 import json
 import sys
@@ -76,6 +88,16 @@ if speedup < floor:
         f"sparse {row['step_ms']} ms)"
     )
 print(f"[bench-smoke] sparse-TRD guard ok: {speedup}x >= {floor}x")
+
+wire = d["methods"].get("wire")
+if wire is None:
+    sys.exit("BENCH_core.json: wire row missing (ingest bench did not land)")
+for pool in ("pool4", "pool16"):
+    p99 = wire.get(pool, {}).get("p99_ms")
+    if p99 is None:
+        sys.exit(f"BENCH_core.json: wire.{pool} has no p99 latency")
+print("[bench-smoke] wire ingest row ok: p99 "
+      f"pool4={wire['pool4']['p99_ms']}ms pool16={wire['pool16']['p99_ms']}ms")
 GUARD
 fi
 

@@ -24,6 +24,15 @@ class SensorChunk(NamedTuple):
     ablation (paper Section 5) or replaying a recording with aligned
     depth ground truth.  All fields may also carry an extra leading
     stream axis when fed through :class:`~repro.api.pool.StreamPool`.
+
+    **Sharp edge — chunk length is a compile axis.**  Every distinct
+    ``T`` traces and compiles a fresh ``step`` program per compressor
+    (the scan length is static).  A stream whose length is not a
+    multiple of the chunk size therefore pays one extra compile for its
+    ragged final chunk — and a *population* of streams with assorted
+    lengths pays one per distinct remainder.  Serve fixed-quantum
+    chunks (``iter_chunks(..., remainder="drop"|"pad")``) unless the
+    tail frames are worth a compile.
     """
 
     frames: Array  # (T, H, W, 3) RGB
@@ -35,8 +44,37 @@ class SensorChunk(NamedTuple):
     def n_frames(self) -> int:
         return self.frames.shape[0]
 
+    def validate(self) -> "SensorChunk":
+        """Fail fast on cross-field shape disagreement.
+
+        All fields must agree on the leading (time — or stream, when
+        pooled) axis, and ``depth`` must cover the same ``(..., H, W)``
+        grid as ``frames``.  A mismatched chunk fed to ``step`` would
+        otherwise surface as an opaque shape error deep inside the
+        frame scan.  Returns ``self`` so construction sites can chain.
+        """
+        t = self.frames.shape[0]
+        for name in ("poses", "gazes", "depth"):
+            f = getattr(self, name)
+            if f is not None and f.shape[0] != t:
+                raise ValueError(
+                    f"SensorChunk field shapes disagree on the leading "
+                    f"axis: frames has {t}, {name} has {f.shape[0]} "
+                    f"(frames{self.frames.shape} vs {name}{f.shape})"
+                )
+        if self.depth is not None and (
+            self.depth.shape != self.frames.shape[:-1]
+        ):
+            raise ValueError(
+                f"SensorChunk depth{self.depth.shape} must match "
+                f"frames{self.frames.shape} minus the channel axis "
+                f"(expected {self.frames.shape[:-1]})"
+            )
+        return self
+
     def slice(self, start: int, stop: int) -> "SensorChunk":
         """Host-side time slice (static indices)."""
+        self.validate()
         return SensorChunk(
             self.frames[start:stop],
             self.poses[start:stop],
@@ -45,14 +83,55 @@ class SensorChunk(NamedTuple):
         )
 
 
-def iter_chunks(chunk: SensorChunk, chunk_size: int) -> Iterator[SensorChunk]:
+_REMAINDERS = ("keep", "drop", "pad")
+
+
+def iter_chunks(
+    chunk: SensorChunk, chunk_size: int, *, remainder: str = "keep"
+) -> Iterator[SensorChunk]:
     """Split a materialized stream into successive ingest chunks.
 
     Convenience for replay/testing; a live deployment constructs
     :class:`SensorChunk` objects directly from the sensor ring buffer.
+
+    ``remainder`` controls a stream length that is not a multiple of
+    ``chunk_size`` (see the :class:`SensorChunk` docstring — a ragged
+    final chunk changes the traced ``T`` and costs a fresh compile):
+
+    * ``"keep"`` (default, legacy): yield the short final chunk as-is;
+    * ``"drop"``: discard the tail frames (fixed serving quantum);
+    * ``"pad"``: right-pad the final chunk to ``chunk_size`` by
+      repeating its last frame (all fields).  Padding *does* change
+      compressor state relative to the unpadded tail — the duplicate
+      frames still tick the frame clock — so use it for
+      fixed-quantum serving, not bit-exact replay comparisons.
     """
-    for start in range(0, chunk.n_frames, chunk_size):
-        yield chunk.slice(start, min(start + chunk_size, chunk.n_frames))
+    if remainder not in _REMAINDERS:
+        raise ValueError(
+            f"unknown remainder policy {remainder!r}; "
+            f"available: {_REMAINDERS}"
+        )
+    n = chunk.n_frames
+    full_end = (n // chunk_size) * chunk_size
+    for start in range(0, full_end, chunk_size):
+        yield chunk.slice(start, start + chunk_size)
+    if full_end == n or remainder == "drop":
+        return
+    tail = chunk.slice(full_end, n)
+    if remainder == "keep":
+        yield tail
+        return
+    pad = chunk_size - (n - full_end)
+
+    def _pad(x):
+        return jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0)
+
+    yield SensorChunk(
+        _pad(tail.frames),
+        _pad(tail.poses),
+        _pad(tail.gazes),
+        None if tail.depth is None else _pad(tail.depth),
+    )
 
 
 def concat_stats(stats: Sequence):

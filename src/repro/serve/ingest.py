@@ -22,8 +22,9 @@ host→device boundary, never what is computed:
 
 from __future__ import annotations
 
+import time
 from collections import deque
-from typing import Any, Deque, Iterable, Iterator, Optional
+from typing import Any, Callable, Deque, Iterable, Iterator, Optional, Tuple
 
 import jax
 
@@ -79,35 +80,72 @@ class Prefetch:
             yield buf.popleft()
 
 
+_QUEUE_POLICIES = ("refuse", "drop_oldest")
+
+
 class ChunkQueue:
     """Bounded FIFO of pending :class:`SensorChunk` for one stream.
 
-    ``maxlen`` bounds host memory per stream; a push onto a full queue
-    is *refused* (returns ``False``) and counted in ``n_overflow`` —
-    the server surfaces the aggregate as its backpressure telemetry.
+    ``maxlen`` bounds host memory per stream.  A push onto a full queue
+    follows ``policy``:
+
+    * ``"refuse"`` (default): the *new* chunk is refused (``push``
+      returns ``False``) and counted in ``n_overflow`` — the server
+      surfaces the aggregate as its backpressure telemetry (a wire
+      producer sees it as a NACK and retries);
+    * ``"drop_oldest"``: the *oldest* queued chunk is discarded to
+      admit the new one (``push`` returns ``True``; the drop is counted
+      in ``n_dropped``) — freshest-data-wins for latency-sensitive
+      streams that would rather skip frames than fall behind.
+
+    Every entry records its enqueue timestamp (``clock()``, default
+    ``time.monotonic``), so latency telemetry can split queueing delay
+    from compute delay; ``pop_entry`` hands the timestamp back with the
+    chunk while ``pop`` keeps the legacy chunk-only signature.
     """
 
-    def __init__(self, maxlen: int = 2):
+    def __init__(
+        self,
+        maxlen: int = 2,
+        *,
+        policy: str = "refuse",
+        clock: Callable[[], float] = time.monotonic,
+    ):
         if maxlen < 1:
             raise ValueError(f"queue maxlen must be >= 1, got {maxlen}")
+        if policy not in _QUEUE_POLICIES:
+            raise ValueError(
+                f"unknown queue policy {policy!r}; "
+                f"available: {_QUEUE_POLICIES}"
+            )
         self.maxlen = maxlen
-        self._q: Deque[SensorChunk] = deque()
+        self.policy = policy
+        self.clock = clock
+        self._q: Deque[Tuple[SensorChunk, float]] = deque()
         self.n_pushed = 0
         self.n_overflow = 0
+        self.n_dropped = 0
 
     def __len__(self) -> int:
         return len(self._q)
 
-    def push(self, chunk: SensorChunk) -> bool:
+    def push(self, chunk: SensorChunk, *, ts: Optional[float] = None) -> bool:
         if len(self._q) >= self.maxlen:
-            self.n_overflow += 1
-            return False
-        self._q.append(chunk)
+            if self.policy == "refuse":
+                self.n_overflow += 1
+                return False
+            self._q.popleft()
+            self.n_dropped += 1
+        self._q.append((chunk, self.clock() if ts is None else ts))
         self.n_pushed += 1
         return True
 
     def pop(self) -> Optional[SensorChunk]:
+        return self._q.popleft()[0] if self._q else None
+
+    def pop_entry(self) -> Optional[Tuple[SensorChunk, float]]:
+        """Pop ``(chunk, enqueue_ts)`` — ``None`` when empty."""
         return self._q.popleft() if self._q else None
 
     def peek(self) -> Optional[SensorChunk]:
-        return self._q[0] if self._q else None
+        return self._q[0][0] if self._q else None

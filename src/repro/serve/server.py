@@ -32,6 +32,7 @@ admit a new one).
 from __future__ import annotations
 
 import operator
+import time
 from functools import reduce
 from typing import (
     Any,
@@ -49,7 +50,7 @@ import jax.numpy as jnp
 
 from repro.api.types import SensorChunk
 from repro.serve.adaptive import KLadderController
-from repro.serve.ingest import ChunkQueue
+from repro.serve.ingest import _QUEUE_POLICIES, ChunkQueue
 from repro.serve.slots import SlottedPool
 from repro.serve.telemetry import StreamTelemetry, tick_readback
 
@@ -64,8 +65,10 @@ class ServerConfig(NamedTuple):
     one chunk shape.  ``k_ladder=None`` serves fixed-K; a ladder turns
     on per-stream adaptive K with rung-bucketed dispatch.
     ``queue_depth`` bounds pending chunks per stream (backpressure
-    beyond it).  ``idle_frames`` only applies to the ``"idle"``
-    eviction policy.
+    beyond it); ``queue_policy`` picks what a full queue does —
+    ``"refuse"`` the new chunk (default; producers see NACKs) or
+    ``"drop_oldest"`` (freshest-data-wins).  ``idle_frames`` only
+    applies to the ``"idle"`` eviction policy.
     """
 
     capacity: int = 8
@@ -75,6 +78,7 @@ class ServerConfig(NamedTuple):
     eviction: str = "explicit"
     idle_frames: int = 64
     queue_depth: int = 2
+    queue_policy: str = "refuse"
 
 
 class StreamServer:
@@ -97,6 +101,13 @@ class StreamServer:
         if config.chunk_frames < 1:
             raise ValueError(
                 f"chunk_frames must be >= 1, got {config.chunk_frames}"
+            )
+        if config.queue_policy not in _QUEUE_POLICIES:
+            # Checked here, not at admit time: a per-admit failure
+            # would leave a half-admitted slot behind.
+            raise ValueError(
+                f"unknown queue policy {config.queue_policy!r}; "
+                f"available: {_QUEUE_POLICIES}"
             )
         if getattr(compressor, "k_ladder", None) is not None:
             raise ValueError(
@@ -130,6 +141,14 @@ class StreamServer:
         self._telemetry: Dict[Hashable, StreamTelemetry] = {}
         self.evicted: List[StreamTelemetry] = []
         self._zero_chunk: Optional[SensorChunk] = None
+        # Optional wire-layer telemetry: when set (e.g. a
+        # ``repro.wire.latency.LatencyRecorder``), every stepped chunk
+        # reports (enqueue_ts, pop_ts, readback_ts) after the tick's
+        # batched readback.  ``None`` keeps the hot path free of clock
+        # reads beyond the queue's own enqueue stamp.
+        self.latency: Optional[Any] = None
+        self._pop_ts: Dict[Hashable, Tuple[float, float]] = {}
+        self._n_dropped_closed = 0
         self.n_ticks = 0
         self.n_admitted = 0
         self.n_evicted = 0
@@ -161,7 +180,9 @@ class StreamServer:
                     f"stream or use the 'lru' eviction policy"
                 )
         slot = self.pool.admit(session_id)
-        self._queues[session_id] = ChunkQueue(self.cfg.queue_depth)
+        self._queues[session_id] = ChunkQueue(
+            self.cfg.queue_depth, policy=self.cfg.queue_policy
+        )
         if self.cfg.k_ladder is not None:
             self._controllers[session_id] = self._make_controller(
                 self.compressor, self.cfg
@@ -194,6 +215,7 @@ class StreamServer:
     def close(self, session_id: Hashable) -> StreamTelemetry:
         """Explicitly evict a stream; returns its final telemetry."""
         self.pool.evict_session(session_id)
+        self._n_dropped_closed += self._queues[session_id].n_dropped
         self._queues.pop(session_id)
         self._controllers.pop(session_id, None)
         tele = self._telemetry.pop(session_id)
@@ -245,10 +267,13 @@ class StreamServer:
 
     def _pop_ready(self) -> Dict[Hashable, SensorChunk]:
         ready = {}
+        self._pop_ts = {}
+        now = time.monotonic()
         for sid in list(self._queues):
-            chunk = self._queues[sid].pop()
-            if chunk is not None:
-                ready[sid] = chunk
+            entry = self._queues[sid].pop_entry()
+            if entry is not None:
+                ready[sid] = entry[0]
+                self._pop_ts[sid] = (entry[1], now)
         return ready
 
     def _dispatch(self, ready: Dict[Hashable, SensorChunk]):
@@ -294,6 +319,12 @@ class StreamServer:
         stepped = [sid for sids in groups.values() for sid in sids]
         if stepped:
             rb = tick_readback(stats)
+            if self.latency is not None:
+                done = time.monotonic()
+                for sid in stepped:
+                    ts = self._pop_ts.get(sid)
+                    if ts is not None:
+                        self.latency.observe(ts[0], ts[1], done)
             for sid in stepped:
                 tele = self._telemetry[sid]
                 slot = tele.slot
@@ -401,6 +432,8 @@ class StreamServer:
             "n_evicted": self.n_evicted,
             "n_admit_rejected": self.n_admit_rejected,
             "n_backpressure": self.n_backpressure,
+            "n_dropped": self._n_dropped_closed
+            + sum(q.n_dropped for q in self._queues.values()),
             "frames_served": self.frames_served,
         }
 

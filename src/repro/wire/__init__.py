@@ -1,0 +1,76 @@
+"""repro.wire — the network ingest frontier.
+
+Everything between a glasses sensor stack and the serving runtime's
+per-stream :class:`~repro.serve.ingest.ChunkQueue`:
+
+  encode_chunk, decode_frame, WireFrame,
+  encode_control, encode_reply, decode_reply,
+  WireFormatError, WireCRCError           (codec)    versioned zero-copy
+                                                     binary SensorChunk
+                                                     format + session
+                                                     control / ACK-NACK
+                                                     reply structs
+  IngestServer, Loopback, WireClient      (server)   framed-message demux
+                                                     into StreamServer
+                                                     queues (asyncio
+                                                     TCP/Unix + loopback),
+                                                     backpressure as NACKs
+  TraceWriter, TraceReader, TraceRecord,
+  record_session, replay                  (trace)    append-only .wtrace
+                                                     record / playback
+                                                     (as-fast-as-possible
+                                                     or original-timestamp)
+  LoadConfig, LoadGen, run_load           (loadgen)  seeded Poisson /
+                                                     log-normal synthetic
+                                                     traffic driver
+  LatencyHistogram, LatencyRecorder       (latency)  enqueue→readback
+                                                     latency percentiles +
+                                                     backpressure counts
+
+The codec and latency modules are dependency-light (numpy + stdlib);
+the server/loadgen layers import :mod:`repro.serve`.  Lazy loading
+keeps ``import repro.wire`` cheap for codec-only users (trace tooling,
+off-box analysis).
+"""
+
+from __future__ import annotations
+
+_LAZY = {
+    "WIRE_VERSION": "repro.wire.codec",
+    "WireFormatError": "repro.wire.codec",
+    "WireCRCError": "repro.wire.codec",
+    "WireFrame": "repro.wire.codec",
+    "ControlFrame": "repro.wire.codec",
+    "Reply": "repro.wire.codec",
+    "encode_chunk": "repro.wire.codec",
+    "decode_frame": "repro.wire.codec",
+    "encode_control": "repro.wire.codec",
+    "decode_control": "repro.wire.codec",
+    "encode_reply": "repro.wire.codec",
+    "decode_reply": "repro.wire.codec",
+    "decode_message": "repro.wire.codec",
+    "IngestServer": "repro.wire.server",
+    "Loopback": "repro.wire.server",
+    "WireClient": "repro.wire.server",
+    "TraceWriter": "repro.wire.trace",
+    "TraceReader": "repro.wire.trace",
+    "TraceRecord": "repro.wire.trace",
+    "record_session": "repro.wire.trace",
+    "replay": "repro.wire.trace",
+    "LoadConfig": "repro.wire.loadgen",
+    "LoadGen": "repro.wire.loadgen",
+    "run_load": "repro.wire.loadgen",
+    "LatencyHistogram": "repro.wire.latency",
+    "LatencyRecorder": "repro.wire.latency",
+}
+
+__all__ = list(_LAZY)
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

@@ -1,0 +1,373 @@
+"""Versioned zero-copy wire format for :class:`~repro.api.types.SensorChunk`.
+
+One **data frame** carries one chunk of one stream:
+
+::
+
+    offset  size  field
+    ------  ----  -----------------------------------------------------
+    0       4     magic  b"EPWF"
+    4       2     version (u16, currently 1)
+    6       2     flags   (bit 0: depth field present)
+    8       8     stream id (u64)
+    16      8     seq (u64, per-stream chunk counter)
+    24      8     timestamp (u64 ns, producer's monotonic clock)
+    32      4     payload CRC32 (zlib.crc32 over the whole payload)
+    36      8     payload nbytes (u64)
+    44      4x26  field table: 4 slots (frames, poses, gazes, depth),
+                  each ``<BB6I``: dtype code, ndim, up to 6 dims
+    148     ...   payload: the 4 raw field buffers, C-order, back to back
+
+The header is a fixed 148 bytes (``FRAME_HEADER.size`` + 4 slots), so a
+transport can read exactly ``DATA_HEADER_NBYTES`` bytes and know the
+frame's total length; decode slices the payload through ``memoryview``
+into ``np.frombuffer`` views — **no payload copy** — and fails fast on
+truncated, corrupt (CRC), wrong-magic, or wrong-version frames.
+
+Two small fixed-size companions share the transport framing:
+
+* **control frames** (magic ``b"EPWC"``): session ``OPEN`` / ``CLOSE``
+  for one stream id — the ingest server maps them to slot admit/evict;
+* **replies** (magic ``b"EPWR"``): per-message ACK/NACK with a status
+  code, so producers see backpressure (``NACK_BACKPRESSURE``) and
+  admission failures (``NACK_POOL_FULL``) instead of silent drops.
+
+Encode accepts jax or numpy field arrays (device arrays are fetched to
+host once); decode returns numpy views, which every downstream consumer
+(``StreamServer.submit`` → ``jnp.stack``) accepts unchanged — the
+decode→device path round-trips bit-identically (pinned in
+``tests/test_wire.py``).
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import NamedTuple, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.api.types import SensorChunk
+
+Buffer = Union[bytes, bytearray, memoryview]
+
+WIRE_VERSION = 1
+
+DATA_MAGIC = b"EPWF"
+CTRL_MAGIC = b"EPWC"
+REPLY_MAGIC = b"EPWR"
+
+_FLAG_HAS_DEPTH = 1
+
+# magic, version, flags, stream_id, seq, timestamp_ns, crc32, payload_nbytes
+FRAME_HEADER = struct.Struct("<4sHHQQQIQ")
+# dtype code, ndim, 6 dims (unused dims zero)
+FIELD_SLOT = struct.Struct("<BB6I")
+N_FIELD_SLOTS = 4  # frames, poses, gazes, depth
+MAX_NDIM = 6
+DATA_HEADER_NBYTES = FRAME_HEADER.size + N_FIELD_SLOTS * FIELD_SLOT.size
+
+# magic, version, op, stream_id
+CONTROL = struct.Struct("<4sHHQ")
+OP_OPEN = 1
+OP_CLOSE = 2
+_OPS = {OP_OPEN: "open", OP_CLOSE: "close"}
+
+# magic, version, status, stream_id, seq
+REPLY = struct.Struct("<4sHHQQ")
+ACK = 0
+NACK_BACKPRESSURE = 1
+NACK_POOL_FULL = 2
+NACK_UNKNOWN_STREAM = 3
+NACK_BAD_FRAME = 4
+NACK_DUP_STREAM = 5
+STATUS_NAMES = {
+    ACK: "ack",
+    NACK_BACKPRESSURE: "backpressure",
+    NACK_POOL_FULL: "pool_full",
+    NACK_UNKNOWN_STREAM: "unknown_stream",
+    NACK_BAD_FRAME: "bad_frame",
+    NACK_DUP_STREAM: "dup_stream",
+}
+
+# Wire dtype codes.  Fixed small vocabulary: the codec fails fast on a
+# dtype it cannot name rather than shipping opaque bytes.
+_CODE_TO_DTYPE = {
+    0: np.dtype(np.uint8),
+    1: np.dtype(np.int8),
+    2: np.dtype(np.uint16),
+    3: np.dtype(np.int16),
+    4: np.dtype(np.uint32),
+    5: np.dtype(np.int32),
+    6: np.dtype(np.uint64),
+    7: np.dtype(np.int64),
+    8: np.dtype(np.float16),
+    9: np.dtype(np.float32),
+    10: np.dtype(np.float64),
+    11: np.dtype(np.bool_),
+}
+_DTYPE_TO_CODE = {dt: code for code, dt in _CODE_TO_DTYPE.items()}
+try:  # bfloat16 rides along when ml_dtypes is present (a jax dep)
+    import ml_dtypes
+
+    _CODE_TO_DTYPE[12] = np.dtype(ml_dtypes.bfloat16)
+    _DTYPE_TO_CODE[np.dtype(ml_dtypes.bfloat16)] = 12
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax
+    pass
+
+
+class WireFormatError(ValueError):
+    """A frame that must not be ingested: truncated, wrong magic or
+    version, malformed field table, or inconsistent sizes."""
+
+
+class WireCRCError(WireFormatError):
+    """Payload bytes do not match the header's CRC32."""
+
+
+class WireFrame(NamedTuple):
+    """A decoded data frame: header scalars + a zero-copy chunk view."""
+
+    stream_id: int
+    seq: int
+    timestamp_ns: int
+    chunk: SensorChunk  # numpy views into the source buffer
+
+
+class ControlFrame(NamedTuple):
+    op: int  # OP_OPEN / OP_CLOSE
+    stream_id: int
+
+    @property
+    def op_name(self) -> str:
+        return _OPS.get(self.op, f"op{self.op}")
+
+
+class Reply(NamedTuple):
+    status: int
+    stream_id: int
+    seq: int
+
+    @property
+    def ok(self) -> bool:
+        return self.status == ACK
+
+    @property
+    def status_name(self) -> str:
+        return STATUS_NAMES.get(self.status, f"status{self.status}")
+
+
+def _host_array(x) -> np.ndarray:
+    """One host copy (device_get for jax arrays), C-contiguous."""
+    return np.ascontiguousarray(np.asarray(x))
+
+
+def _pack_slot(arr: Optional[np.ndarray]) -> bytes:
+    if arr is None:
+        return FIELD_SLOT.pack(0, 0, 0, 0, 0, 0, 0, 0)
+    code = _DTYPE_TO_CODE.get(arr.dtype)
+    if code is None:
+        raise WireFormatError(
+            f"dtype {arr.dtype} has no wire code; supported: "
+            f"{sorted(str(d) for d in _DTYPE_TO_CODE)}"
+        )
+    if arr.ndim > MAX_NDIM:
+        raise WireFormatError(
+            f"ndim {arr.ndim} exceeds the wire maximum {MAX_NDIM}"
+        )
+    dims = list(arr.shape) + [0] * (MAX_NDIM - arr.ndim)
+    return FIELD_SLOT.pack(code, arr.ndim, *dims)
+
+
+def encode_chunk(
+    chunk: SensorChunk,
+    *,
+    stream_id: int,
+    seq: int,
+    timestamp_ns: int,
+) -> bytes:
+    """Serialize one chunk into a self-delimiting data frame."""
+    fields = [
+        _host_array(chunk.frames),
+        _host_array(chunk.poses),
+        _host_array(chunk.gazes),
+        None if chunk.depth is None else _host_array(chunk.depth),
+    ]
+    flags = 0 if chunk.depth is None else _FLAG_HAS_DEPTH
+    payload = b"".join(f.tobytes() for f in fields if f is not None)
+    header = FRAME_HEADER.pack(
+        DATA_MAGIC,
+        WIRE_VERSION,
+        flags,
+        stream_id,
+        seq,
+        timestamp_ns,
+        zlib.crc32(payload),
+        len(payload),
+    )
+    table = b"".join(_pack_slot(f) for f in fields)
+    return header + table + payload
+
+
+def frame_nbytes(buf: Buffer) -> int:
+    """Total frame length, from a prefix of ≥ ``FRAME_HEADER.size``
+    bytes (lets a byte-stream transport delimit frames itself)."""
+    if len(buf) < FRAME_HEADER.size:
+        raise WireFormatError(
+            f"need {FRAME_HEADER.size} header bytes to size a frame, "
+            f"got {len(buf)}"
+        )
+    magic, version, _, _, _, _, _, payload_nbytes = FRAME_HEADER.unpack_from(
+        bytes(memoryview(buf)[: FRAME_HEADER.size])
+    )
+    _check_magic_version(magic, DATA_MAGIC, version)
+    return DATA_HEADER_NBYTES + payload_nbytes
+
+
+def _check_magic_version(magic: bytes, expect: bytes, version: int) -> None:
+    if magic != expect:
+        raise WireFormatError(
+            f"bad magic {magic!r} (expected {expect!r})"
+        )
+    if version != WIRE_VERSION:
+        raise WireFormatError(
+            f"wire version {version} not supported (this codec speaks "
+            f"version {WIRE_VERSION})"
+        )
+
+
+def decode_frame(buf: Buffer, *, verify_crc: bool = True) -> WireFrame:
+    """Decode a data frame into header scalars + zero-copy field views.
+
+    The returned ``SensorChunk`` fields are ``np.frombuffer`` views of
+    ``buf`` — no payload bytes are copied.  Mutating or freeing the
+    source buffer invalidates them; copy (or ``device_put``) before
+    reuse.  Raises :class:`WireFormatError` on any structural problem
+    and :class:`WireCRCError` on payload corruption.
+    """
+    view = memoryview(buf)
+    if len(view) < DATA_HEADER_NBYTES:
+        raise WireFormatError(
+            f"truncated frame: {len(view)} bytes < "
+            f"{DATA_HEADER_NBYTES}-byte header"
+        )
+    (
+        magic,
+        version,
+        flags,
+        stream_id,
+        seq,
+        timestamp_ns,
+        crc,
+        payload_nbytes,
+    ) = FRAME_HEADER.unpack_from(bytes(view[: FRAME_HEADER.size]))
+    _check_magic_version(magic, DATA_MAGIC, version)
+    total = DATA_HEADER_NBYTES + payload_nbytes
+    if len(view) < total:
+        raise WireFormatError(
+            f"truncated frame: header promises {total} bytes, "
+            f"got {len(view)}"
+        )
+
+    has_depth = bool(flags & _FLAG_HAS_DEPTH)
+    slots = []
+    for i in range(N_FIELD_SLOTS):
+        off = FRAME_HEADER.size + i * FIELD_SLOT.size
+        code, ndim, *dims = FIELD_SLOT.unpack_from(
+            bytes(view[off : off + FIELD_SLOT.size])
+        )
+        if ndim > MAX_NDIM:
+            raise WireFormatError(f"field {i}: ndim {ndim} > {MAX_NDIM}")
+        slots.append((code, tuple(dims[:ndim])))
+    want_fields = 4 if has_depth else 3
+
+    payload = view[DATA_HEADER_NBYTES : total]
+    if verify_crc and zlib.crc32(payload) != crc:
+        raise WireCRCError(
+            f"payload CRC mismatch on stream {stream_id} seq {seq}"
+        )
+
+    arrays = []
+    lo = 0
+    for i in range(want_fields):
+        code, shape = slots[i]
+        dtype = _CODE_TO_DTYPE.get(code)
+        if dtype is None:
+            raise WireFormatError(f"field {i}: unknown dtype code {code}")
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        if lo + nbytes > payload_nbytes:
+            raise WireFormatError(
+                f"field {i}: table wants {nbytes} bytes at offset {lo} "
+                f"but payload is {payload_nbytes} bytes"
+            )
+        arrays.append(
+            np.frombuffer(payload[lo : lo + nbytes], dtype).reshape(shape)
+        )
+        lo += nbytes
+    if lo != payload_nbytes:
+        raise WireFormatError(
+            f"payload has {payload_nbytes - lo} trailing bytes beyond "
+            f"the field table"
+        )
+
+    chunk = SensorChunk(
+        arrays[0], arrays[1], arrays[2], arrays[3] if has_depth else None
+    ).validate()
+    return WireFrame(stream_id, seq, timestamp_ns, chunk)
+
+
+# -- control / reply frames --------------------------------------------------
+
+
+def encode_control(op: int, stream_id: int) -> bytes:
+    if op not in _OPS:
+        raise WireFormatError(f"unknown control op {op}")
+    return CONTROL.pack(CTRL_MAGIC, WIRE_VERSION, op, stream_id)
+
+
+def decode_control(buf: Buffer) -> ControlFrame:
+    if len(buf) < CONTROL.size:
+        raise WireFormatError(
+            f"truncated control frame: {len(buf)} < {CONTROL.size}"
+        )
+    magic, version, op, stream_id = CONTROL.unpack_from(
+        bytes(memoryview(buf)[: CONTROL.size])
+    )
+    _check_magic_version(magic, CTRL_MAGIC, version)
+    if op not in _OPS:
+        raise WireFormatError(f"unknown control op {op}")
+    return ControlFrame(op, stream_id)
+
+
+def encode_reply(status: int, stream_id: int, seq: int = 0) -> bytes:
+    return REPLY.pack(REPLY_MAGIC, WIRE_VERSION, status, stream_id, seq)
+
+
+def decode_reply(buf: Buffer) -> Reply:
+    if len(buf) < REPLY.size:
+        raise WireFormatError(
+            f"truncated reply: {len(buf)} < {REPLY.size}"
+        )
+    magic, version, status, stream_id, seq = REPLY.unpack_from(
+        bytes(memoryview(buf)[: REPLY.size])
+    )
+    _check_magic_version(magic, REPLY_MAGIC, version)
+    return Reply(status, stream_id, seq)
+
+
+def decode_message(
+    buf: Buffer, *, verify_crc: bool = True
+) -> Tuple[str, Union[WireFrame, ControlFrame, Reply]]:
+    """Dispatch one framed message on its magic.
+
+    Returns ``("data", WireFrame)``, ``("control", ControlFrame)`` or
+    ``("reply", Reply)``; raises :class:`WireFormatError` otherwise.
+    """
+    head = bytes(memoryview(buf)[:4])
+    if head == DATA_MAGIC:
+        return "data", decode_frame(buf, verify_crc=verify_crc)
+    if head == CTRL_MAGIC:
+        return "control", decode_control(buf)
+    if head == REPLY_MAGIC:
+        return "reply", decode_reply(buf)
+    raise WireFormatError(f"bad magic {head!r}")

@@ -1,0 +1,143 @@
+"""Latency telemetry: enqueue→readback histograms + percentiles.
+
+The ingest chain stamps three points per chunk — **enqueue** (the wire
+frame lands in the stream's :class:`~repro.serve.ingest.ChunkQueue`),
+**pop** (the serving tick claims it) and **readback** (the tick's
+batched ``device_get`` completes, i.e. results exist on host).  A
+:class:`LatencyRecorder` attached to ``StreamServer.latency`` folds
+every stepped chunk into three histograms:
+
+  ``queue_wait``  enqueue→pop      (queueing delay: how far behind the
+                                    server runs under load)
+  ``service``     pop→readback     (compute + transfer delay of the
+                                    tick that served the chunk)
+  ``total``       enqueue→readback (what a producer experiences)
+
+:class:`LatencyHistogram` is a fixed log-spaced bucket histogram
+(1 µs … 120 s), so recording is O(1) per sample with no sample list to
+grow, percentiles interpolate within a bucket (≤ ~9% relative bucket
+width), and two histograms merge by adding counts — the cross-pool
+aggregation the bench uses.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+_LO = 1e-6  # 1 µs
+_HI = 120.0  # 2 min: anything slower clamps into the last bucket
+_N_BUCKETS = 192  # ~9% relative width per bucket over [_LO, _HI]
+
+
+class LatencyHistogram:
+    """Fixed log-spaced histogram of durations in seconds."""
+
+    def __init__(self):
+        self.counts = [0] * (_N_BUCKETS + 2)  # + underflow + overflow
+        self.n = 0
+        self.max_s = 0.0
+        self._log_lo = math.log(_LO)
+        self._log_ratio = math.log(_HI / _LO)
+
+    def _bucket(self, dt_s: float) -> int:
+        if dt_s < _LO:
+            return 0
+        if dt_s >= _HI:
+            return _N_BUCKETS + 1
+        frac = (math.log(dt_s) - self._log_lo) / self._log_ratio
+        return 1 + min(_N_BUCKETS - 1, int(frac * _N_BUCKETS))
+
+    def _edge(self, i: int) -> float:
+        """Upper edge of bucket ``i`` (seconds)."""
+        if i <= 0:
+            return _LO
+        if i >= _N_BUCKETS + 1:
+            return _HI
+        return _LO * math.exp(self._log_ratio * i / _N_BUCKETS)
+
+    def record(self, dt_s: float) -> None:
+        self.counts[self._bucket(dt_s)] += 1
+        self.n += 1
+        if dt_s > self.max_s:
+            self.max_s = dt_s
+
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.n += other.n
+        self.max_s = max(self.max_s, other.max_s)
+        return self
+
+    def percentile(self, q: float) -> Optional[float]:
+        """The ``q``-quantile (``0 < q <= 1``) in seconds, interpolated
+        within its bucket; ``None`` on an empty histogram."""
+        if self.n == 0:
+            return None
+        target = q * self.n
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if seen + c >= target:
+                lo = self._edge(i - 1)
+                hi = min(self._edge(i), self.max_s)
+                frac = (target - seen) / c
+                return lo + (max(hi, lo) - lo) * frac
+            seen += c
+        return self.max_s  # pragma: no cover - rounding fallback
+
+    def summary(self) -> Dict[str, float]:
+        """p50/p95/p99 + max in milliseconds, plus the sample count."""
+        out: Dict[str, float] = {"count": self.n}
+        for name, q in (("p50_ms", 0.50), ("p95_ms", 0.95), ("p99_ms", 0.99)):
+            p = self.percentile(q)
+            out[name] = None if p is None else round(p * 1e3, 4)
+        out["max_ms"] = round(self.max_s * 1e3, 4)
+        return out
+
+
+class LatencyRecorder:
+    """Per-chunk ingest latency, split into queueing vs service delay.
+
+    Attach to ``StreamServer.latency``; the server calls
+    :meth:`observe` once per stepped chunk with the three monotonic
+    timestamps.  NACK/drop events are counted by the wire server and
+    queues themselves — :meth:`summary` is latency-only.
+    """
+
+    def __init__(self):
+        self.queue_wait = LatencyHistogram()
+        self.service = LatencyHistogram()
+        self.total = LatencyHistogram()
+
+    @property
+    def n(self) -> int:
+        return self.total.n
+
+    def observe(
+        self, enqueue_ts: float, pop_ts: float, readback_ts: float
+    ) -> None:
+        self.queue_wait.record(max(0.0, pop_ts - enqueue_ts))
+        self.service.record(max(0.0, readback_ts - pop_ts))
+        self.total.record(max(0.0, readback_ts - enqueue_ts))
+
+    def merge(self, other: "LatencyRecorder") -> "LatencyRecorder":
+        self.queue_wait.merge(other.queue_wait)
+        self.service.merge(other.service)
+        self.total.merge(other.total)
+        return self
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        return {
+            "queue_wait": self.queue_wait.summary(),
+            "service": self.service.summary(),
+            "total": self.total.summary(),
+        }
+
+
+def merge_recorders(recorders: List[LatencyRecorder]) -> LatencyRecorder:
+    out = LatencyRecorder()
+    for r in recorders:
+        out.merge(r)
+    return out

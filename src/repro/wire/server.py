@@ -1,0 +1,282 @@
+"""Host-side ingest server: framed wire messages → ``StreamServer``.
+
+Transport layering (relay → queue → pipeline):
+
+* every transport speaks the same **message framing** — a little-endian
+  ``u32`` length prefix, then one codec message (data frame, control
+  frame, or reply);
+* :meth:`IngestServer.handle_message` is the transport-agnostic core:
+  decode, demux on the stream id, map session ``OPEN``/``CLOSE`` onto
+  slot admit/evict, push data frames into the stream's bounded
+  :class:`~repro.serve.ingest.ChunkQueue`, and answer **every** message
+  with an ACK or a reasoned NACK — a full queue surfaces the queue's
+  refuse-newest backpressure to the producer as ``NACK_BACKPRESSURE``
+  instead of silently growing host memory;
+* :class:`Loopback` is the in-process transport (the trace replayer and
+  the load generator drive it; zero sockets, same code path);
+* :meth:`IngestServer.serve_tcp` / :meth:`serve_unix` are thin asyncio
+  receivers that run the same core on each framed message, one reply
+  per message, in the event-loop thread.  ``handle_message`` holds the
+  server's lock, so a bench thread may call :meth:`tick` concurrently.
+
+The serving *clock* stays with the caller: the ingest server never
+steps the pool on its own — call :meth:`tick` (or
+``StreamServer.tick``) at the serving cadence.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import socket
+import struct
+import threading
+from typing import Dict, Optional, Tuple
+
+from repro.wire import codec
+
+LENGTH_PREFIX = struct.Struct("<I")
+MAX_MESSAGE_NBYTES = 1 << 30  # fail fast on absurd/corrupt lengths
+
+
+def frame_message(msg: bytes) -> bytes:
+    """Prepend the u32 length prefix shared by all transports."""
+    if len(msg) > MAX_MESSAGE_NBYTES:
+        raise codec.WireFormatError(
+            f"message of {len(msg)} bytes exceeds the "
+            f"{MAX_MESSAGE_NBYTES}-byte frame limit"
+        )
+    return LENGTH_PREFIX.pack(len(msg)) + msg
+
+
+class IngestServer:
+    """Demux framed wire messages into a ``StreamServer``'s queues."""
+
+    def __init__(self, stream_server, *, verify_crc: bool = True):
+        self.srv = stream_server
+        self.verify_crc = verify_crc
+        self.lock = threading.Lock()
+        self.n_messages = 0
+        self.n_frames_in = 0
+        self.n_opened = 0
+        self.n_closed = 0
+        self.nacks: Dict[str, int] = {}
+        self._seq_seen: Dict[int, int] = {}
+        self._servers: list = []
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # -- transport-agnostic core --------------------------------------------
+
+    def _nack(self, status: int, stream_id: int, seq: int = 0) -> bytes:
+        self.nacks[codec.STATUS_NAMES[status]] = (
+            self.nacks.get(codec.STATUS_NAMES[status], 0) + 1
+        )
+        return codec.encode_reply(status, stream_id, seq)
+
+    def handle_message(self, msg) -> bytes:
+        """Process one unframed message; returns the encoded reply."""
+        with self.lock:
+            return self._handle_locked(msg)
+
+    def _handle_locked(self, msg) -> bytes:
+        self.n_messages += 1
+        try:
+            kind, frame = codec.decode_message(
+                msg, verify_crc=self.verify_crc
+            )
+        except codec.WireFormatError:
+            return self._nack(codec.NACK_BAD_FRAME, 0)
+        if kind == "control":
+            return self._handle_control(frame)
+        if kind != "data":
+            return self._nack(codec.NACK_BAD_FRAME, 0)
+        sid = frame.stream_id
+        if sid not in self._seq_seen:
+            return self._nack(codec.NACK_UNKNOWN_STREAM, sid, frame.seq)
+        try:
+            ok = self.srv.submit(sid, frame.chunk)
+        except (ValueError, KeyError):
+            # Wrong serving quantum / raced an eviction: the frame is
+            # structurally valid wire but unserveable as submitted.
+            return self._nack(codec.NACK_BAD_FRAME, sid, frame.seq)
+        if not ok:
+            return self._nack(codec.NACK_BACKPRESSURE, sid, frame.seq)
+        self._seq_seen[sid] = frame.seq
+        self.n_frames_in += 1
+        return codec.encode_reply(codec.ACK, sid, frame.seq)
+
+    def _handle_control(self, ctl: codec.ControlFrame) -> bytes:
+        sid = ctl.stream_id
+        if ctl.op == codec.OP_OPEN:
+            if sid in self._seq_seen:
+                return self._nack(codec.NACK_DUP_STREAM, sid)
+            try:
+                self.srv.admit(sid)
+            except RuntimeError:
+                return self._nack(codec.NACK_POOL_FULL, sid)
+            except ValueError:
+                return self._nack(codec.NACK_DUP_STREAM, sid)
+            self._seq_seen[sid] = -1
+            self.n_opened += 1
+            return codec.encode_reply(codec.ACK, sid)
+        # OP_CLOSE (decode_control rejects anything else)
+        if sid not in self._seq_seen:
+            return self._nack(codec.NACK_UNKNOWN_STREAM, sid)
+        # Drain-then-evict: pending queued chunks are served before the
+        # slot frees (matches a producer's "flush and hang up").
+        while len(self.srv._queues[sid]):
+            self.srv.tick()
+        self.srv.close(sid)
+        del self._seq_seen[sid]
+        self.n_closed += 1
+        return codec.encode_reply(codec.ACK, sid)
+
+    def session_evicted(self, stream_id: int) -> None:
+        """Forget a wire session the serving layer evicted on its own
+        (idle/LRU policies); later frames NACK ``unknown_stream``."""
+        self._seq_seen.pop(stream_id, None)
+
+    def tick(self):
+        """Run one serving tick under the ingest lock (safe alongside
+        socket receivers); prunes wire sessions the tick evicted."""
+        with self.lock:
+            stepped = self.srv.tick()
+            live = set(self.srv.live_sessions)
+            for sid in [s for s in self._seq_seen if s not in live]:
+                del self._seq_seen[sid]
+            return stepped
+
+    def counters(self) -> Dict[str, int]:
+        return {
+            "n_messages": self.n_messages,
+            "n_frames_in": self.n_frames_in,
+            "n_opened": self.n_opened,
+            "n_closed": self.n_closed,
+            "nacks": dict(self.nacks),
+        }
+
+    # -- asyncio socket receivers -------------------------------------------
+
+    async def _handle_conn(self, reader, writer):
+        try:
+            while True:
+                try:
+                    head = await reader.readexactly(LENGTH_PREFIX.size)
+                except asyncio.IncompleteReadError:
+                    break
+                (nbytes,) = LENGTH_PREFIX.unpack(head)
+                if nbytes > MAX_MESSAGE_NBYTES:
+                    writer.write(
+                        frame_message(self._nack(codec.NACK_BAD_FRAME, 0))
+                    )
+                    break
+                msg = await reader.readexactly(nbytes)
+                writer.write(frame_message(self.handle_message(msg)))
+                await writer.drain()
+        finally:
+            writer.close()
+
+    async def serve_tcp(self, host: str = "127.0.0.1", port: int = 0):
+        server = await asyncio.start_server(self._handle_conn, host, port)
+        self._servers.append(server)
+        return server
+
+    async def serve_unix(self, path: str):
+        server = await asyncio.start_unix_server(self._handle_conn, path)
+        self._servers.append(server)
+        return server
+
+    def start_tcp_in_thread(
+        self, host: str = "127.0.0.1", port: int = 0
+    ) -> Tuple[str, int]:
+        """Run the asyncio receiver on a daemon thread; returns the
+        bound ``(host, port)``.  :meth:`stop` tears it down."""
+        ready = threading.Event()
+        addr: list = []
+
+        def _run():
+            loop = asyncio.new_event_loop()
+            self._loop = loop
+            asyncio.set_event_loop(loop)
+            server = loop.run_until_complete(self.serve_tcp(host, port))
+            addr.extend(server.sockets[0].getsockname()[:2])
+            ready.set()
+            loop.run_forever()
+            server.close()
+            loop.run_until_complete(server.wait_closed())
+            loop.close()
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+        if not ready.wait(timeout=10):
+            raise RuntimeError("ingest server thread failed to start")
+        return addr[0], addr[1]
+
+    def stop(self) -> None:
+        if self._loop is not None:
+            self._loop.call_soon_threadsafe(self._loop.stop)
+            if self._thread is not None:
+                self._thread.join(timeout=10)
+            self._loop = None
+            self._thread = None
+        self._servers.clear()
+
+
+class Loopback:
+    """In-process transport: the same framed messages, no sockets.
+
+    ``send`` runs the full frame→reply path synchronously and returns
+    the decoded :class:`~repro.wire.codec.Reply` — what the trace
+    replayer and the load generator drive.
+    """
+
+    def __init__(self, ingest: IngestServer):
+        self.ingest = ingest
+
+    def send(self, msg) -> codec.Reply:
+        return codec.decode_reply(self.ingest.handle_message(msg))
+
+
+class WireClient:
+    """Minimal blocking socket client (producer side, tests/tools)."""
+
+    def __init__(
+        self,
+        host: Optional[str] = None,
+        port: Optional[int] = None,
+        *,
+        unix_path: Optional[str] = None,
+        timeout: float = 10.0,
+    ):
+        if unix_path is not None:
+            self.sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            self.sock.settimeout(timeout)
+            self.sock.connect(unix_path)
+        else:
+            self.sock = socket.create_connection(
+                (host, port), timeout=timeout
+            )
+
+    def send(self, msg: bytes) -> codec.Reply:
+        self.sock.sendall(frame_message(msg))
+        head = self._recv_exact(LENGTH_PREFIX.size)
+        (nbytes,) = LENGTH_PREFIX.unpack(head)
+        return codec.decode_reply(self._recv_exact(nbytes))
+
+    def _recv_exact(self, n: int) -> bytes:
+        out = b""
+        while len(out) < n:
+            part = self.sock.recv(n - len(out))
+            if not part:
+                raise ConnectionError("ingest server closed the connection")
+            out += part
+        return out
+
+    def close(self) -> None:
+        self.sock.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,204 @@
+"""Append-only ``.wtrace`` files: recorded wire traffic, replayable.
+
+File layout (little-endian)::
+
+    0   8    magic  b"EPWTRACE"
+    8   2    version (u16, currently 1)
+    10  2    reserved (0)
+    12  ...  records, back to back, each:
+             u64  record timestamp (ns, recorder's monotonic clock)
+             u32  message nbytes
+             ...  one codec message (data frame or control frame)
+
+The record timestamp is the *transport* arrival time and drives paced
+replay; a data frame additionally carries the producer's own
+``timestamp_ns`` inside the codec header (end-to-end latency).  The
+reader loads the file once and yields ``memoryview`` slices — replaying
+never copies payload bytes.
+
+Two replay modes:
+
+* **as-fast-as-possible** (``realtime=False``): a bit-exact soak —
+  pushing a recorded session through the loopback ingest server must
+  produce bitwise-identical compressor state to the original
+  in-process run (pinned in ``tests/test_wire.py``);
+* **original timestamps** (``realtime=True``): sleeps out the recorded
+  inter-record gaps (optionally scaled by ``speed``) for latency
+  measurement under the recorded traffic shape.
+"""
+
+from __future__ import annotations
+
+import struct
+import time
+from typing import Callable, Iterable, Iterator, List, NamedTuple, Optional
+
+from repro.api.types import SensorChunk
+from repro.wire import codec
+
+TRACE_MAGIC = b"EPWTRACE"
+TRACE_VERSION = 1
+TRACE_HEADER = struct.Struct("<8sHH")
+RECORD_HEADER = struct.Struct("<QI")
+
+
+class TraceRecord(NamedTuple):
+    timestamp_ns: int
+    message: memoryview  # zero-copy slice of the trace buffer
+
+
+class TraceWriter:
+    """Append wire messages (with record timestamps) to a trace file."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "wb")
+        self._f.write(
+            TRACE_HEADER.pack(TRACE_MAGIC, TRACE_VERSION, 0)
+        )
+        self.n_records = 0
+
+    def append(
+        self, message: bytes, *, timestamp_ns: Optional[int] = None
+    ) -> None:
+        ts = time.monotonic_ns() if timestamp_ns is None else timestamp_ns
+        self._f.write(RECORD_HEADER.pack(ts, len(message)))
+        self._f.write(message)
+        self.n_records += 1
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self) -> "TraceWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class TraceReader:
+    """Iterate a trace's records as zero-copy ``memoryview`` slices."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(path, "rb") as f:
+            self._buf = f.read()
+        if len(self._buf) < TRACE_HEADER.size:
+            raise codec.WireFormatError(
+                f"truncated trace {path!r}: {len(self._buf)} bytes"
+            )
+        magic, version, _ = TRACE_HEADER.unpack_from(self._buf)
+        if magic != TRACE_MAGIC:
+            raise codec.WireFormatError(
+                f"{path!r} is not a wire trace (magic {magic!r})"
+            )
+        if version != TRACE_VERSION:
+            raise codec.WireFormatError(
+                f"trace version {version} not supported (reader speaks "
+                f"{TRACE_VERSION})"
+            )
+
+    def __iter__(self) -> Iterator[TraceRecord]:
+        view = memoryview(self._buf)
+        off = TRACE_HEADER.size
+        while off < len(view):
+            if off + RECORD_HEADER.size > len(view):
+                raise codec.WireFormatError(
+                    f"truncated record header at offset {off} in "
+                    f"{self.path!r}"
+                )
+            ts, nbytes = RECORD_HEADER.unpack_from(self._buf, off)
+            off += RECORD_HEADER.size
+            if off + nbytes > len(view):
+                raise codec.WireFormatError(
+                    f"truncated record payload at offset {off} in "
+                    f"{self.path!r} ({nbytes} bytes promised, "
+                    f"{len(view) - off} left)"
+                )
+            yield TraceRecord(ts, view[off : off + nbytes])
+            off += nbytes
+
+    def records(self) -> List[TraceRecord]:
+        return list(self)
+
+
+def record_session(
+    chunks: Iterable[SensorChunk],
+    path: str,
+    *,
+    stream_id: int,
+    chunk_period_ns: int = 0,
+    open_close: bool = True,
+    start_ns: int = 0,
+) -> int:
+    """Record one stream's chunks as a wire session trace.
+
+    Encodes ``OPEN``, one data frame per chunk (``seq`` counting from
+    0, timestamps spaced ``chunk_period_ns`` apart from ``start_ns``),
+    and — with ``open_close`` — the final ``CLOSE``.  Synthetic
+    timestamps keep the trace deterministic; pass ``chunk_period_ns``
+    equal to the chunk duration (frames × frame period) for a
+    wall-clock-faithful paced replay.  Returns the record count.
+    """
+    with TraceWriter(path) as w:
+        ts = start_ns
+        if open_close:
+            w.append(
+                codec.encode_control(codec.OP_OPEN, stream_id),
+                timestamp_ns=ts,
+            )
+        for seq, chunk in enumerate(chunks):
+            w.append(
+                codec.encode_chunk(
+                    chunk, stream_id=stream_id, seq=seq, timestamp_ns=ts
+                ),
+                timestamp_ns=ts,
+            )
+            ts += chunk_period_ns
+        if open_close:
+            w.append(
+                codec.encode_control(codec.OP_CLOSE, stream_id),
+                timestamp_ns=ts,
+            )
+        return w.n_records
+
+
+def replay(
+    source,
+    send: Callable,
+    *,
+    realtime: bool = False,
+    speed: float = 1.0,
+    sleep: Callable[[float], None] = time.sleep,
+    on_reply: Optional[Callable] = None,
+) -> int:
+    """Push a trace's messages through a transport ``send``.
+
+    ``source`` is a path, a :class:`TraceReader`, or any iterable of
+    :class:`TraceRecord`.  ``send`` is e.g. ``Loopback.send`` or
+    ``WireClient.send``; each reply is passed to ``on_reply`` (count
+    NACKs there).  ``realtime=True`` paces records by their recorded
+    timestamp deltas divided by ``speed``; the default replays
+    as-fast-as-possible (the bit-exact soak mode).  Returns the number
+    of messages sent.
+    """
+    if isinstance(source, str):
+        source = TraceReader(source)
+    if speed <= 0:
+        raise ValueError(f"replay speed must be > 0, got {speed}")
+    t0_ns: Optional[int] = None
+    wall0 = time.monotonic()
+    n = 0
+    for rec in source:
+        if realtime:
+            if t0_ns is None:
+                t0_ns = rec.timestamp_ns
+            due = (rec.timestamp_ns - t0_ns) / 1e9 / speed
+            lag = due - (time.monotonic() - wall0)
+            if lag > 0:
+                sleep(lag)
+        reply = send(rec.message)
+        if on_reply is not None:
+            on_reply(reply)
+        n += 1
+    return n
