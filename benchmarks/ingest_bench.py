@@ -16,7 +16,7 @@ backpressure/admission NACK counts — plus served frames/sec for
 cross-reference against the ``serve`` row.
 
 ``benchmarks/run.py --only ingest`` merges the summary as the ``wire``
-row of the repo-root ``BENCH_core.json`` (schema v5; ``core_bench``
+row of the repo-root ``BENCH_core.json`` (schema v6; ``core_bench``
 preserves the row when it rewrites the file) and writes full detail to
 ``benchmarks/results/ingest_bench.json``.
 """
@@ -110,17 +110,17 @@ def _bench_pool(pool_size: int, seed: int, ticks: int) -> Dict:
         ))
         ingest.tick()
     loop.send(codec.encode_control(codec.OP_CLOSE, 1 << 32))
-    jax.block_until_ready(srv.pool.states.sessions)
+    srv.block_until_ready()
 
     srv.latency = LatencyRecorder()
     frames0 = srv.frames_served
     t0 = time.perf_counter()
     summary = LoadGen(_load_cfg(pool_size, seed, ticks), bank, ingest).run()
-    jax.block_until_ready(srv.pool.states.sessions)
+    srv.block_until_ready()
     wall = time.perf_counter() - t0
 
     lat = srv.latency.summary()
-    sizes = srv.pool.step_cache_sizes()
+    sizes = srv.step_cache_sizes()
     assert all(v == 1 for v in sizes.values()), (
         f"ingest path retraced: {sizes}"
     )
@@ -157,7 +157,7 @@ def _merge_bench_core(row: Dict) -> None:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, json.JSONDecodeError):
-        doc = {"schema": "epic-core-bench-v5", "methods": {}}
+        doc = {"schema": "epic-core-bench-v6", "methods": {}}
     doc.setdefault("methods", {})["wire"] = row
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)

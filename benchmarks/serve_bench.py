@@ -1,18 +1,28 @@
 """Serving throughput: steady-state frames/sec of a churning StreamServer.
 
-The serving-runtime perf row: a :class:`repro.serve.StreamServer` pool
-(EPIC with the sparse-TRD config of the ``epic[sparse]`` core row)
-ingests a live population with **25% churn** — every churn interval a
-quarter of the slots are evicted and fresh sessions admitted into them
-— at pool sizes 4 and 16.  Because admission/eviction are masked
-scatters on a fixed-capacity pool, churn costs no recompiles; the
-number reported is the post-warmup steady state (double-buffered
-ingest, one host sync per tick).
+Two serving perf rows over the EPIC sparse-TRD config of the
+``epic[sparse]`` core row:
 
-``benchmarks/run.py --only serve`` merges the summary as the ``serve``
-row of the repo-root ``BENCH_core.json`` (schema v4 — ``core_bench``
-preserves the row when it rewrites the file) and writes the full
-detail to ``benchmarks/results/serve_bench.json``.
+* ``serve`` — the classic churn row: a fully-occupied pool (sizes 4 and
+  16) with **25% churn** — every churn interval a quarter of the slots
+  are evicted and fresh sessions admitted into them.  Since PR 7 the
+  row also reports **occupancy-normalized throughput** (frames/s per
+  active stream) and the **post-warmup retrace count** — a full flat
+  pool's aggregate f/s is nearly pool-size-independent (every tick pays
+  a full-capacity masked vmap), which silently hides the per-stream
+  cost cliff at low occupancy.
+* ``serve[tiered]`` — the occupancy sweep the tiered pool exists for:
+  pool-16 **capacity** with 4/8/16 **active** streams (the rest
+  admitted but idle), flat ``SlottedPool`` vs ``TieredPool``
+  ``(4, 4, 8)``.  The tiered server concentrates the active streams
+  into the hot tier and steps only tiers with ready chunks, so its
+  tick cost tracks the active population; the row reports the per-
+  occupancy speedup (acceptance gate: ≥ 2× at 4/16 occupancy).
+
+``benchmarks/run.py --only serve`` merges both summaries into the
+repo-root ``BENCH_core.json`` (schema v6 — ``core_bench`` preserves the
+rows when it rewrites the file) and writes the full detail to
+``benchmarks/results/serve_bench.json``.
 """
 
 from __future__ import annotations
@@ -20,7 +30,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import jax
 
@@ -44,6 +54,10 @@ POOL_SIZES = (4, 16)
 CHURN_FRACTION = 0.25
 # Evict/admit churn_fraction of the pool every CHURN_EVERY timed ticks.
 CHURN_EVERY = 2
+# The tiered occupancy sweep: pool-16 capacity, active-stream counts.
+SWEEP_CAPACITY = 16
+SWEEP_TIERS = (4, 4, 8)
+SWEEP_OCCUPANCIES = (4, 8, 16)
 
 
 def _cfg() -> P.EPICConfig:
@@ -64,6 +78,14 @@ def _chunk_feed(key, n_chunks: int):
     # remainder="drop": the serving quantum is a compile axis — a ragged
     # final chunk would retrace every pool program for its odd T.
     return list(api.iter_chunks(stream, CHUNK_FRAMES, remainder="drop"))
+
+
+def _retraces(warm_sizes: Dict, end_sizes: Dict) -> int:
+    """Post-warmup retraces: cache growth beyond one trace per variant
+    (a variant first visited after warmup legitimately compiles once)."""
+    return sum(
+        max(0, n - warm_sizes.get(k, 1)) for k, n in end_sizes.items()
+    )
 
 
 def _bench_pool(pool_size: int, seed: int, warmup: int, timed: int) -> Dict:
@@ -90,7 +112,8 @@ def _bench_pool(pool_size: int, seed: int, warmup: int, timed: int) -> Dict:
         srv.admit(i)
     for _ in range(warmup):
         tick()
-    jax.block_until_ready(srv.pool.states.sessions)
+    srv.block_until_ready()
+    warm_sizes = dict(srv.step_cache_sizes())
 
     frames0 = srv.frames_served
     t0 = time.perf_counter()
@@ -113,26 +136,90 @@ def _bench_pool(pool_size: int, seed: int, warmup: int, timed: int) -> Dict:
                                 n_chunks)
                 ))
         tick()
-    jax.block_until_ready(srv.pool.states.sessions)
+    srv.block_until_ready()
     wall = time.perf_counter() - t0
 
     frames = srv.frames_served - frames0
     assert srv.n_evicted >= n_churn, "churn never happened"
-    sizes = srv.pool.step_cache_sizes()
-    assert all(v == 1 for v in sizes.values()), (
-        f"serving path retraced: {sizes}"
+    retraces = _retraces(warm_sizes, srv.step_cache_sizes())
+    assert retraces == 0, (
+        f"serving path retraced: {srv.step_cache_sizes()}"
     )
     return {
         "frames_per_sec": round(frames / wall, 2),
+        "active_frames_per_sec": round(frames / wall / pool_size, 2),
         "tick_ms": round(wall / timed * 1e3, 3),
         "frames": frames,
         "n_evicted": srv.n_evicted,
         "n_admitted": srv.n_admitted,
+        "post_warmup_retraces": retraces,
     }
 
 
-def _merge_bench_core(row: Dict) -> None:
-    """Insert/refresh the ``serve`` row of the repo-root trajectory."""
+def _bench_occupancy(
+    n_active: int,
+    tiers: Optional[Tuple[int, ...]],
+    seed: int,
+    warmup: int,
+    timed: int,
+) -> Dict:
+    """Pool-16 capacity, ``n_active`` streaming, the rest admitted but
+    idle — flat pool when ``tiers`` is None, else the tiered pool."""
+    key = jax.random.PRNGKey(seed)
+    cfgkw = dict(
+        capacity=SWEEP_CAPACITY, chunk_frames=CHUNK_FRAMES, queue_depth=2
+    )
+    if tiers is not None:
+        cfgkw.update(
+            tiers=tiers, prewarm=True,
+            demote_idle_frames=2 * CHUNK_FRAMES,
+        )
+    srv = StreamServer(api.EPICCompressor(_cfg()), ServerConfig(**cfgkw))
+    n_chunks = warmup + timed + 2
+    feeds = {
+        i: iter(Prefetch(_chunk_feed(jax.random.fold_in(key, i), n_chunks)))
+        for i in range(n_active)
+    }
+    for i in range(SWEEP_CAPACITY):
+        srv.admit(i)
+
+    def tick():
+        for sid in feeds:
+            srv.submit(sid, next(feeds[sid]))
+        srv.tick()
+
+    # Warmup also lets the tiered server's rebalancer settle: the
+    # active streams earn the hot tier, the idlers sink cold.
+    for _ in range(warmup):
+        tick()
+    srv.block_until_ready()
+    warm_sizes = dict(srv.step_cache_sizes())
+
+    frames0 = srv.frames_served
+    t0 = time.perf_counter()
+    for _ in range(timed):
+        tick()
+    srv.block_until_ready()
+    wall = time.perf_counter() - t0
+
+    frames = srv.frames_served - frames0
+    retraces = _retraces(warm_sizes, srv.step_cache_sizes())
+    assert retraces == 0, (
+        f"serving path retraced: {srv.step_cache_sizes()}"
+    )
+    out = {
+        "frames_per_sec": round(frames / wall, 2),
+        "active_frames_per_sec": round(frames / wall / n_active, 2),
+        "tick_ms": round(wall / timed * 1e3, 3),
+        "post_warmup_retraces": retraces,
+    }
+    if tiers is not None:
+        out["n_migrations"] = srv.server_counters()["n_migrations"]
+    return out
+
+
+def _merge_bench_core(rows: Dict[str, Dict]) -> None:
+    """Insert/refresh the serving rows of the repo-root trajectory."""
     path = os.path.join(REPO_ROOT, "BENCH_core.json")
     try:
         with open(path) as f:
@@ -140,10 +227,10 @@ def _merge_bench_core(row: Dict) -> None:
     except (OSError, json.JSONDecodeError):
         # No trajectory yet: a serve-only skeleton (core_bench stamps
         # the real schema + protocol when it next runs).
-        doc = {"schema": "epic-core-bench-v5", "methods": {}}
+        doc = {"schema": "epic-core-bench-v6", "methods": {}}
     # Never relabel an existing file: its core rows were produced under
-    # whatever schema it declares; only the serve row is refreshed here.
-    doc.setdefault("methods", {})["serve"] = row
+    # whatever schema it declares; only the serving rows refresh here.
+    doc.setdefault("methods", {}).update(rows)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
 
@@ -159,20 +246,65 @@ def run(quick: bool = False, seed: int = 0) -> Dict:
               f"{pools[f'pool{n}']['frames_per_sec']:9.1f} f/s  "
               f"({pools[f'pool{n}']['tick_ms']:.1f} ms/tick)")
 
-    row = {
+    # The tiered occupancy sweep (rebalancing needs a few settle ticks,
+    # so give it a longer warmup than the churn row).
+    sweep = {}
+    sweep_warmup = max(warmup, 4)
+    for occ in SWEEP_OCCUPANCIES:
+        flat = _bench_occupancy(occ, None, seed, sweep_warmup, timed)
+        tiered = _bench_occupancy(
+            occ, SWEEP_TIERS, seed, sweep_warmup, timed
+        )
+        speedup = round(
+            tiered["frames_per_sec"] / flat["frames_per_sec"], 2
+        )
+        sweep[f"occ{occ}"] = {
+            "flat": flat, "tiered": tiered, "speedup": speedup,
+        }
+        print(f"[serve] tiered sweep {occ:2d}/{SWEEP_CAPACITY} active  "
+              f"flat {flat['frames_per_sec']:8.1f} f/s  "
+              f"tiered {tiered['frames_per_sec']:8.1f} f/s  "
+              f"({speedup:.2f}x)")
+
+    serve_row = {
         "backend": "ref",
         "interpret": False,
         "prefilter_k": SPARSE_K,
         "patch_k": SPARSE_PATCH_K,
         "chunk_frames": CHUNK_FRAMES,
         "churn_pct": int(CHURN_FRACTION * 100),
+        "post_warmup_retraces": sum(
+            p["post_warmup_retraces"] for p in pools.values()
+        ),
         **{
-            f"pool{n}_frames_per_sec": pools[f"pool{n}"]["frames_per_sec"]
+            f"pool{n}_{metric}": pools[f"pool{n}"][metric]
             for n in POOL_SIZES
+            for metric in ("frames_per_sec", "active_frames_per_sec")
+        },
+    }
+    tiered_row = {
+        "backend": "ref",
+        "capacity": SWEEP_CAPACITY,
+        "tiers": list(SWEEP_TIERS),
+        "chunk_frames": CHUNK_FRAMES,
+        "post_warmup_retraces": sum(
+            sweep[o][kind]["post_warmup_retraces"]
+            for o in sweep for kind in ("flat", "tiered")
+        ),
+        **{
+            f"occ{occ}_{key}": val
+            for occ in SWEEP_OCCUPANCIES
+            for key, val in (
+                ("flat_frames_per_sec",
+                 sweep[f"occ{occ}"]["flat"]["frames_per_sec"]),
+                ("tiered_frames_per_sec",
+                 sweep[f"occ{occ}"]["tiered"]["frames_per_sec"]),
+                ("speedup", sweep[f"occ{occ}"]["speedup"]),
+            )
         },
     }
     out = {
-        "schema": "epic-serve-bench-v1",
+        "schema": "epic-serve-bench-v2",
         "quick": quick,
         "protocol": {
             "frame_hw": FRAME,
@@ -182,18 +314,23 @@ def run(quick: bool = False, seed: int = 0) -> Dict:
             "pool_sizes": list(POOL_SIZES),
             "churn": f"{int(CHURN_FRACTION * 100)}% of slots every "
                      f"{CHURN_EVERY} ticks",
+            "sweep": f"pool-{SWEEP_CAPACITY} capacity, tiers "
+                     f"{SWEEP_TIERS}, occupancies {SWEEP_OCCUPANCIES} "
+                     "(idlers admitted, never fed)",
             "timing": f"{timed} ticks post-warmup ({warmup} warmup), "
                       "double-buffered ingest",
             "device": jax.devices()[0].platform,
         },
         "pools": pools,
-        "serve_row": row,
+        "occupancy_sweep": sweep,
+        "serve_row": serve_row,
+        "serve_tiered_row": tiered_row,
         "wall_s": round(time.time() - t0, 1),
     }
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "serve_bench.json"), "w") as f:
         json.dump(out, f, indent=1)
-    _merge_bench_core(row)
+    _merge_bench_core({"serve": serve_row, "serve[tiered]": tiered_row})
     return out
 
 

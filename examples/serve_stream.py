@@ -13,8 +13,10 @@ device the slot axis is sharded across a ``("streams",)`` mesh; on a
 single device it automatically falls back to the plain vmapped pool —
 the program is identical either way.
 
-Also demonstrates the serving-memory story per family: the same token
-budget is served against a dense-KV arch vs an O(1)-state arch (rwkv6).
+Also demonstrates tiered serving (a 16-slot pool with 4 hot slots where
+only the active streams cost device time) and the serving-memory story
+per family: the same token budget is served against a dense-KV arch vs
+an O(1)-state arch (rwkv6).
 
   PYTHONPATH=src python examples/serve_stream.py
 """
@@ -112,7 +114,7 @@ def compress(key):
           f"K rungs: "
           f"{ {s: srv.telemetry(s).k_trajectory[-1] for s in srv.live_sessions} }")
     print(f"  steady-state jit traces per rung: "
-          f"{srv.pool.step_cache_sizes()} (no churn retraces)")
+          f"{srv.step_cache_sizes()} (no churn retraces)")
 
     ts0 = srv.tokens(0, 16)
     kept = sum(int(srv.export(s).valid.sum()) for s in srv.live_sessions)
@@ -121,6 +123,44 @@ def compress(key):
           f"{ts0.tokens.shape[0]} cross-attention tokens each")
     # Serve stream 0's context to the EFM below.
     return ts0
+
+
+def tiered(key):
+    """Tiered serving: a mostly-idle pool where only the active streams
+    cost device time.  16 admitted sessions, 4 streaming — the tiered
+    server concentrates the streamers into the small hot tier
+    (device-side migration, no retrace) and steps only tiers with
+    ready chunks, so the tick cost tracks the 4 active streams, not
+    the 16-slot capacity."""
+    scfg = SYN.StreamConfig(n_frames=N_FRAMES, hw=(64, 64), n_obj=5)
+    ecfg = P.EPICConfig(frame_hw=(64, 64), patch=16, capacity=16,
+                        tau=0.10, gamma=0.015, theta=8, window=16,
+                        prefilter_k=4)
+    srv = StreamServer(
+        api.get_compressor("epic")(ecfg),
+        ServerConfig(
+            capacity=16, chunk_frames=CHUNK_FRAMES, k_ladder=(4, 8, 16),
+            tiers=(4, 12), prewarm=True,
+            demote_idle_frames=2 * CHUNK_FRAMES,
+        ),
+    )
+    feeds = {
+        i: iter(Prefetch(_chunks(
+            SYN.generate_stream(jax.random.fold_in(key, i), scfg)[0]
+        )))
+        for i in range(4)
+    }
+    for i in range(16):
+        srv.admit(i)  # 4 streamers + 12 idlers, all admitted cold
+    for _ in range(N_FRAMES // CHUNK_FRAMES):
+        for sid in feeds:
+            srv.submit(sid, next(feeds[sid]))
+        srv.tick()
+    c = srv.server_counters()
+    tiers = {sid: srv.telemetry(sid).tier for sid in range(4)}
+    print(f"tiered pool (4 hot / 12 warm): {c['frames_served']} frames, "
+          f"{c['n_migrations']} migrations; active streams now in tiers "
+          f"{tiers}; step traces {srv.step_cache_sizes()}")
 
 
 def energy_counters(key):
@@ -149,6 +189,7 @@ def main():
     key = jax.random.PRNGKey(0)
     batch = 4
     ts = compress(jax.random.fold_in(key, 0))
+    tiered(jax.random.fold_in(key, 5))
     energy_counters(jax.random.fold_in(key, 4))
 
     # --- VLM: EPIC patches ARE the cross-attn KV ---------------------------

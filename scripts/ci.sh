@@ -30,12 +30,30 @@ fi
 if [[ "${1:-}" == "--serve" ]]; then
   # Serving-runtime lane: the repro.serve suite (slotted admission/
   # eviction, per-stream adaptive-K parity, prefetch bit-identity,
-  # 2-device shard_map subprocess, the churn soak) followed by a
-  # smoke of the serve bench — refreshes the `serve` row of
-  # BENCH_core.json and fails if the serving path retraced.
+  # 2-device shard_map subprocess, the churn soak) plus the tiered
+  # suite (TieredPool migration/swap bitwise, rung scheduler, the
+  # tiered-vs-flat soak), followed by a smoke of the serve bench —
+  # refreshes the `serve` + `serve[tiered]` rows of BENCH_core.json —
+  # and a zero-post-warmup-retrace assertion on both rows (the
+  # benches count retraces via the pools' step_cache_sizes()).
   shift
-  python -m pytest -q tests/test_serve.py "$@"
-  exec python -m benchmarks.run --quick --only serve
+  python -m pytest -q tests/test_serve.py tests/test_tiered_serve.py "$@"
+  python -m benchmarks.run --quick --only serve
+  exec python - <<'GUARD'
+import json
+import sys
+
+d = json.load(open("BENCH_core.json"))
+for name in ("serve", "serve[tiered]"):
+    row = d["methods"].get(name)
+    if row is None:
+        sys.exit(f"BENCH_core.json: {name} row missing")
+    n = row.get("post_warmup_retraces")
+    if n != 0:
+        sys.exit(f"BENCH_core.json: {name}.post_warmup_retraces = {n!r},"
+                 " expected 0 (serving path retraced after warmup)")
+print("[serve] zero post-warmup retraces across serve + serve[tiered]")
+GUARD
 fi
 
 if [[ "${1:-}" == "--wire" ]]; then
@@ -98,6 +116,27 @@ for pool in ("pool4", "pool16"):
         sys.exit(f"BENCH_core.json: wire.{pool} has no p99 latency")
 print("[bench-smoke] wire ingest row ok: p99 "
       f"pool4={wire['pool4']['p99_ms']}ms pool16={wire['pool16']['p99_ms']}ms")
+
+# Tiered-serving guard: the serve[tiered] row (refreshed by
+# `ci.sh --serve`, preserved across core rewrites) must keep its
+# low-occupancy win — 4 active streams on a pool-16 capacity at
+# >= 2x the flat pool.
+tiered = d["methods"].get("serve[tiered]")
+if tiered is None:
+    sys.exit("BENCH_core.json: serve[tiered] row missing "
+             "(run scripts/ci.sh --serve to land it)")
+tfloor = 2.0
+tspeed = tiered.get("occ4_speedup")
+if tspeed is None:
+    sys.exit("BENCH_core.json: serve[tiered] row has no occ4_speedup")
+if tspeed < tfloor:
+    sys.exit(
+        f"perf regression: serve[tiered].occ4_speedup = {tspeed} < "
+        f"{tfloor} (flat {tiered.get('occ4_flat_frames_per_sec')} f/s "
+        f"vs tiered {tiered.get('occ4_tiered_frames_per_sec')} f/s)"
+    )
+print(f"[bench-smoke] tiered serving guard ok: {tspeed}x >= {tfloor}x "
+      "at 4/16 occupancy")
 GUARD
 fi
 

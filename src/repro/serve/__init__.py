@@ -7,10 +7,18 @@ above it (ROADMAP north-star: production-scale serving):
   SlottedPool, SlotStates          (slots)     fixed-capacity live pool:
                                                per-slot active masks +
                                                generation counters,
-                                               admit/evict without retrace
+                                               admit/evict without retrace,
+                                               speculative admission +
+                                               coalesced multi-rung steps
+  TieredPool                       (tiers)     size-classed sub-pools:
+                                               hot/warm tiers, device-side
+                                               migration, shared fresh image
   KLadderController               (adaptive)   per-stream adaptive-K rung
                                                state (lifted out of
                                                EPICCompressor)
+  RungScheduler, DispatchPlan     (adaptive)   measured-cost ordering and
+                                               coalescing of a tick's rung
+                                               dispatches
   Prefetch, ChunkQueue            (ingest)     double-buffered host→device
                                                chunk transfer + bounded
                                                per-stream queues
@@ -36,7 +44,12 @@ from __future__ import annotations
 _LAZY = {
     "SlottedPool": "repro.serve.slots",
     "SlotStates": "repro.serve.slots",
+    "StaleSlotError": "repro.serve.slots",
+    "TieredPool": "repro.serve.tiers",
+    "validate_tiers": "repro.serve.tiers",
     "KLadderController": "repro.serve.adaptive",
+    "RungScheduler": "repro.serve.adaptive",
+    "DispatchPlan": "repro.serve.adaptive",
     "Prefetch": "repro.serve.ingest",
     "ChunkQueue": "repro.serve.ingest",
     "StreamServer": "repro.serve.server",

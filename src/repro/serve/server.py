@@ -23,6 +23,26 @@ accelerator ingesting a churning population of glasses streams):
   Prefetch` semantics) *between* dispatching the current step and its
   readback, so transfer overlaps compute.
 
+**Tiered serving** (``ServerConfig.tiers``): the device state becomes a
+:class:`~repro.serve.tiers.TieredPool` — size-classed sub-pools behind
+the same facade.  A tier is stepped only when it has ready chunks, so
+an idle warm tier costs zero device time: tick cost tracks the *active*
+population, not the capacity.  The server rebalances every tick:
+streams idle ≥ ``demote_idle_frames`` frames demote toward the cold
+tier; streams whose arrival-rate EMA reaches ``promote_rate`` promote
+toward the hot tier (migration is a device-side gather/scatter, swap
+when the hot tier is full).  Per-stream outputs and ``k_trajectory``
+stay bitwise identical to the flat pool across churn *and* migration
+(pinned in ``tests/test_tiered_serve.py``) — every tier runs the same
+per-session step bodies and migration copies state verbatim.
+
+Every tick's rung dispatches are ordered (and, with ``coalesce_rungs``,
+pairwise merged when the backlog is low) by a measured-cost
+:class:`~repro.serve.adaptive.RungScheduler`; the tick still pays one
+host sync regardless of how many tiers stepped
+(:func:`~repro.serve.telemetry.tick_readback` batches the per-tier
+readbacks into a single ``device_get``).
+
 Eviction policies: ``"explicit"`` (only :meth:`close`), ``"idle"``
 (streams idle ≥ ``idle_frames`` frames are closed at tick end), and
 ``"lru"`` (a full pool evicts the least-recently-stepped stream to
@@ -49,12 +69,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.types import SensorChunk
-from repro.serve.adaptive import KLadderController
+from repro.serve.adaptive import KLadderController, RungScheduler
 from repro.serve.ingest import _QUEUE_POLICIES, ChunkQueue
 from repro.serve.slots import SlottedPool
 from repro.serve.telemetry import StreamTelemetry, tick_readback
+from repro.serve.tiers import TieredPool, validate_tiers
 
 _EVICTION_POLICIES = ("explicit", "idle", "lru")
+
+# Promotion-by-swap hysteresis: when the hot tier is full, a warm riser
+# only trades places with the coldest hot occupant if its arrival EMA
+# leads by this much — keeps two streams flapping around the threshold
+# from swapping every tick.
+_SWAP_MARGIN = 0.25
 
 
 class ServerConfig(NamedTuple):
@@ -69,6 +96,16 @@ class ServerConfig(NamedTuple):
     ``"refuse"`` the new chunk (default; producers see NACKs) or
     ``"drop_oldest"`` (freshest-data-wins).  ``idle_frames`` only
     applies to the ``"idle"`` eviction policy.
+
+    Tiered serving: ``tiers`` splits ``capacity`` into size-classed
+    sub-pools (hot first; must sum to ``capacity``).  Streams idle for
+    ``demote_idle_frames`` frames demote toward the cold tier; streams
+    whose per-tick arrival EMA (smoothing ``arrival_alpha``) reaches
+    ``promote_rate`` promote toward the hot tier.  ``coalesce_rungs``
+    lets the rung scheduler merge adjacent rung dispatches when at most
+    ``coalesce_backlog`` chunks are queued.  ``prewarm`` pre-compiles
+    the admission/eviction/migration programs at construction so the
+    first churn event pays only a device copy.
     """
 
     capacity: int = 8
@@ -79,6 +116,13 @@ class ServerConfig(NamedTuple):
     idle_frames: int = 64
     queue_depth: int = 2
     queue_policy: str = "refuse"
+    tiers: Optional[Tuple[int, ...]] = None
+    promote_rate: float = 0.5
+    arrival_alpha: float = 0.5
+    demote_idle_frames: int = 32
+    coalesce_rungs: bool = False
+    coalesce_backlog: int = 0
+    prewarm: bool = False
 
 
 class StreamServer:
@@ -116,6 +160,11 @@ class StreamServer:
                 "stream (a ladder-configured compressor carries a "
                 "single per-instance rung)"
             )
+        if not 0.0 < config.arrival_alpha <= 1.0:
+            raise ValueError(
+                f"arrival_alpha must be in (0, 1], got "
+                f"{config.arrival_alpha}"
+            )
         self.cfg = config
         self.compressor = compressor
         if config.k_ladder is not None:
@@ -130,8 +179,27 @@ class StreamServer:
             # arguments, and a per-admit failure would leave a
             # half-admitted slot behind.
             self._make_controller(compressor, config)
-        self.pool = SlottedPool(
-            compressor, config.capacity, mesh=mesh, axis=axis, donate=donate
+        self._tiered = config.tiers is not None
+        if self._tiered:
+            if mesh is not None:
+                raise ValueError(
+                    "tiers and a stream mesh are mutually exclusive: "
+                    "sharding differently-sized tiers over one stream "
+                    "axis would need per-tier meshes (use the flat "
+                    "pool on a mesh, or tiers on one host)"
+                )
+            tiers = validate_tiers(config.tiers, config.capacity)
+            self.pool: Any = TieredPool(compressor, tiers, donate=donate)
+        else:
+            self.pool = SlottedPool(
+                compressor, config.capacity,
+                mesh=mesh, axis=axis, donate=donate,
+            )
+        if config.prewarm:
+            self.pool.prewarm()
+        self._sched = RungScheduler(
+            coalesce=config.coalesce_rungs,
+            coalesce_backlog=config.coalesce_backlog,
         )
         # Per-rung fixed-K compressors (adaptive mode), built lazily:
         # one per ladder rung, shared by every stream on that rung.
@@ -148,22 +216,42 @@ class StreamServer:
         # reads beyond the queue's own enqueue stamp.
         self.latency: Optional[Any] = None
         self._pop_ts: Dict[Hashable, Tuple[float, float]] = {}
+        self._tick_t0 = 0.0
         self._n_dropped_closed = 0
         self.n_ticks = 0
         self.n_admitted = 0
         self.n_evicted = 0
         self.n_admit_rejected = 0
         self.n_backpressure = 0
+        self.n_dispatches = 0
         self.frames_served = 0
+
+    # -- tier plumbing -------------------------------------------------------
+
+    def _locate(self, session_id: Hashable) -> Tuple[int, int]:
+        """``(tier, local_slot)``; a flat pool is tier 0."""
+        if self._tiered:
+            return self.pool.locate(session_id)
+        return 0, self.pool.slot_of(session_id)
+
+    def _tier_pool(self, tier: int) -> SlottedPool:
+        return self.pool.tiers[tier] if self._tiered else self.pool
+
+    def _tier_capacity(self, tier: int) -> int:
+        if self._tiered:
+            return self.pool.capacities[tier]
+        return self.cfg.capacity
 
     # -- admission / eviction ------------------------------------------------
 
     def admit(self, session_id: Hashable) -> int:
         """Admit a stream into a free slot (fresh session state).
 
-        With the ``"lru"`` policy a full pool evicts its least-recently
-        stepped stream to make room; other policies raise
-        ``RuntimeError`` when full.
+        Tiered pools admit into the *coldest* tier with room — new
+        streams earn the hot tier through observed arrivals.  With the
+        ``"lru"`` policy a full pool evicts its least-recently stepped
+        stream to make room; other policies raise ``RuntimeError``
+        when full.  Returns the (global) slot.
         """
         if session_id in self._queues:
             # Must precede the LRU branch: a duplicate admit on a full
@@ -187,11 +275,13 @@ class StreamServer:
             self._controllers[session_id] = self._make_controller(
                 self.compressor, self.cfg
             )
+        tier = self.pool.unpack_slot(slot)[0] if self._tiered else 0
         self._telemetry[session_id] = StreamTelemetry(
             session_id=session_id,
             slot=slot,
             generation=self.pool.generation_of(slot),
             admitted_tick=self.n_ticks,
+            tier=tier,
         )
         self.n_admitted += 1
         return slot
@@ -265,6 +355,9 @@ class StreamServer:
             self._rung_comps[k] = comp
         return comp
 
+    def _rung_step_fn(self, k: Optional[int]):
+        return self.compressor.step if k is None else self._rung_comp(k).step
+
     def _pop_ready(self) -> Dict[Hashable, SensorChunk]:
         ready = {}
         self._pop_ts = {}
@@ -276,49 +369,98 @@ class StreamServer:
                 self._pop_ts[sid] = (entry[1], now)
         return ready
 
+    def _slot_mask(self, tier: int, sids) -> jax.Array:
+        tp = self._tier_pool(tier)
+        return jnp.zeros((tp.capacity,), bool).at[
+            jnp.array([tp.slot_of(s) for s in sids], jnp.int32)
+        ].set(True)
+
     def _dispatch(self, ready: Dict[Hashable, SensorChunk]):
-        """Assemble the tick batch and dispatch one masked pool step
-        per rung in use.  Returns the (still in-flight) combined stats
-        and the per-rung stepped session lists."""
-        cap = self.cfg.capacity
-        rows = [self._zero_chunk] * cap
-        for sid, chunk in ready.items():
-            rows[self.pool.slot_of(sid)] = chunk
-        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
-
-        if self.cfg.k_ladder is None:
-            groups = {None: list(ready)}
-        else:
-            groups: Dict[Optional[int], List[Hashable]] = {}
-            for sid in ready:
-                k = self._controllers[sid].begin_chunk()
-                groups.setdefault(k, []).append(sid)
-
-        stats_parts = []
-        for k, sids in groups.items():
-            mask = jnp.zeros((cap,), bool).at[
-                jnp.array([self.pool.slot_of(s) for s in sids], jnp.int32)
-            ].set(True)
-            step_fn = None if k is None else self._rung_comp(k).step
-            stats_parts.append(
-                self.pool.step(batch, mask=mask, step_fn=step_fn, key=k)
+        """Assemble per-tier tick batches and dispatch the scheduler's
+        plans — only tiers with ready chunks are stepped.  Returns the
+        (still in-flight) per-tier combined stats, the ``(tier, rung)``
+        session groups, and the dispatched variant keys."""
+        self._tick_t0 = time.monotonic()
+        groups: Dict[Tuple[int, Optional[int]], List[Hashable]] = {}
+        for sid in ready:
+            tier = self._locate(sid)[0]
+            k = (
+                None if self.cfg.k_ladder is None
+                else self._controllers[sid].begin_chunk()
             )
-        # Rung masks are disjoint and masked-out slots are zeroed, so
-        # the union of the per-rung stats is an elementwise combine.
-        stats = jax.tree.map(
-            lambda *xs: reduce(
-                jnp.logical_or if xs[0].dtype == bool else operator.add, xs
-            ),
-            *stats_parts,
+            groups.setdefault((tier, k), []).append(sid)
+        plans = self._sched.plan(
+            groups,
+            backlog=sum(len(q) for q in self._queues.values()),
         )
-        return stats, groups
 
-    def _finish(self, stats, groups) -> None:
-        """One batched readback; feed controllers + telemetry; apply
-        the idle eviction policy."""
+        batches: Dict[int, SensorChunk] = {}
+        for tier in {t for t, _ in groups}:
+            rows = [self._zero_chunk] * self._tier_capacity(tier)
+            tp = self._tier_pool(tier)
+            for sid, chunk in ready.items():
+                if self._locate(sid)[0] == tier:
+                    rows[tp.slot_of(sid)] = chunk
+            batches[tier] = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+        stats_parts: Dict[int, List[Any]] = {}
+        keys: List[Hashable] = []
+        for plan in plans:
+            tp = self._tier_pool(plan.tier)
+            batch = batches[plan.tier]
+            if len(plan.rungs) == 1:
+                k = plan.rungs[0]
+                stats = tp.step(
+                    batch,
+                    mask=self._slot_mask(plan.tier, plan.sids[0]),
+                    step_fn=None if k is None else self._rung_comp(k).step,
+                    key=k,
+                )
+            else:
+                stats = tp.step_multi(
+                    batch,
+                    jnp.stack([
+                        self._slot_mask(plan.tier, sids)
+                        for sids in plan.sids
+                    ]),
+                    [self._rung_step_fn(k) for k in plan.rungs],
+                    key=plan.key,
+                )
+            keys.append(plan.key)
+            self.n_dispatches += 1
+            stats_parts.setdefault(plan.tier, []).append(stats)
+        # Rung masks are disjoint and masked-out slots are zeroed, so
+        # the union of a tier's per-rung stats is an elementwise
+        # combine.
+        stats_by_tier = {
+            tier: jax.tree.map(
+                lambda *xs: reduce(
+                    jnp.logical_or if xs[0].dtype == bool else operator.add,
+                    xs,
+                ),
+                *parts,
+            )
+            for tier, parts in stats_parts.items()
+        }
+        return stats_by_tier, groups, keys
+
+    def _finish(self, stats_by_tier, groups, keys=()) -> None:
+        """One batched readback across every stepped tier; feed
+        controllers + telemetry + the scheduler's cost model; apply the
+        idle eviction policy and (tiered) rebalance."""
         stepped = [sid for sids in groups.values() for sid in sids]
         if stepped:
-            rb = tick_readback(stats)
+            tiers_stepped = sorted(stats_by_tier)
+            rb = tick_readback(
+                [stats_by_tier[t] for t in tiers_stepped]
+            )
+            self._sched.observe_tick(
+                keys, time.monotonic() - self._tick_t0
+            )
+            base, off = {}, 0
+            for t in tiers_stepped:
+                base[t] = off
+                off += self._tier_capacity(t)
             if self.latency is not None:
                 done = time.monotonic()
                 for sid in stepped:
@@ -327,30 +469,108 @@ class StreamServer:
                         self.latency.observe(ts[0], ts[1], done)
             for sid in stepped:
                 tele = self._telemetry[sid]
-                slot = tele.slot
+                tier, local = self._locate(sid)
+                row = base[tier] + local
                 tele.n_chunks += 1
                 tele.n_frames += self.cfg.chunk_frames
-                tele.n_processed += int(rb.processed[slot])
-                tele.n_inserted += int(rb.inserted[slot])
-                tele.buffer_valid = int(rb.buffer_valid[slot])
+                tele.n_processed += int(rb.processed[row])
+                tele.n_inserted += int(rb.inserted[row])
+                tele.buffer_valid = int(rb.buffer_valid[row])
                 tele.idle_frames = 0
                 tele.last_step_tick = self.n_ticks
                 ctl = self._controllers.get(sid)
                 if ctl is not None:
                     ctl.update(
-                        int(rb.overflow[slot]), int(rb.peak_full[slot])
+                        int(rb.overflow[row]), int(rb.peak_full[row])
                     )
                     tele.k_trajectory = ctl.k_trajectory
             self.frames_served += len(stepped) * self.cfg.chunk_frames
         stepped_set = set(stepped)
+        a = self.cfg.arrival_alpha
         for sid in list(self._telemetry):
+            tele = self._telemetry[sid]
             if sid not in stepped_set:
-                self._telemetry[sid].idle_frames += self.cfg.chunk_frames
+                tele.idle_frames += self.cfg.chunk_frames
+            tele.arrival_ema = (1.0 - a) * tele.arrival_ema + a * float(
+                sid in stepped_set
+            )
         self.n_ticks += 1
         if self.cfg.eviction == "idle":
             for sid in list(self._telemetry):
                 if self._telemetry[sid].idle_frames >= self.cfg.idle_frames:
                     self.close(sid)
+        if self._tiered:
+            self._rebalance()
+
+    # -- tier rebalancing ----------------------------------------------------
+
+    def _migrate(self, session_id: Hashable, to_tier: int) -> None:
+        slot = self.pool.migrate(session_id, to_tier)
+        tele = self._telemetry[session_id]
+        tele.slot = slot
+        tele.tier = to_tier
+        tele.generation = self.pool.generation_of(slot)
+        tele.n_migrations += 1
+
+    def _swap(self, session_a: Hashable, session_b: Hashable) -> None:
+        self.pool.swap(session_a, session_b)
+        for sid in (session_a, session_b):
+            slot = self.pool.slot_of(sid)
+            tele = self._telemetry[sid]
+            tele.slot = slot
+            tele.tier = self.pool.unpack_slot(slot)[0]
+            tele.generation = self.pool.generation_of(slot)
+            tele.n_migrations += 1
+
+    def _rebalance(self) -> None:
+        """Concentrate active streams into the hot tier.
+
+        Demote: a non-cold stream idle ≥ ``demote_idle_frames`` frames
+        moves to the coldest tier with a free slot.  Promote: non-hot
+        streams with arrival EMA ≥ ``promote_rate`` (hottest first,
+        slot-order tie-break) move into the hottest tier with room, or
+        swap with the coldest hot occupant when its EMA trails by
+        ≥ ``_SWAP_MARGIN``.  All moves are device-side gather/scatters;
+        the compiled-program set is fixed after :meth:`~repro.serve.
+        tiers.TieredPool.prewarm`, so rebalancing never retraces.
+        """
+        pool = self.pool
+        coldest = len(pool.tiers) - 1
+        for tele in list(self._telemetry.values()):
+            if (
+                tele.tier < coldest
+                and tele.idle_frames >= self.cfg.demote_idle_frames
+            ):
+                for tj in range(coldest, tele.tier, -1):
+                    if pool.tiers[tj].free_slots():
+                        self._migrate(tele.session_id, tj)
+                        break
+        risers = sorted(
+            (
+                t for t in self._telemetry.values()
+                if t.tier > 0 and t.arrival_ema >= self.cfg.promote_rate
+            ),
+            key=lambda t: (-t.arrival_ema, t.slot),
+        )
+        for tele in risers:
+            target = next(
+                (
+                    tj for tj in range(tele.tier)
+                    if pool.tiers[tj].free_slots()
+                ),
+                None,
+            )
+            if target is not None:
+                self._migrate(tele.session_id, target)
+                continue
+            victims = [
+                self._telemetry[s] for s in pool.tiers[0]._slot_of
+            ]
+            victim = min(victims, key=lambda v: (v.arrival_ema, v.slot))
+            if victim.arrival_ema + _SWAP_MARGIN <= tele.arrival_ema:
+                self._swap(tele.session_id, victim.session_id)
+
+    # -- tick / drain --------------------------------------------------------
 
     def tick(self) -> List[Hashable]:
         """Serve one tick: step every stream with a pending chunk.
@@ -360,10 +580,10 @@ class StreamServer:
         """
         ready = self._pop_ready()
         if not ready:
-            self._finish(None, {})
+            self._finish({}, {})
             return []
-        stats, groups = self._dispatch(ready)
-        self._finish(stats, groups)
+        stats, groups, keys = self._dispatch(ready)
+        self._finish(stats, groups, keys)
         return [sid for sids in groups.values() for sid in sids]
 
     def drain(
@@ -395,7 +615,7 @@ class StreamServer:
             if inflight is not None:
                 self._finish(*inflight)
             else:
-                self._finish(None, {})
+                self._finish({}, {})
             ticks += 1
             if max_ticks is not None and ticks >= max_ticks:
                 break
@@ -434,8 +654,23 @@ class StreamServer:
             "n_backpressure": self.n_backpressure,
             "n_dropped": self._n_dropped_closed
             + sum(q.n_dropped for q in self._queues.values()),
+            "n_dispatches": self.n_dispatches,
+            "n_coalesced": self._sched.n_coalesced,
+            "n_migrations": (
+                self.pool.n_migrations + self.pool.n_swaps
+                if self._tiered else 0
+            ),
             "frames_served": self.frames_served,
         }
+
+    def step_cache_sizes(self) -> Dict[Hashable, int]:
+        """Compiled-trace counts across every pool step variant — the
+        zero-post-warmup-retrace telemetry (tiered pools key by
+        ``(tier, variant)``)."""
+        return self.pool.step_cache_sizes()
+
+    def block_until_ready(self) -> None:
+        self.pool.block_until_ready()
 
     def state(self, session_id: Hashable):
         return self.pool.session_state(session_id)

@@ -32,6 +32,18 @@ Rung-bucketed dispatch for per-stream adaptive K is built on
 full-capacity masked step per *rung in use* (mask = slots on that
 rung), each compiled once and cached under its key — churning which
 slots sit on which rung only changes mask *values*, never shapes.
+:meth:`step_multi` is the coalesced variant: several rung bodies fused
+into **one** dispatch (one program, one donated in/out pass), each slot
+still stepped by exactly its own rung's body — bitwise identical to the
+sequence of per-rung dispatches, because a vmapped step is elementwise
+across slots and the rung masks are disjoint.
+
+Speculative admission: the pool caches one **fresh-session slot image**
+on device at construction (``fresh=``, shareable across the tiers of a
+:class:`~repro.serve.tiers.TieredPool`), so every ``admit`` is a
+device-side scatter of that cached image — ``compressor.init()`` runs
+once per pool (or once per *server* when tiers share the image), never
+per admission.
 """
 
 from __future__ import annotations
@@ -46,6 +58,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.api.types import SensorChunk
 
 Array = jax.Array
+
+# Session id used (and released) by ``SlottedPool.prewarm``.
+_PREWARM_SENTINEL = "__prewarm__"
+
+
+class StaleSlotError(KeyError):
+    """A cached ``(slot, generation)`` handle outlived its occupant."""
 
 
 class SlotStates(NamedTuple):
@@ -82,6 +101,10 @@ class SlottedPool:
         must divide evenly over the axis size.
       donate: donate carried state to each step (default: on for
         accelerator backends).
+      fresh: optional pre-built fresh-session state (the speculative
+        admission image).  A :class:`~repro.serve.tiers.TieredPool`
+        builds it once and shares it across all tiers; ``None`` calls
+        ``compressor.init()`` once here.
     """
 
     def __init__(
@@ -92,6 +115,7 @@ class SlottedPool:
         mesh: Optional[Mesh] = None,
         axis: Optional[str] = None,
         donate: Optional[bool] = None,
+        fresh: Optional[Any] = None,
     ):
         if getattr(compressor, "k_ladder", None) is not None:
             raise ValueError(
@@ -128,7 +152,7 @@ class SlottedPool:
         self.session_at: List[Optional[Hashable]] = [None] * capacity
         self._slot_of: Dict[Hashable, int] = {}
         self._host_generation: List[int] = [0] * capacity
-        self._fresh = compressor.init()
+        self._fresh = compressor.init() if fresh is None else fresh
         self._steps: Dict[Hashable, Callable] = {}
         self._admit_fn: Optional[Callable] = None
         self._evict_fn: Optional[Callable] = None
@@ -170,6 +194,18 @@ class SlottedPool:
     def generation_of(self, slot: int) -> int:
         return self._host_generation[slot]
 
+    def _host_bind(self, slot: int, session_id: Hashable) -> None:
+        """Host-side slot assignment (shared by admit and the tiered
+        pool's migration scatter — the device generation bump must
+        always be mirrored here)."""
+        self.session_at[slot] = session_id
+        self._slot_of[session_id] = slot
+        self._host_generation[slot] += 1
+
+    def _host_unbind(self, slot: int) -> None:
+        del self._slot_of[self.session_at[slot]]
+        self.session_at[slot] = None
+
     # -- admission / eviction ------------------------------------------------
 
     def admit(self, session_id: Hashable, slot: Optional[int] = None) -> int:
@@ -193,6 +229,14 @@ class SlottedPool:
                 f"slot {slot} still holds session "
                 f"{self.session_at[slot]!r}; evict it first"
             )
+        self._ensure_lifecycle_fns()
+        self.states = self._admit_fn(
+            self.states, jnp.int32(slot), self._fresh
+        )
+        self._host_bind(slot, session_id)
+        return slot
+
+    def _ensure_lifecycle_fns(self) -> None:
         if self._admit_fn is None:
 
             def _admit(states: SlotStates, s, fresh) -> SlotStates:
@@ -211,19 +255,6 @@ class SlottedPool:
             self._admit_fn = jax.jit(
                 _admit, donate_argnums=(0,) if self._donate else ()
             )
-        self.states = self._admit_fn(
-            self.states, jnp.int32(slot), self._fresh
-        )
-        self.session_at[slot] = session_id
-        self._slot_of[session_id] = slot
-        self._host_generation[slot] += 1
-        return slot
-
-    def evict(self, slot: int) -> None:
-        """Deactivate a slot.  Its state bytes stay in place (masked
-        no-op from now on); the next ``admit`` into it overwrites them."""
-        if self.session_at[slot] is None:
-            raise ValueError(f"slot {slot} is already free")
         if self._evict_fn is None:
 
             def _evict(states: SlotStates, s) -> SlotStates:
@@ -232,9 +263,26 @@ class SlottedPool:
             self._evict_fn = jax.jit(
                 _evict, donate_argnums=(0,) if self._donate else ()
             )
+
+    def prewarm(self) -> None:
+        """Compile the admit/evict scatters ahead of the first real
+        admission (speculative admission: the first user-visible admit
+        pays a device-side copy, not a trace+compile).  Runs one
+        admit/evict round trip on slot 0 through a sentinel binding —
+        the slot ends free; only its generation counter advances."""
+        if self.session_at[0] is not None:
+            raise RuntimeError("prewarm() must run before any admission")
+        self.admit(_PREWARM_SENTINEL, slot=0)
+        self.evict(0)
+
+    def evict(self, slot: int) -> None:
+        """Deactivate a slot.  Its state bytes stay in place (masked
+        no-op from now on); the next ``admit`` into it overwrites them."""
+        if self.session_at[slot] is None:
+            raise ValueError(f"slot {slot} is already free")
+        self._ensure_lifecycle_fns()
         self.states = self._evict_fn(self.states, jnp.int32(slot))
-        del self._slot_of[self.session_at[slot]]
-        self.session_at[slot] = None
+        self._host_unbind(slot)
 
     def evict_session(self, session_id: Hashable) -> int:
         slot = self.slot_of(session_id)
@@ -278,6 +326,80 @@ class SlottedPool:
         return jax.jit(
             masked, donate_argnums=(0,) if self._donate else ()
         )
+
+    def _build_multi_step(self, step_fns) -> Callable:
+        """One jitted program that applies ``step_fns[i]`` to the slots
+        of ``masks[i]`` — the rung scheduler's coalesced dispatch.
+
+        Each body runs over the full capacity and a per-slot masked
+        select keeps exactly its own group's result, so the program is
+        bitwise identical to dispatching the groups one at a time
+        (vmapped bodies are elementwise across slots and the masks are
+        disjoint) while paying one dispatch and one donated state pass.
+        """
+        vsteps = [jax.vmap(fn) for fn in step_fns]
+
+        def masked(states: SlotStates, chunks: SensorChunk, masks: Array):
+            sessions = states.sessions
+            out_stats = None
+            for i, vstep in enumerate(vsteps):
+                mask = masks[i] & states.active
+                new_sessions, stats = vstep(states.sessions, chunks)
+                sessions = jax.tree.map(
+                    lambda new, old, m=mask: jnp.where(
+                        _mask_like(m, new), new, old
+                    ),
+                    new_sessions,
+                    sessions,
+                )
+                stats = jax.tree.map(
+                    lambda s, m=mask: jnp.where(
+                        _mask_like(m, s), s, jnp.zeros_like(s)
+                    ),
+                    stats,
+                )
+                if out_stats is None:
+                    out_stats = stats
+                else:
+                    out_stats = jax.tree.map(
+                        lambda a, b: a | b if a.dtype == bool else a + b,
+                        out_stats,
+                        stats,
+                    )
+            return states._replace(sessions=sessions), out_stats
+
+        if self.mesh is not None:
+            spec = PartitionSpec(self.axis)
+            masked = shard_map(
+                masked,
+                mesh=self.mesh,
+                in_specs=(spec, spec, PartitionSpec(None, self.axis)),
+                out_specs=(spec, spec),
+                check_rep=False,
+            )
+        return jax.jit(
+            masked, donate_argnums=(0,) if self._donate else ()
+        )
+
+    def step_multi(
+        self,
+        chunks: SensorChunk,
+        masks: Array,
+        step_fns,
+        key: Hashable,
+    ) -> Any:
+        """Coalesced step: ``len(step_fns)`` disjoint slot groups, one
+        dispatch.  ``masks`` is ``(n_groups, capacity)`` bool, row ``i``
+        selecting the slots stepped by ``step_fns[i]``; ``key``
+        identifies the compiled combination (e.g. the tuple of rung
+        K's) in the same per-variant cache :meth:`step` uses.  Returns
+        the combined stats pytree, zeroed outside the mask union."""
+        fn = self._steps.get(key)
+        if fn is None:
+            fn = self._build_multi_step(tuple(step_fns))
+            self._steps[key] = fn
+        self.states, stats = fn(self.states, chunks, masks)
+        return stats
 
     def _get_step(
         self, key: Hashable, step_fn: Optional[Callable]
@@ -350,10 +472,32 @@ class SlottedPool:
             k: int(fn._cache_size()) for k, fn in self._steps.items()
         }
 
+    def block_until_ready(self) -> None:
+        jax.block_until_ready(self.states.sessions)
+
     # -- per-slot access -----------------------------------------------------
 
-    def slot_state(self, slot: int) -> Any:
-        """The session state held by one slot (device slice)."""
+    def slot_state(
+        self, slot: int, *, expect_generation: Optional[int] = None
+    ) -> Any:
+        """The session state held by one slot (device slice).
+
+        ``expect_generation`` is the staleness fence for callers that
+        cached a ``(slot, generation)`` handle (wire reconnects, slot
+        snapshots): if the slot has since been re-admitted or migrated
+        into, the generations differ and the read fails instead of
+        silently returning the *new occupant's* state.
+        """
+        if (
+            expect_generation is not None
+            and expect_generation != self._host_generation[slot]
+        ):
+            raise StaleSlotError(
+                f"slot {slot} is at generation "
+                f"{self._host_generation[slot]}, caller expected "
+                f"{expect_generation}: the slot was re-admitted since "
+                f"this handle was taken"
+            )
         return jax.tree.map(lambda x: x[slot], self.states.sessions)
 
     def session_state(self, session_id: Hashable) -> Any:

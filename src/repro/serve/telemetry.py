@@ -7,7 +7,11 @@ transfers):
 
 * :func:`tick_readback` — the per-tick scalar reductions the server
   needs (adaptive-K controller inputs + stream counters), reduced on
-  device to ``(capacity,)`` vectors and fetched in one transfer.
+  device to ``(capacity,)`` vectors and fetched in one transfer.  Give
+  it a *sequence* of pooled stats pytrees (one per stepped tier of a
+  :class:`~repro.serve.tiers.TieredPool`) and the per-tier reductions
+  are batched into the same single ``device_get``, rows concatenated in
+  argument order — a tiered tick still pays exactly one host sync.
 * :func:`pool_stream_counters` — the energy-model bridge
   (:func:`repro.core.pipeline.stream_counters`) over a pooled stats
   pytree: per-slot reductions batched into a single ``device_get``
@@ -38,6 +42,9 @@ class StreamTelemetry:
     slot: int
     generation: int
     admitted_tick: int
+    tier: int = 0
+    arrival_ema: float = 0.0
+    n_migrations: int = 0
     n_chunks: int = 0
     n_frames: int = 0
     n_processed: int = 0
@@ -70,26 +77,47 @@ class TickReadback:
         self.buffer_valid = buffer_valid
 
 
-def tick_readback(stats: Any) -> TickReadback:
-    """Reduce a pooled stats pytree to per-slot tick scalars.
-
-    ``stats`` leaves are ``(capacity, T, ...)`` (masked slots zeroed —
-    see ``SlottedPool.step``).  Works for EPIC ``FrameStats`` and the
-    baselines' stats alike: the sparse-TRD counters are read when
-    present, zero otherwise.  All reductions transfer in **one**
-    ``jax.device_get``.
-    """
+def _tick_reductions(stats: Any):
+    """Device-side per-slot reductions of one pooled stats pytree."""
     zeros = jnp.zeros(stats.processed.shape[:1], jnp.int32)
     overflow = getattr(stats, "n_prefilter_overflow", None)
     full = getattr(stats, "n_full_checks", None)
-    out = jax.device_get((
+    return (
         zeros if overflow is None else jnp.sum(overflow, axis=1),
         zeros if full is None else jnp.max(full, axis=1),
         jnp.sum(stats.processed.astype(jnp.int32), axis=1),
         jnp.sum(stats.n_inserted, axis=1),
         stats.buffer_valid[:, -1],
-    ))
-    return TickReadback(*(np.asarray(x) for x in out))
+    )
+
+
+def tick_readback(stats: Any) -> TickReadback:
+    """Reduce pooled stats pytree(s) to per-slot tick scalars.
+
+    ``stats`` leaves are ``(capacity, T, ...)`` (masked slots zeroed —
+    see ``SlottedPool.step``).  Works for EPIC ``FrameStats`` and the
+    baselines' stats alike: the sparse-TRD counters are read when
+    present, zero otherwise.
+
+    ``stats`` may also be a ``list``/``tuple`` of such pytrees — one
+    per stepped tier of a tiered pool.  Their reductions are batched
+    into the *same* transfer and concatenated along the slot axis in
+    argument order, so rows ``[0, cap_0)`` are the first pytree's
+    slots, ``[cap_0, cap_0 + cap_1)`` the second's, and so on.
+
+    Either way, all reductions transfer in **one** ``jax.device_get``.
+    """
+    # A stats pytree is typically a NamedTuple — only a *plain*
+    # list/tuple means "one pytree per stepped tier".
+    parts = stats if type(stats) in (list, tuple) else (stats,)
+    if not parts:
+        raise ValueError("tick_readback needs at least one stats pytree")
+    out = jax.device_get(tuple(_tick_reductions(s) for s in parts))
+    cols = tuple(
+        np.concatenate([np.asarray(part[i]) for part in out])
+        for i in range(5)
+    )
+    return TickReadback(*cols)
 
 
 def pool_stream_counters(

@@ -1,0 +1,373 @@
+"""TieredPool — size-classed sub-pools so idle slots cost nothing.
+
+A flat :class:`~repro.serve.slots.SlottedPool` pays a full-capacity
+masked vmap per rung per tick *regardless of how many slots are
+active*: a 16-slot pool serving 4 live streams runs 16 slots' worth of
+compute and keeps a quarter of it.  For the mostly-idle fleet
+populations the ROADMAP targets (millions of admitted sessions, a few
+percent streaming at any instant) that waste **is** the serving cost.
+
+``TieredPool`` splits one logical pool into size-classed sub-pools —
+by convention tier 0 is the small **hot** tier and the last tier the
+large **warm/cold** one — each an ordinary ``SlottedPool`` with its own
+compiled full-capacity programs:
+
+* a tier is stepped **only when it has ready chunks**, so a warm tier
+  full of admitted-but-idle sessions costs zero device time per tick;
+* active streams are concentrated into the hot tier by the serving
+  layer (:class:`~repro.serve.server.StreamServer` promotes on arrival
+  rate, demotes on idle-frame counters), so the steady-state tick cost
+  tracks the *active* population, not the capacity;
+* **tier migration** is a device-side gather/scatter
+  (:meth:`migrate` / :meth:`swap`): one jitted program per ordered tier
+  pair moves a slot's session state between the tiers' stacked buffers
+  and bumps the destination generation — no host round-trip of state
+  bytes, no retraces, and the generation counters fence any stale
+  ``(slot, generation)`` handle exactly as they do across re-admission;
+* **speculative admission**: ``compressor.init()`` runs once per
+  ``TieredPool`` and the resulting fresh-session image is shared by
+  every tier's admit scatter, so admission cost is independent of how
+  often sessions churn (and :meth:`prewarm` pre-compiles the
+  admit/evict/migrate programs so the first churn event pays only the
+  device copy).
+
+Slots are addressed globally: tier ``t``'s local slot ``s`` is global
+slot ``offsets[t] + s``.  Bitwise contract (pinned in
+``tests/test_tiered_serve.py``): a session stepped in any tier, however
+many times it migrates, is bit-identical to the same session stepped in
+a flat pool — migration copies state verbatim and every tier runs the
+same per-session step bodies.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.slots import _PREWARM_SENTINEL, SlotStates, SlottedPool
+
+Array = jax.Array
+
+
+def validate_tiers(tiers, capacity: int) -> Tuple[int, ...]:
+    """Fail-fast check of a tier split: positive sizes summing to the
+    pool capacity (the global-slot math and the serving facade both
+    assume the split is a partition of ``capacity``)."""
+    tiers = tuple(int(t) for t in tiers)
+    if not tiers or any(t < 1 for t in tiers):
+        raise ValueError(
+            f"tiers must be a non-empty tuple of positive slot counts, "
+            f"got {tiers!r}"
+        )
+    if sum(tiers) != capacity:
+        raise ValueError(
+            f"tiers {tiers} sum to {sum(tiers)}, expected the pool "
+            f"capacity {capacity}"
+        )
+    return tiers
+
+
+class TieredPool:
+    """Size-classed sub-pools behind one slotted-pool-shaped surface.
+
+    Args:
+      compressor: the session implementation (shared by every tier).
+      capacities: slot count per tier, hot (stepped most) first.
+      donate: as in ``SlottedPool``.
+
+    The mesh-sharded path stays on the flat ``SlottedPool`` (sharding
+    differently-sized tiers over one stream axis would force per-tier
+    meshes); a tiered pool is single-mesh-host by construction.
+    """
+
+    def __init__(
+        self,
+        compressor,
+        capacities,
+        *,
+        donate: Optional[bool] = None,
+    ):
+        capacities = tuple(int(c) for c in capacities)
+        if not capacities or any(c < 1 for c in capacities):
+            raise ValueError(
+                f"capacities must be positive per tier, got {capacities!r}"
+            )
+        self.compressor = compressor
+        # Speculative admission: one fresh-session image for the whole
+        # pool, built exactly once and scattered on every admit.
+        self._fresh = compressor.init()
+        self.tiers: List[SlottedPool] = [
+            SlottedPool(compressor, c, donate=donate, fresh=self._fresh)
+            for c in capacities
+        ]
+        self.capacities = capacities
+        self.capacity = sum(capacities)
+        offs, total = [], 0
+        for c in capacities:
+            offs.append(total)
+            total += c
+        self.offsets = tuple(offs)
+        self._migrate_fns: Dict[Tuple[int, int], Any] = {}
+        self._swap_fns: Dict[Tuple[int, int], Any] = {}
+        self._donate = self.tiers[0]._donate
+        self.n_migrations = 0
+        self.n_swaps = 0
+
+    # -- addressing ----------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return sum(t.n_active for t in self.tiers)
+
+    def tier_of(self, session_id: Hashable) -> int:
+        for ti, tier in enumerate(self.tiers):
+            if session_id in tier._slot_of:
+                return ti
+        raise KeyError(
+            f"session {session_id!r} is not admitted; live sessions: "
+            f"{sorted(map(repr, self.live_sessions()))}"
+        )
+
+    def locate(self, session_id: Hashable) -> Tuple[int, int]:
+        """``(tier, local_slot)`` of a live session."""
+        ti = self.tier_of(session_id)
+        return ti, self.tiers[ti]._slot_of[session_id]
+
+    def slot_of(self, session_id: Hashable) -> int:
+        """Global slot index (``offsets[tier] + local``)."""
+        ti, slot = self.locate(session_id)
+        return self.offsets[ti] + slot
+
+    def unpack_slot(self, global_slot: int) -> Tuple[int, int]:
+        for ti in reversed(range(len(self.tiers))):
+            if global_slot >= self.offsets[ti]:
+                return ti, global_slot - self.offsets[ti]
+        raise IndexError(f"global slot {global_slot} out of range")
+
+    def generation_of(self, global_slot: int) -> int:
+        ti, slot = self.unpack_slot(global_slot)
+        return self.tiers[ti].generation_of(slot)
+
+    def live_sessions(self) -> List[Hashable]:
+        return [s for t in self.tiers for s in t._slot_of]
+
+    def free_slots(self) -> List[int]:
+        return [
+            self.offsets[ti] + s
+            for ti, tier in enumerate(self.tiers)
+            for s in tier.free_slots()
+        ]
+
+    # -- admission / eviction ------------------------------------------------
+
+    def admit(
+        self, session_id: Hashable, *, tier: Optional[int] = None
+    ) -> int:
+        """Admit into the *coldest* tier with a free slot (new sessions
+        earn the hot tier through observed arrivals), or into an
+        explicit ``tier``.  Returns the global slot."""
+        if any(session_id in t._slot_of for t in self.tiers):
+            raise ValueError(f"session {session_id!r} already admitted")
+        if tier is None:
+            for ti in reversed(range(len(self.tiers))):
+                if self.tiers[ti].free_slots():
+                    tier = ti
+                    break
+            else:
+                raise RuntimeError(
+                    f"pool full: all {self.capacity} slots active "
+                    f"across {len(self.tiers)} tiers"
+                )
+        slot = self.tiers[tier].admit(session_id)
+        return self.offsets[tier] + slot
+
+    def evict_session(self, session_id: Hashable) -> int:
+        ti, slot = self.locate(session_id)
+        self.tiers[ti].evict(slot)
+        return self.offsets[ti] + slot
+
+    def prewarm(self) -> None:
+        """Compile every lifecycle program (admit/evict per tier, the
+        migrate scatter per adjacent tier pair in both directions, the
+        swap per adjacent pair) before the first real admission: churn
+        and tier rebalancing then never pay a trace+compile.  Runs
+        sentinel sessions through each slot 0 and releases them; only
+        the generation counters advance."""
+        if self.n_active:
+            raise RuntimeError("prewarm() must run before any admission")
+        names = [f"{_PREWARM_SENTINEL}{i}" for i in range(len(self.tiers))]
+        for ti, tier in enumerate(self.tiers):
+            tier.admit(names[ti], slot=0)
+        for ti in range(1, len(self.tiers)):
+            self.swap(names[ti - 1], names[ti])  # compiles pair swap
+            self.swap(names[ti - 1], names[ti])  # cached; restores slots
+        for tier in self.tiers:
+            tier.evict(0)
+        sid = _PREWARM_SENTINEL
+        self.tiers[0].admit(sid, slot=0)
+        for ti in range(1, len(self.tiers)):
+            self.migrate(sid, ti)  # compiles (ti-1 -> ti)
+            self.migrate(sid, ti - 1)  # compiles (ti -> ti-1)
+            self.migrate(sid, ti)  # cached; advance for the next pair
+        ti, slot = self.locate(sid)
+        self.tiers[ti].evict(slot)
+        # Sentinel traffic is warmup, not telemetry.
+        self.n_migrations = 0
+        self.n_swaps = 0
+
+    # -- tier migration (device-side gather/scatter) -------------------------
+
+    def _migrate_fn(self, src: int, dst: int):
+        fn = self._migrate_fns.get((src, dst))
+        if fn is None:
+
+            def _migrate(a: SlotStates, b: SlotStates, i, j):
+                one = jax.tree.map(
+                    lambda x: jax.lax.dynamic_index_in_dim(
+                        x, i, 0, keepdims=False
+                    ),
+                    a.sessions,
+                )
+                b_sessions = jax.tree.map(
+                    lambda buf, v: jax.lax.dynamic_update_index_in_dim(
+                        buf, v, j, 0
+                    ),
+                    b.sessions,
+                    one,
+                )
+                return (
+                    a._replace(active=a.active.at[i].set(False)),
+                    SlotStates(
+                        sessions=b_sessions,
+                        active=b.active.at[j].set(True),
+                        generation=b.generation.at[j].add(1),
+                    ),
+                )
+
+            fn = jax.jit(
+                _migrate,
+                donate_argnums=(0, 1) if self._donate else (),
+            )
+            self._migrate_fns[(src, dst)] = fn
+        return fn
+
+    def migrate(self, session_id: Hashable, to_tier: int) -> int:
+        """Move a live session's slot state to another tier — one
+        device-side gather/scatter, no host copy of the state bytes.
+        The destination slot's generation bumps (staleness fence); the
+        source slot frees.  Returns the new global slot."""
+        src, i = self.locate(session_id)
+        if to_tier == src:
+            raise ValueError(
+                f"session {session_id!r} is already in tier {src}"
+            )
+        free = self.tiers[to_tier].free_slots()
+        if not free:
+            raise RuntimeError(
+                f"tier {to_tier} full "
+                f"({self.capacities[to_tier]} slots); demote or swap"
+            )
+        j = free[0]
+        a, b = self.tiers[src], self.tiers[to_tier]
+        a.states, b.states = self._migrate_fn(src, to_tier)(
+            a.states, b.states, jnp.int32(i), jnp.int32(j)
+        )
+        a._host_unbind(i)
+        b._host_bind(j, session_id)
+        self.n_migrations += 1
+        return self.offsets[to_tier] + j
+
+    def _swap_fn(self, ta: int, tb: int):
+        fn = self._swap_fns.get((ta, tb))
+        if fn is None:
+
+            def _swap(a: SlotStates, b: SlotStates, i, j):
+                take = lambda s, k: jax.tree.map(  # noqa: E731
+                    lambda x: jax.lax.dynamic_index_in_dim(
+                        x, k, 0, keepdims=False
+                    ),
+                    s,
+                )
+                put = lambda s, v, k: jax.tree.map(  # noqa: E731
+                    lambda buf, one: jax.lax.dynamic_update_index_in_dim(
+                        buf, one, k, 0
+                    ),
+                    s,
+                    v,
+                )
+                va, vb = take(a.sessions, i), take(b.sessions, j)
+                return (
+                    SlotStates(
+                        sessions=put(a.sessions, vb, i),
+                        active=a.active,
+                        generation=a.generation.at[i].add(1),
+                    ),
+                    SlotStates(
+                        sessions=put(b.sessions, va, j),
+                        active=b.active,
+                        generation=b.generation.at[j].add(1),
+                    ),
+                )
+
+            fn = jax.jit(
+                _swap, donate_argnums=(0, 1) if self._donate else ()
+            )
+            self._swap_fns[(ta, tb)] = fn
+        return fn
+
+    def swap(self, session_a: Hashable, session_b: Hashable) -> None:
+        """Exchange two live sessions' slots across tiers in one
+        device-side gather/scatter — the full-pool promotion path (a
+        hot idler and a warm riser trade places; no free slot needed).
+        Both generations bump."""
+        ta, i = self.locate(session_a)
+        tb, j = self.locate(session_b)
+        if ta == tb:
+            raise ValueError(
+                f"sessions {session_a!r} and {session_b!r} are both in "
+                f"tier {ta}; swap is for cross-tier rebalancing"
+            )
+        if ta > tb:
+            # Normalize the compiled key to (hotter, colder): promotion
+            # and prewarm then share one program per pair regardless of
+            # argument order.
+            session_a, session_b = session_b, session_a
+            ta, i, tb, j = tb, j, ta, i
+        a, b = self.tiers[ta], self.tiers[tb]
+        a.states, b.states = self._swap_fn(ta, tb)(
+            a.states, b.states, jnp.int32(i), jnp.int32(j)
+        )
+        a._host_unbind(i)
+        b._host_unbind(j)
+        a._host_bind(i, session_b)
+        b._host_bind(j, session_a)
+        self.n_swaps += 1
+
+    # -- stepping / access ---------------------------------------------------
+
+    def step_cache_sizes(self) -> Dict[Hashable, int]:
+        """Compiled-trace counts across every tier's step variants,
+        keyed ``(tier, variant_key)`` — the retrace telemetry."""
+        return {
+            (ti, k): n
+            for ti, tier in enumerate(self.tiers)
+            for k, n in tier.step_cache_sizes().items()
+        }
+
+    def session_state(self, session_id: Hashable) -> Any:
+        ti, slot = self.locate(session_id)
+        return self.tiers[ti].slot_state(slot)
+
+    def export(self, session_id: Hashable):
+        return self.compressor.export(self.session_state(session_id))
+
+    def tokens(self, session_id: Hashable, seq_len: int):
+        return self.compressor.tokens(
+            self.session_state(session_id), seq_len
+        )
+
+    def block_until_ready(self) -> None:
+        for tier in self.tiers:
+            jax.block_until_ready(tier.states.sessions)

@@ -81,6 +81,7 @@ NACK_POOL_FULL = 2
 NACK_UNKNOWN_STREAM = 3
 NACK_BAD_FRAME = 4
 NACK_DUP_STREAM = 5
+NACK_OUT_OF_ORDER = 6
 STATUS_NAMES = {
     ACK: "ack",
     NACK_BACKPRESSURE: "backpressure",
@@ -88,6 +89,7 @@ STATUS_NAMES = {
     NACK_UNKNOWN_STREAM: "unknown_stream",
     NACK_BAD_FRAME: "bad_frame",
     NACK_DUP_STREAM: "dup_stream",
+    NACK_OUT_OF_ORDER: "out_of_order",
 }
 
 # Wire dtype codes.  Fixed small vocabulary: the codec fails fast on a

@@ -11,7 +11,11 @@ Transport layering (relay → queue → pipeline):
   :class:`~repro.serve.ingest.ChunkQueue`, and answer **every** message
   with an ACK or a reasoned NACK — a full queue surfaces the queue's
   refuse-newest backpressure to the producer as ``NACK_BACKPRESSURE``
-  instead of silently growing host memory;
+  instead of silently growing host memory, and a duplicate or
+  regressed per-stream ``seq`` is refused as ``NACK_OUT_OF_ORDER``
+  (seqs must advance monotonically; gaps are fine — a backpressure
+  retry of the same seq still ACKs because ``_seq_seen`` only records
+  successfully submitted frames);
 * :class:`Loopback` is the in-process transport (the trace replayer and
   the load generator drive it; zero sockets, same code path);
 * :meth:`IngestServer.serve_tcp` / :meth:`serve_unix` are thin asyncio
@@ -93,6 +97,13 @@ class IngestServer:
         sid = frame.stream_id
         if sid not in self._seq_seen:
             return self._nack(codec.NACK_UNKNOWN_STREAM, sid, frame.seq)
+        last = self._seq_seen[sid]
+        if last >= 0 and frame.seq <= last:
+            # A duplicate or regressed seq is a producer bug (or a
+            # replayed packet): refuse it instead of double-serving the
+            # frames.  `_seq_seen` only advances on successful submit,
+            # so a backpressure retry of the *same* seq still ACKs.
+            return self._nack(codec.NACK_OUT_OF_ORDER, sid, frame.seq)
         try:
             ok = self.srv.submit(sid, frame.chunk)
         except (ValueError, KeyError):
@@ -152,6 +163,7 @@ class IngestServer:
             "n_frames_in": self.n_frames_in,
             "n_opened": self.n_opened,
             "n_closed": self.n_closed,
+            "n_out_of_order": self.nacks.get("out_of_order", 0),
             "nacks": dict(self.nacks),
         }
 

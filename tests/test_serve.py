@@ -182,6 +182,53 @@ class TestSlottedPool:
         with pytest.raises(ValueError, match="leading slot axis"):
             pool.step(chunk)
 
+    def test_readmission_generation_fences_stale_handles(self):
+        """A stale session id (or a cached ``(slot, generation)``
+        handle) must never read the slot's *new* occupant."""
+        from repro.serve import StaleSlotError
+
+        pool = SlottedPool(api.EPICCompressor(_ecfg(capacity=8)), 2)
+        pool.admit("old", slot=0)
+        handle = (0, pool.generation_of(0))
+        pool.evict(0)
+        pool.admit("new", slot=0)
+        # the stale session id is simply gone
+        with pytest.raises(KeyError, match="not admitted"):
+            pool.session_state("old")
+        # the stale (slot, generation) handle is fenced...
+        with pytest.raises(StaleSlotError, match="re-admitted"):
+            pool.slot_state(handle[0], expect_generation=handle[1])
+        # ...and StaleSlotError is a KeyError (one except clause for
+        # "session gone" at the wire layer)
+        assert issubclass(StaleSlotError, KeyError)
+        # a current handle still reads fine
+        pool.slot_state(0, expect_generation=pool.generation_of(0))
+
+    def test_speculative_admission_inits_once(self):
+        """``compressor.init()`` runs once per pool — every admit is a
+        device-side copy of the cached fresh image."""
+        comp = api.EPICCompressor(_ecfg(capacity=8))
+        calls = []
+        real_init = comp.init
+
+        class Counting:
+            def __getattr__(self, name):
+                return getattr(comp, name)
+
+            def init(self):
+                calls.append(1)
+                return real_init()
+
+        pool = SlottedPool(Counting(), 3)
+        pool.prewarm()
+        for churn in range(3):
+            pool.admit(f"s{churn}")
+            pool.evict_session(f"s{churn}")
+        assert len(calls) == 1
+        # prewarm leaves every slot free, only generations advanced
+        assert pool.free_slots() == [0, 1, 2]
+        assert int(pool._admit_fn._cache_size()) == 1
+
     def test_no_retrace_across_churn(self):
         """admit/evict/step each compile exactly once, regardless of
         which slots churn."""
@@ -340,6 +387,27 @@ class TestStreamServer:
         assert set(lru.live_sessions) == {"b", "c"}
         assert lru.n_evicted == 1
         assert lru.evicted[0].session_id == "a"
+
+    def test_lru_eviction_tie_breaks_on_slot(self):
+        """Streams that are LRU-equal (same last-stepped tick —
+        including never-stepped) evict deterministically: lowest slot
+        first."""
+        lru = self._server(capacity=3, eviction="lru")
+        for sid in ("a", "b", "c"):
+            lru.admit(sid)
+        # never stepped: all tie at last_step_tick == -1 -> slot order
+        lru.admit("d")
+        assert lru.evicted[0].session_id == "a"
+        # step the two original survivors in one tick: they tie again
+        c0 = next(_chunks(_stream(0)))
+        lru.submit("b", c0), lru.submit("c", c0)
+        lru.tick()
+        lru.admit("e")  # "d" never stepped -> strict LRU, no tie
+        assert lru.evicted[1].session_id == "d"
+        lru.submit("e", c0)
+        lru.tick()  # "e" now fresher than the tied "b"/"c"
+        lru.admit("f")  # "b" (slot 1) vs "c" (slot 2): tie -> "b"
+        assert lru.evicted[2].session_id == "b"
 
     def test_submit_validates_quantum_and_backpressure(self):
         srv = self._server(capacity=1, queue_depth=1)

@@ -1,0 +1,482 @@
+"""Tiered-serving tests (`repro.serve.tiers` + the tiered
+`StreamServer` mode): sub-pool bookkeeping, device-side migration and
+swap bit-identity, speculative admission, the cost-model rung
+scheduler's deterministic planning/coalescing, coalesced ``step_multi``
+bit-identity, the single-sync multi-tier readback, and the acceptance
+soak — a tiered pool-16 server under churn + migration stays bitwise
+identical to the flat pool with zero post-warmup retraces."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+from repro.serve import (
+    DispatchPlan,
+    RungScheduler,
+    ServerConfig,
+    SlottedPool,
+    StreamServer,
+    TieredPool,
+    validate_tiers,
+)
+from repro.serve import telemetry as TEL
+
+FRAME = 64
+PATCH = 16
+CHUNK = 8
+
+
+def _ecfg(**kw):
+    base = dict(
+        frame_hw=(FRAME, FRAME), patch=PATCH, capacity=32,
+        tau=0.10, gamma=0.015, theta=8, window=16,
+    )
+    base.update(kw)
+    return P.EPICConfig(**base)
+
+
+def _stream(seed, n_frames=16, n_obj=4):
+    scfg = SYN.StreamConfig(n_frames=n_frames, hw=(FRAME, FRAME), n_obj=n_obj)
+    return SYN.generate_stream(jax.random.PRNGKey(seed), scfg)[0]
+
+
+def _chunks(s, n=CHUNK):
+    for lo in range(0, s.frames.shape[0], n):
+        yield api.SensorChunk(
+            s.frames[lo:lo + n], s.poses[lo:lo + n],
+            s.gazes[lo:lo + n], s.depth[lo:lo + n],
+        )
+
+
+def _assert_tree_bitwise(a, b, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for i, (x, y) in enumerate(zip(la, lb)):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=f"{msg} leaf {i}"
+        )
+
+
+def _batch(rows):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+
+
+# ---------------------------------------------------------------------------
+# TieredPool: bookkeeping, migration, swap, speculative admission
+# ---------------------------------------------------------------------------
+
+
+class TestTieredPool:
+    def test_validation_and_addressing(self):
+        with pytest.raises(ValueError, match="sum to"):
+            validate_tiers((2, 4), 8)
+        with pytest.raises(ValueError, match="positive"):
+            validate_tiers((0, 8), 8)
+        with pytest.raises(ValueError, match="positive"):
+            validate_tiers((), 0)
+        pool = TieredPool(api.EPICCompressor(_ecfg(capacity=8)), (2, 4))
+        assert pool.capacity == 6 and pool.offsets == (0, 2)
+        # admission defaults to the coldest tier with room
+        assert pool.admit("a") == 2  # tier 1, local 0 -> global 2
+        assert pool.admit("b", tier=0) == 0
+        assert pool.locate("a") == (1, 0) and pool.locate("b") == (0, 0)
+        assert pool.unpack_slot(5) == (1, 3)
+        assert sorted(pool.live_sessions()) == ["a", "b"]
+        assert pool.free_slots() == [1, 3, 4, 5]
+        with pytest.raises(ValueError, match="already admitted"):
+            pool.admit("a")
+        for i in range(4):
+            pool.admit(f"fill{i}")
+        with pytest.raises(RuntimeError, match="pool full"):
+            pool.admit("overflow")
+
+    def test_migration_and_swap_preserve_state_bitwise(self):
+        cfg = _ecfg(capacity=16)
+        pool = TieredPool(api.EPICCompressor(cfg), (1, 2))
+        pool.admit("x", tier=0)
+        pool.admit("y", tier=1)
+        zero = jax.tree.map(jnp.zeros_like, next(_chunks(_stream(0))))
+        for ti, sid, seed in ((0, "x", 1), (1, "y", 2)):
+            chunk = next(_chunks(_stream(seed)))
+            rows = [zero] * pool.capacities[ti]
+            rows[pool.locate(sid)[1]] = chunk
+            pool.tiers[ti].step(_batch(rows))
+        x_ref = jax.tree.map(np.asarray, pool.session_state("x"))
+        y_ref = jax.tree.map(np.asarray, pool.session_state("y"))
+        # migrate x down: state verbatim, source slot freed, dest
+        # generation bumped
+        gen_before = pool.generation_of(2)
+        assert pool.migrate("x", 1) == 2
+        assert pool.locate("x") == (1, 1)
+        assert pool.generation_of(2) == gen_before + 1
+        assert pool.tiers[0].free_slots() == [0]
+        _assert_tree_bitwise(pool.session_state("x"), x_ref, "migrated x")
+        with pytest.raises(ValueError, match="already in tier"):
+            pool.migrate("x", 1)
+        # swap x back up past y: both states move verbatim
+        pool.admit("z", tier=0)
+        pool.swap("z", "y")  # hot z <-> warm y
+        _assert_tree_bitwise(pool.session_state("y"), y_ref, "swapped y")
+        assert pool.locate("y") == (0, 0)
+        with pytest.raises(ValueError, match="both in"):
+            pool.swap("x", "z")
+        assert pool.n_migrations == 1 and pool.n_swaps == 1
+
+    def test_migrate_into_full_tier_refused(self):
+        pool = TieredPool(api.EPICCompressor(_ecfg(capacity=8)), (1, 1))
+        pool.admit("a", tier=0)
+        pool.admit("b", tier=1)
+        with pytest.raises(RuntimeError, match="full"):
+            pool.migrate("b", 0)
+
+    def test_speculative_admission_shares_one_fresh_image(self):
+        """``compressor.init()`` runs exactly once per TieredPool —
+        shared across every tier's admit scatter."""
+        comp = api.EPICCompressor(_ecfg(capacity=8))
+        calls = []
+        real_init = comp.init
+
+        class Counting:
+            def __getattr__(self, name):
+                return getattr(comp, name)
+
+            def init(self):
+                calls.append(1)
+                return real_init()
+
+        pool = TieredPool(Counting(), (2, 4))
+        pool.prewarm()
+        for i in range(6):
+            pool.admit(f"s{i}")
+        for i in range(6):
+            pool.evict_session(f"s{i}")
+        assert len(calls) == 1
+        assert all(t._fresh is pool._fresh for t in pool.tiers)
+
+    def test_prewarm_compiles_lifecycle_then_churn_never_compiles(self):
+        pool = TieredPool(api.EPICCompressor(_ecfg(capacity=8)), (1, 2))
+        pool.prewarm()
+        assert pool.n_migrations == 0 and pool.n_swaps == 0
+        assert pool.free_slots() == [0, 1, 2]
+        sizes = {
+            "admit": [int(t._admit_fn._cache_size()) for t in pool.tiers],
+            "evict": [int(t._evict_fn._cache_size()) for t in pool.tiers],
+            "migrate": {
+                k: int(f._cache_size())
+                for k, f in pool._migrate_fns.items()
+            },
+            "swap": {
+                k: int(f._cache_size()) for k, f in pool._swap_fns.items()
+            },
+        }
+        assert sizes["migrate"] == {(0, 1): 1, (1, 0): 1}
+        assert sizes["swap"] == {(0, 1): 1}
+        # real churn + migration after prewarm: cache sizes frozen
+        pool.admit("a", tier=0)
+        pool.admit("b")
+        pool.migrate("a", 1)
+        pool.migrate("a", 0)
+        pool.swap("a", "b")
+        pool.evict_session("a"), pool.evict_session("b")
+        assert sizes == {
+            "admit": [int(t._admit_fn._cache_size()) for t in pool.tiers],
+            "evict": [int(t._evict_fn._cache_size()) for t in pool.tiers],
+            "migrate": {
+                k: int(f._cache_size())
+                for k, f in pool._migrate_fns.items()
+            },
+            "swap": {
+                k: int(f._cache_size()) for k, f in pool._swap_fns.items()
+            },
+        }
+
+
+# ---------------------------------------------------------------------------
+# RungScheduler: deterministic planning + cost model
+# ---------------------------------------------------------------------------
+
+
+class TestRungScheduler:
+    def test_plan_orders_most_expensive_first(self):
+        sched = RungScheduler()
+        plans = sched.plan({(0, 4): ["a"], (0, 16): ["b"], (1, 8): ["c"]})
+        # un-measured: the K-proportional prior orders 16 > 8 > 4
+        assert [p.key for p in plans] == [16, 8, 4]
+        assert plans[0] == DispatchPlan(0, (16,), (("b",),))
+        # a measured cost overrides the prior
+        sched.observe_tick([4], 5.0)
+        plans = sched.plan({(0, 4): ["a"], (0, 16): ["b"]})
+        assert [p.key for p in plans] == [4, 16]
+
+    def test_observe_only_attributes_single_dispatch_ticks(self):
+        sched = RungScheduler(ema_alpha=0.5)
+        sched.observe_tick([4, 8], 9.0)  # ambiguous: ignored
+        assert sched.cost_estimates() == {}
+        sched.observe_tick([4], 2.0)
+        sched.observe_tick([4], 4.0)
+        assert sched.cost_estimates() == {4: 3.0}
+        # tuple keys estimate as the sum of their parts
+        assert sched.estimate((4, 8)) == pytest.approx(3.0 + 8e-6)
+
+    def test_coalescing_is_deterministic_and_backlog_gated(self):
+        sched = RungScheduler(coalesce=True, coalesce_backlog=0)
+        groups = {(0, 8): ["b"], (0, 4): ["a"], (0, 16): ["c"]}
+        plans = sched.plan(dict(groups), backlog=0)
+        # ascending adjacent pairing: (4, 8) merged, 16 alone — never
+        # cost-dependent, so the compiled-key set is traffic-only
+        assert sorted(p.rungs for p in plans) == [(4, 8), (16,)]
+        assert sched.n_coalesced == 1
+        merged = next(p for p in plans if p.rungs == (4, 8))
+        assert merged.sids == (("a",), ("b",)) and merged.key == (4, 8)
+        # backlog above the gate: no coalescing (compute-bound tick)
+        plans = sched.plan(dict(groups), backlog=3)
+        assert sorted(p.rungs for p in plans) == [(4,), (8,), (16,)]
+        # identical traffic -> identical plan keys, regardless of
+        # measured costs in between
+        sched.observe_tick([16], 0.5)
+        again = sched.plan(dict(groups), backlog=0)
+        assert sorted(p.rungs for p in again) == [(4, 8), (16,)]
+
+    def test_coalescing_keeps_tiers_separate(self):
+        sched = RungScheduler(coalesce=True)
+        plans = sched.plan({(0, 4): ["a"], (1, 8): ["b"]}, backlog=0)
+        assert sorted((p.tier, p.rungs) for p in plans) == [
+            (0, (4,)), (1, (8,)),
+        ]
+        assert sched.n_coalesced == 0
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="ema_alpha"):
+            RungScheduler(ema_alpha=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Coalesced step_multi: bitwise vs sequential per-rung dispatches
+# ---------------------------------------------------------------------------
+
+
+class TestStepMulti:
+    def test_step_multi_bitwise_equals_sequential_dispatches(self):
+        cfg = _ecfg(capacity=16, prefilter_k=4)
+        comps = {
+            k: api.EPICCompressor(cfg._replace(prefilter_k=k))
+            for k in (4, 16)
+        }
+        streams = [_stream(20 + i) for i in range(4)]
+        pools = [
+            SlottedPool(api.EPICCompressor(cfg), 4) for _ in range(2)
+        ]
+        for pool in pools:
+            for i in range(4):
+                pool.admit(i)
+        masks = jnp.stack([
+            jnp.array([True, True, False, False]),
+            jnp.array([False, False, True, True]),
+        ])
+        for step_i in range(2):
+            batch = _batch(
+                [list(_chunks(s))[step_i] for s in streams]
+            )
+            # sequential: one masked dispatch per rung
+            s_a = pools[0].step(
+                batch, mask=masks[0], step_fn=comps[4].step, key=4
+            )
+            s_b = pools[0].step(
+                batch, mask=masks[1], step_fn=comps[16].step, key=16
+            )
+            seq_stats = jax.tree.map(
+                lambda a, b: a | b if a.dtype == bool else a + b, s_a, s_b
+            )
+            # coalesced: both rungs in one dispatch
+            multi_stats = pools[1].step_multi(
+                batch, masks, [comps[4].step, comps[16].step], key=(4, 16)
+            )
+            _assert_tree_bitwise(multi_stats, seq_stats, "stats")
+        _assert_tree_bitwise(
+            pools[1].states.sessions, pools[0].states.sessions, "states"
+        )
+        assert pools[1].step_cache_sizes() == {(4, 16): 1}
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: multi-tier readback in one device_get
+# ---------------------------------------------------------------------------
+
+
+class TestMultiTierReadback:
+    def test_multi_tier_tick_readback_single_device_get(self, monkeypatch):
+        cfg = _ecfg(capacity=16)
+        comp = api.EPICCompressor(cfg)
+        parts = []
+        for cap, seeds in ((2, (30, 31)), (3, (32,))):
+            pool = SlottedPool(comp, cap)
+            zero = jax.tree.map(
+                jnp.zeros_like, next(_chunks(_stream(0)))
+            )
+            rows = [zero] * cap
+            for i, seed in enumerate(seeds):
+                pool.admit(f"t{cap}s{i}")
+                rows[i] = next(_chunks(_stream(seed)))
+            parts.append(pool.step(_batch(rows)))
+
+        calls = []
+        real_get = jax.device_get
+
+        def counting_get(x):
+            calls.append(1)
+            return real_get(x)
+
+        monkeypatch.setattr(TEL.jax, "device_get", counting_get)
+        rb = TEL.tick_readback(parts)
+        assert len(calls) == 1
+        # rows concatenate in argument order: 2 + 3 slots
+        assert rb.processed.shape == (5,)
+        solo = [TEL.tick_readback(p) for p in parts]
+        np.testing.assert_array_equal(
+            rb.processed,
+            np.concatenate([s.processed for s in solo]),
+        )
+        np.testing.assert_array_equal(
+            rb.buffer_valid,
+            np.concatenate([s.buffer_valid for s in solo]),
+        )
+        with pytest.raises(ValueError, match="at least one"):
+            TEL.tick_readback([])
+
+
+# ---------------------------------------------------------------------------
+# Tiered StreamServer: facade behaviour + rebalancing
+# ---------------------------------------------------------------------------
+
+
+class TestTieredServer:
+    def _servers(self, ladder=(4, 8, 16), **tiered_kw):
+        cfg = _ecfg(capacity=48, prefilter_k=4)
+        base = dict(capacity=8, chunk_frames=CHUNK, k_ladder=ladder)
+        flat = StreamServer(api.EPICCompressor(cfg), ServerConfig(**base))
+        tiered_kw = dict(
+            dict(tiers=(2, 6), demote_idle_frames=2 * CHUNK, prewarm=True),
+            **tiered_kw,
+        )
+        tiered = StreamServer(
+            api.EPICCompressor(cfg), ServerConfig(**base, **tiered_kw)
+        )
+        return cfg, flat, tiered
+
+    def test_validation(self):
+        cfg = _ecfg(capacity=16)
+        with pytest.raises(ValueError, match="sum to"):
+            StreamServer(
+                api.EPICCompressor(cfg),
+                ServerConfig(capacity=8, tiers=(2, 2)),
+            )
+        with pytest.raises(ValueError, match="arrival_alpha"):
+            StreamServer(
+                api.EPICCompressor(cfg),
+                ServerConfig(capacity=8, tiers=(2, 6), arrival_alpha=0.0),
+            )
+
+    def test_idle_demotes_active_promotes(self):
+        _, _, srv = self._servers(ladder=None)
+        for i in range(4):
+            srv.admit(f"s{i}")
+        # new streams land in the cold tier
+        assert all(srv.telemetry(f"s{i}").tier == 1 for i in range(4))
+        feeds = {
+            f"s{i}": list(_chunks(_stream(40 + i, n_frames=64)))
+            for i in range(2)
+        }
+        for t in range(8):
+            for sid, chunks in feeds.items():
+                srv.submit(sid, chunks[t])
+            srv.tick()
+        # the two active streams earned the (size-2) hot tier; the
+        # idlers stayed cold
+        assert {srv.telemetry(f"s{i}").tier for i in range(2)} == {0}
+        assert {srv.telemetry(f"s{i}").tier for i in range(2, 4)} == {1}
+        assert srv.telemetry("s0").n_migrations >= 1
+        # starve the hot pair -> they demote back to cold
+        for _ in range(4):
+            srv.tick()
+        assert {srv.telemetry(f"s{i}").tier for i in range(2)} == {1}
+        assert srv.server_counters()["n_migrations"] >= 4
+
+    def test_tiered_counters_and_cache_keys(self):
+        _, _, srv = self._servers(ladder=None)
+        srv.admit("a")
+        for c in _chunks(_stream(5)):
+            srv.submit("a", c)
+            srv.tick()
+        c = srv.server_counters()
+        assert c["frames_served"] == 16 and c["n_dispatches"] == 2
+        # chunk 1 stepped in the cold tier; the arrival EMA then earned
+        # promotion, so chunk 2 stepped hot — keys are (tier, variant),
+        # one compile each
+        assert srv.step_cache_sizes() == {(1, None): 1, (0, None): 1}
+        assert srv.telemetry("a").tier == 0
+
+    def test_soak_tiered_bitwise_flat_with_churn_and_migration(self):
+        """Acceptance: a tiered pool under churn + migration serves
+        every stream bitwise identically (state and k_trajectory) to
+        the flat pool, with zero post-warmup retraces."""
+        cfg, flat, tiered = self._servers(coalesce_rungs=True)
+        feeds = {
+            f"s{i}": list(_chunks(_stream(
+                60 + i, n_frames=48, n_obj=1 + (i % 3) * 2
+            )))
+            for i in range(5)
+        }
+        n = 6  # chunks per stream
+
+        def run(srv):
+            for sid in feeds:
+                srv.admit(sid)
+            # phase 1: s0/s1 stream steadily (earn the hot tier),
+            # s2 idles mid-run (demotes), s3 streams, s4 idle
+            for t in range(4):
+                for i in (0, 1, 3):
+                    srv.submit(f"s{i}", feeds[f"s{i}"][t])
+                if t < 2:
+                    srv.submit("s2", feeds["s2"][t])
+                srv.tick()
+            # churn: close s4, admit a late joiner on s0's feed tail
+            srv.close("s4")
+            srv.admit("late")
+            for t in range(4, n):
+                for i in (0, 1, 2, 3):
+                    srv.submit(f"s{i}", feeds[f"s{i}"][t - (2 if i == 2 else 0)])
+                srv.submit("late", feeds["s0"][t])
+                srv.tick()
+            # ragged tail: idle ticks (tiered side demotes everyone)
+            for _ in range(5):
+                srv.tick()
+
+        run(flat)
+        run(tiered)
+        warm_sizes = dict(tiered.step_cache_sizes())
+        # tier migration genuinely happened
+        assert tiered.server_counters()["n_migrations"] >= 2
+        # more traffic after warmup: replay the tail chunks via fresh
+        # sessions to confirm the cache set is closed under more churn
+        for srv in (flat, tiered):
+            srv.admit("tail")
+            for c in feeds["s1"][:2]:
+                srv.submit("tail", c)
+                srv.tick()
+        for sid in tiered.live_sessions:
+            _assert_tree_bitwise(
+                tiered.state(sid), flat.state(sid), sid
+            )
+            assert (
+                tiered.telemetry(sid).k_trajectory
+                == flat.telemetry(sid).k_trajectory
+            ), sid
+        end_sizes = tiered.step_cache_sizes()
+        for k, size in end_sizes.items():
+            assert size == 1, (k, end_sizes)
+        for k, size in warm_sizes.items():
+            assert end_sizes[k] == size

@@ -408,6 +408,50 @@ class TestLoopbackIngest:
         assert ingest.nacks == {"pool_full": 1, "backpressure": 1}
         assert srv.n_backpressure == 1
 
+    def test_out_of_order_and_duplicate_seq_nacked(self):
+        srv, ingest, loop = self._wire_server()
+        assert loop.send(codec.encode_control(codec.OP_OPEN, 1)).ok
+        chunk = _sensor_chunks(0)[0]
+
+        def send(seq):
+            return loop.send(codec.encode_chunk(
+                chunk, stream_id=1, seq=seq, timestamp_ns=0
+            ))
+
+        assert send(0).ok
+        # a duplicate of an accepted seq is refused, not double-served
+        r = send(0)
+        assert r.status_name == "out_of_order" and r.seq == 0
+        srv.tick()
+        # a regressed seq after progress is refused too
+        assert send(5).ok
+        srv.tick()
+        assert send(3).status_name == "out_of_order"
+        # gaps forward are fine (producers may drop frames)
+        assert send(9).ok
+        c = ingest.counters()
+        assert c["n_out_of_order"] == 2
+        assert c["nacks"]["out_of_order"] == 2
+        assert c["n_frames_in"] == 3
+        assert srv.frames_served == 2 * CHUNK  # dup/regressed never served
+
+    def test_backpressure_retry_of_same_seq_still_acks(self):
+        """`_seq_seen` only advances on successful submit: a producer
+        retrying the seq that was NACKed with backpressure must ACK
+        once the queue drains (the loadgen relies on this)."""
+        srv, ingest, loop = self._wire_server(capacity=1)
+        assert loop.send(codec.encode_control(codec.OP_OPEN, 1)).ok
+        chunk = _sensor_chunks(0)[0]
+        for seq in range(2):
+            assert loop.send(codec.encode_chunk(
+                chunk, stream_id=1, seq=seq, timestamp_ns=0
+            )).ok
+        retry = codec.encode_chunk(chunk, stream_id=1, seq=2, timestamp_ns=0)
+        assert loop.send(retry).status_name == "backpressure"
+        srv.tick()  # drains one queued chunk
+        assert loop.send(retry).ok
+        assert ingest.counters()["n_out_of_order"] == 0
+
     def test_loopback_parity_fixed_k(self):
         chunks = {sid: _sensor_chunks(sid, n_frames=16) for sid in (1, 2)}
         srv, ingest, loop = self._wire_server(capacity=2)
