@@ -1,0 +1,244 @@
+"""Fault tolerance: live-slot checkpoint save/restore + wire replay, timed.
+
+The serving runtime claims crash recovery is cheap enough to run at a
+real checkpoint cadence: ``snapshot_server`` is the only piece that sits
+on the tick path (the shard write happens on an
+:class:`~repro.checkpoint.store.AsyncSaver` thread), and a restart is a
+``restore_server`` plus each client's RESUME handshake replaying the
+frames the checkpoint missed.  This bench puts numbers on all three —
+against a loaded pool with the same sparse-TRD per-stream cost basis as
+the ``serve`` and ``wire`` rows:
+
+  snapshot_ms   host-side point-in-time capture under the ingest lock
+                (the per-tick cost of an async checkpoint cadence)
+  save_ms       synchronous snapshot + sharded write + atomic publish
+  restore_ms    manifest -> fresh StreamServer + IngestServer, sessions
+                re-bound generation-fenced, device_put blocked to ready
+  replay        RESUME handshake + client-window replay of the chunks
+                sent after the checkpoint (per-chunk cost of catch-up)
+
+The restored server must serve the replayed chunks with every
+``step_cache_sizes()`` entry == 1 — a restore that retraces would stall
+every live stream behind recompilation, so ``post_restore_retraces``
+is asserted 0 and recorded in the row.
+
+``benchmarks/run.py --only fault`` merges the summary as the ``restore``
+row of the repo-root ``BENCH_core.json`` (schema v7; ``core_bench``
+preserves the row when it rewrites the file) and writes full detail to
+``benchmarks/results/fault_bench.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Dict
+
+import jax
+
+from repro import api
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+from repro.serve import ServerConfig, StreamServer
+from repro.serve.checkpoint import restore_server, save_server, snapshot_server
+from repro.wire.server import IngestServer, Loopback, ResumableSession
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FRAME = 64
+PATCH = 16
+CHUNK_FRAMES = 8
+# Same knobs as the epic[sparse] core row / serve / ingest benches.
+CAPACITY = 192
+SPARSE_K = 24
+SPARSE_PATCH_K = 16
+POOL = 8
+N_STREAMS = 8
+WARM_CHUNKS = 2   # per stream, checkpointed
+POST_CHUNKS = 3   # per stream, sent after the save -> replayed on restore
+N_SHARDS = 2
+
+
+def _cfg() -> P.EPICConfig:
+    return P.EPICConfig(
+        frame_hw=(FRAME, FRAME), patch=PATCH, capacity=CAPACITY,
+        tau=0.10, gamma=0.015, theta=8, window=16,
+        prefilter_k=SPARSE_K, patch_k=SPARSE_PATCH_K,
+    )
+
+
+def _comp() -> api.EPICCompressor:
+    return api.EPICCompressor(_cfg())
+
+
+def _bank(seed: int, n_chunks: int):
+    scfg = SYN.StreamConfig(
+        n_frames=n_chunks * CHUNK_FRAMES, hw=(FRAME, FRAME), n_obj=5
+    )
+    s, _ = SYN.generate_stream(jax.random.PRNGKey(seed), scfg)
+    stream = api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
+    return list(api.iter_chunks(stream, CHUNK_FRAMES, remainder="drop"))
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _dirs, files in os.walk(path):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
+def _build_loaded_server(seed: int):
+    """A pool with N_STREAMS live sessions, warmed and checkpointable."""
+    srv = StreamServer(
+        _comp(),
+        ServerConfig(capacity=POOL, chunk_frames=CHUNK_FRAMES,
+                     queue_depth=2),
+    )
+    ingest = IngestServer(srv)
+    loop = Loopback(ingest)
+    bank = _bank(seed, WARM_CHUNKS + POST_CHUNKS)
+    sessions = []
+    for sid in range(N_STREAMS):
+        s = ResumableSession(loop, sid, drain=ingest.tick)
+        assert s.open().ok
+        sessions.append(s)
+    for i in range(WARM_CHUNKS):
+        for s in sessions:
+            assert s.send_chunk(bank[i]).ok
+        ingest.tick()
+    srv.block_until_ready()
+    return srv, ingest, loop, sessions, bank
+
+
+def run(quick: bool = False, seed: int = 0) -> Dict:
+    t0 = time.time()
+    repeats = 2 if quick else 5
+
+    srv, ingest, loop, sessions, bank = _build_loaded_server(seed)
+    workdir = tempfile.mkdtemp(prefix="fault_bench_")
+    try:
+        # -- snapshot: the on-tick-path piece of an async cadence -------
+        best_snap = float("inf")
+        for _ in range(repeats):
+            t = time.perf_counter()
+            tree, meta = snapshot_server(srv, ingest=ingest)
+            best_snap = min(best_snap, time.perf_counter() - t)
+        del tree, meta
+
+        # -- save: synchronous write + atomic publish -------------------
+        best_save = float("inf")
+        step_dir = None
+        for step in range(repeats):
+            t = time.perf_counter()
+            step_dir = save_server(workdir, step, srv, ingest=ingest,
+                                   n_shards=N_SHARDS)
+            best_save = min(best_save, time.perf_counter() - t)
+        ckpt_bytes = _dir_bytes(step_dir)
+
+        # -- frames the checkpoint does NOT have: the replay workload ---
+        for i in range(POST_CHUNKS):
+            for s in sessions:
+                assert s.send_chunk(bank[WARM_CHUNKS + i]).ok
+            ingest.tick()
+        srv.block_until_ready()
+
+        # -- restore: manifest -> live pool, blocked to ready -----------
+        t = time.perf_counter()
+        restored = restore_server(workdir, _comp(), with_ingest=True)
+        restored.server.block_until_ready()
+        restore_ms = (time.perf_counter() - t) * 1e3
+
+        # -- replay: RESUME handshake + client-window catch-up ----------
+        loop2 = Loopback(restored.ingest)
+        for s in sessions:
+            s.transport = loop2
+            s.drain = restored.ingest.tick
+        t = time.perf_counter()
+        replayed = sum(s.resume() for s in sessions)
+        while any(len(q) for q in restored.server._queues.values()):
+            restored.server.tick()
+        restored.server.block_until_ready()
+        replay_ms = (time.perf_counter() - t) * 1e3
+        assert replayed == N_STREAMS * POST_CHUNKS, (
+            f"expected {N_STREAMS * POST_CHUNKS} replayed frames, "
+            f"got {replayed}"
+        )
+
+        sizes = restored.server.step_cache_sizes()
+        retraces = sum(v - 1 for v in sizes.values())
+        assert retraces == 0, f"post-restore retrace: {sizes}"
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    row = {
+        "pool": POOL,
+        "n_streams": N_STREAMS,
+        "n_shards": N_SHARDS,
+        "prefilter_k": SPARSE_K,
+        "patch_k": SPARSE_PATCH_K,
+        "snapshot_ms": round(best_snap * 1e3, 3),
+        "save_ms": round(best_save * 1e3, 3),
+        "restore_ms": round(restore_ms, 3),
+        "ckpt_bytes": ckpt_bytes,
+        "replay_chunks": replayed,
+        "replay_ms": round(replay_ms, 3),
+        "replay_per_chunk_ms": round(replay_ms / max(1, replayed), 3),
+        "post_restore_retraces": retraces,
+        "n_resumes": sum(s.n_resumes for s in sessions),
+    }
+    print(f"[fault] snapshot={row['snapshot_ms']:8.2f} ms  "
+          f"save={row['save_ms']:8.2f} ms  "
+          f"restore={row['restore_ms']:8.2f} ms  "
+          f"replay={row['replay_chunks']} chunks @ "
+          f"{row['replay_per_chunk_ms']:.2f} ms  "
+          f"ckpt={row['ckpt_bytes']} B")
+
+    out = {
+        "schema": "epic-fault-bench-v1",
+        "quick": quick,
+        "protocol": {
+            "frame_hw": FRAME,
+            "patch": PATCH,
+            "epic_capacity": CAPACITY,
+            "chunk_frames": CHUNK_FRAMES,
+            "pool": POOL,
+            "n_streams": N_STREAMS,
+            "warm_chunks": WARM_CHUNKS,
+            "post_chunks": POST_CHUNKS,
+            "timing": f"best of {repeats} (snapshot/save), single-shot "
+                      "restore+replay, loopback transport",
+            "device": jax.devices()[0].platform,
+        },
+        "restore_row": row,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "fault_bench.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    _merge_bench_core(row)
+    return out
+
+
+def _merge_bench_core(row: Dict) -> None:
+    """Insert/refresh the ``restore`` row of the repo-root trajectory."""
+    path = os.path.join(REPO_ROOT, "BENCH_core.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        doc = {"methods": {}}
+    doc["schema"] = "epic-core-bench-v7"
+    doc.setdefault("methods", {})["restore"] = row
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--quick" in sys.argv)

@@ -16,7 +16,7 @@ backpressure/admission NACK counts — plus served frames/sec for
 cross-reference against the ``serve`` row.
 
 ``benchmarks/run.py --only ingest`` merges the summary as the ``wire``
-row of the repo-root ``BENCH_core.json`` (schema v6; ``core_bench``
+row of the repo-root ``BENCH_core.json`` (schema v7; ``core_bench``
 preserves the row when it rewrites the file) and writes full detail to
 ``benchmarks/results/ingest_bench.json``.
 """
@@ -146,6 +146,7 @@ def _pool_row(r: Dict) -> Dict:
         "n_chunks": total["count"],
         "n_backpressure": nacks.get("backpressure", 0),
         "n_pool_full": nacks.get("pool_full", 0),
+        "n_seq_gaps": r["server"].get("n_seq_gaps", 0),
         "frames_per_sec": r["frames_per_sec"],
     }
 
@@ -157,7 +158,8 @@ def _merge_bench_core(row: Dict) -> None:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, json.JSONDecodeError):
-        doc = {"schema": "epic-core-bench-v6", "methods": {}}
+        doc = {"methods": {}}
+    doc["schema"] = "epic-core-bench-v7"
     doc.setdefault("methods", {})["wire"] = row
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)

@@ -9,6 +9,9 @@
   ingest   -> ingest_bench      (wire-frame loadgen -> loopback ingest
                                  server latency percentiles; merges the
                                  `wire` row into BENCH_core.json)
+  fault    -> fault_bench       (live-slot checkpoint save/restore + wire
+                                 replay latency; merges the `restore` row
+                                 into BENCH_core.json)
   table1   -> evu_accuracy      (EVU accuracy vs memory, 5 methods)
   figure6  -> energy_model      (system energy + memory, 7 systems)
   ablation -> compression_sweep (motion/bypass/depth ablations)
@@ -38,15 +41,15 @@ def main():
     ap.add_argument(
         "--only", default=None,
         help="comma-separated sub-benchmark names "
-             "(core,serve,ingest,table1,figure6,ablation,roofline)",
+             "(core,serve,ingest,fault,table1,figure6,ablation,roofline)",
     )
     args = ap.parse_args()
 
     t0 = time.time()
     summary = {}
     known = {
-        "core", "serve", "ingest", "table1", "figure6", "ablation",
-        "roofline",
+        "core", "serve", "ingest", "fault", "table1", "figure6",
+        "ablation", "roofline",
     }
     selected = None if args.only is None else set(args.only.split(","))
     if selected is not None and not selected <= known:
@@ -85,6 +88,11 @@ def main():
             name: p["latency"]["total"]["p99_ms"]
             for name, p in r["pools"].items()
         }
+    if want("fault"):
+        from benchmarks import fault_bench
+
+        r = fault_bench.run(quick=args.quick)
+        summary["fault_restore_ms"] = r["restore_row"]["restore_ms"]
     if want("figure6"):
         from benchmarks import energy_model
 

@@ -20,7 +20,7 @@ Two serving perf rows over the EPIC sparse-TRD config of the
   occupancy speedup (acceptance gate: ≥ 2× at 4/16 occupancy).
 
 ``benchmarks/run.py --only serve`` merges both summaries into the
-repo-root ``BENCH_core.json`` (schema v6 — ``core_bench`` preserves the
+repo-root ``BENCH_core.json`` (schema v7 — ``core_bench`` preserves the
 rows when it rewrites the file) and writes the full detail to
 ``benchmarks/results/serve_bench.json``.
 """
@@ -226,10 +226,12 @@ def _merge_bench_core(rows: Dict[str, Dict]) -> None:
             doc = json.load(f)
     except (OSError, json.JSONDecodeError):
         # No trajectory yet: a serve-only skeleton (core_bench stamps
-        # the real schema + protocol when it next runs).
-        doc = {"schema": "epic-core-bench-v6", "methods": {}}
-    # Never relabel an existing file: its core rows were produced under
-    # whatever schema it declares; only the serving rows refresh here.
+        # the full protocol block when it next runs).
+        doc = {"methods": {}}
+    # v7 only adds rows/fields on top of v6 (restore row, wire
+    # n_seq_gaps) — core rows are identical under both, so any merge
+    # may relabel the file in place.
+    doc["schema"] = "epic-core-bench-v7"
     doc.setdefault("methods", {}).update(rows)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)

@@ -7,6 +7,7 @@
 #   scripts/ci.sh --bench-smoke       # headless benchmarks/run.py --quick
 #   scripts/ci.sh --serve             # serving-runtime suite + bench smoke
 #   scripts/ci.sh --wire              # wire ingest-frontier suite
+#   scripts/ci.sh --fault             # checkpoint/restore + crash soak lane
 #   scripts/ci.sh tests/test_api.py   # any extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -62,6 +63,35 @@ if [[ "${1:-}" == "--wire" ]]; then
   # record/replay parity, and seeded loadgen determinism.
   shift
   exec python -m pytest -q tests/test_wire.py "$@"
+fi
+
+if [[ "${1:-}" == "--fault" ]]; then
+  # Fault-tolerance lane: the checkpoint substrate properties (atomic
+  # publish, damaged-step fallback, AsyncSaver error surfacing, stale
+  # .tmp cleanup), the live-slot snapshot/restore suite with the
+  # crash/fault-injection soaks (kill -> restore -> RESUME replay must
+  # end bit-identical to the uninterrupted run, zero post-restore
+  # retraces), then a smoke of the fault bench — lands/refreshes the
+  # `restore` row of BENCH_core.json and guards its zero-retrace field.
+  shift
+  python -m pytest -q tests/test_substrates.py tests/test_fault_serve.py "$@"
+  python -m benchmarks.run --quick --only fault
+  exec python - <<'GUARD'
+import json
+import sys
+
+d = json.load(open("BENCH_core.json"))
+row = d["methods"].get("restore")
+if row is None:
+    sys.exit("BENCH_core.json: restore row missing (fault bench did not land)")
+n = row.get("post_restore_retraces")
+if n != 0:
+    sys.exit(f"BENCH_core.json: restore.post_restore_retraces = {n!r}, "
+             "expected 0 (restore retraced the serving path)")
+print(f"[fault] restore row ok: restore={row['restore_ms']}ms "
+      f"replay={row['replay_chunks']} chunks @ "
+      f"{row['replay_per_chunk_ms']}ms, zero post-restore retraces")
+GUARD
 fi
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then
@@ -137,6 +167,20 @@ if tspeed < tfloor:
     )
 print(f"[bench-smoke] tiered serving guard ok: {tspeed}x >= {tfloor}x "
       "at 4/16 occupancy")
+
+# Fault-tolerance guard: the restore row (refreshed by
+# `ci.sh --fault`, preserved across core rewrites) must be present and
+# retrace-free — a missing row means the checkpoint/restore path never
+# landed its numbers.
+restore = d["methods"].get("restore")
+if restore is None:
+    sys.exit("BENCH_core.json: restore row missing "
+             "(run scripts/ci.sh --fault to land it)")
+if restore.get("post_restore_retraces") != 0:
+    sys.exit("BENCH_core.json: restore.post_restore_retraces = "
+             f"{restore.get('post_restore_retraces')!r}, expected 0")
+print(f"[bench-smoke] restore row ok: restore={restore['restore_ms']}ms, "
+      "zero post-restore retraces")
 GUARD
 fi
 

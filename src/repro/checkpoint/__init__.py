@@ -3,8 +3,10 @@
 from repro.checkpoint import store  # noqa: F401
 from repro.checkpoint.store import (  # noqa: F401
     AsyncSaver,
+    complete_steps,
     gc_old,
     latest_step,
+    read_manifest,
     restore,
     save,
 )

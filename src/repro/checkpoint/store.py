@@ -27,6 +27,7 @@ import os
 import shutil
 import threading
 import time
+import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -34,6 +35,15 @@ import jax.numpy as jnp
 import numpy as np
 
 MANIFEST = "manifest.json"
+
+# Errors that mean "this step directory is damaged or vanished" rather
+# than "the caller asked for something impossible": a concurrent gc_old
+# deleted the directory between selection and open (FileNotFoundError),
+# a crash truncated a shard (zipfile/OSError) or the manifest (the
+# json decode error is a ValueError subclass), or a shard lost a leaf
+# (KeyError).  ``restore(step=None)`` falls back to the next-newest
+# complete step on any of these.
+_DAMAGED_STEP_ERRORS = (OSError, KeyError, ValueError, zipfile.BadZipFile)
 
 
 def _flatten_with_paths(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
@@ -57,8 +67,16 @@ def save(
     flat, _ = _flatten_with_paths(tree)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
+    # A crashed save leaves its ``step_*.tmp`` behind (the rename never
+    # ran); clean *all* stale tmp dirs here, not just this step's — a
+    # restarted process checkpoints at new step numbers, so the crashed
+    # step's debris would otherwise accumulate forever.
+    if os.path.isdir(directory):
+        for name in os.listdir(directory):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(
+                    os.path.join(directory, name), ignore_errors=True
+                )
     os.makedirs(tmp, exist_ok=True)
 
     shards: List[Dict[str, np.ndarray]] = [dict() for _ in range(n_shards)]
@@ -93,44 +111,70 @@ def save(
 
 
 class AsyncSaver:
-    """Snapshot-to-host then write-in-background; at most one in flight."""
+    """Snapshot-to-host then write-in-background; at most one in flight.
+
+    A write failure in the background thread (disk full, permissions,
+    a vanished directory) is re-raised on the next :meth:`save` or
+    :meth:`wait` — a checkpoint loop never silently stops persisting.
+    """
 
     def __init__(self):
         self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
         self.last_path: Optional[str] = None
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
 
     def save(self, directory: str, step: int, tree: Any, **kw):
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot
 
         def _run():
-            self.last_path = save(directory, step, host_tree, **kw)
+            try:
+                self.last_path = save(directory, step, host_tree, **kw)
+            except BaseException as e:  # surfaced on next save()/wait()
+                self._exc = e
 
         self._thread = threading.Thread(target=_run, daemon=True)
         self._thread.start()
 
 
-def latest_step(directory: str) -> Optional[int]:
-    """Newest COMPLETE checkpoint step in ``directory`` (manifest present)."""
+def complete_steps(directory: str) -> List[int]:
+    """All complete checkpoint steps in ``directory``, ascending
+    (complete = the manifest, written last, is present)."""
     if not os.path.isdir(directory):
-        return None
-    best = None
+        return []
+    steps = []
     for name in os.listdir(directory):
         if not name.startswith("step_") or name.endswith(".tmp"):
             continue
         if not os.path.exists(os.path.join(directory, name, MANIFEST)):
             continue  # incomplete (crashed mid-save)
         try:
-            s = int(name[len("step_"):])
+            steps.append(int(name[len("step_"):]))
         except ValueError:
             continue
-        best = s if best is None else max(best, s)
-    return best
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest COMPLETE checkpoint step in ``directory`` (manifest present)."""
+    steps = complete_steps(directory)
+    return steps[-1] if steps else None
+
+
+def read_manifest(directory: str, step: int) -> Dict[str, Any]:
+    """The manifest of one step (includes any ``extra_meta`` the save
+    attached — e.g. the serve layer's session metadata)."""
+    path = os.path.join(directory, f"step_{step:08d}", MANIFEST)
+    with open(path) as f:
+        return json.load(f)
 
 
 def restore(
@@ -145,11 +189,31 @@ def restore(
     ``like`` can be real arrays or ShapeDtypeStructs; ``shardings`` (same
     pytree or a single sharding) drives elastic placement on the target
     mesh — None keeps default (single-device) placement.
+
+    With ``step=None`` the newest complete checkpoint is resolved
+    *once* and loaded; if it turns out damaged (a shard truncated or
+    deleted by a crashed writer, the whole directory deleted by a
+    concurrent :func:`gc_old`) the restore falls back to the
+    next-newest complete step rather than failing on debris.  An
+    explicit ``step`` never falls back.
     """
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no complete checkpoint in {directory}")
+    if step is not None:
+        return _load_step(directory, step, like, shardings), step
+    steps = complete_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no complete checkpoint in {directory}")
+    last_err: Optional[BaseException] = None
+    for s in reversed(steps):
+        try:
+            return _load_step(directory, s, like, shardings), s
+        except _DAMAGED_STEP_ERRORS as e:
+            last_err = e
+    raise last_err  # every complete-looking step failed to load
+
+
+def _load_step(
+    directory: str, step: int, like: Any, shardings: Any
+) -> Any:
     d = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(d, MANIFEST)) as f:
         manifest = json.load(f)
@@ -184,24 +248,20 @@ def restore(
         elif isinstance(shardings, jax.sharding.Sharding):
             arr = jax.device_put(arr, shardings)
         leaves.append(arr)
-    return (
-        jax.tree_util.tree_unflatten(
-            jax.tree_util.tree_structure(like), leaves
-        ),
-        step,
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves
     )
 
 
 def gc_old(directory: str, keep: int = 3):
-    """Delete all but the newest ``keep`` complete checkpoints."""
-    if not os.path.isdir(directory):
-        return
-    steps = sorted(
-        int(n[len("step_"):])
-        for n in os.listdir(directory)
-        if n.startswith("step_")
-        and not n.endswith(".tmp")
-        and os.path.exists(os.path.join(directory, n, MANIFEST))
-    )
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"))
+    """Delete all but the newest ``keep`` complete checkpoints.
+
+    Tolerates a step vanishing mid-delete (two gc passes racing, or a
+    restore-side cleanup): deletion is best-effort, and a concurrent
+    ``restore(step=None)`` that loses the race to a deleted directory
+    falls back to the next-newest step on its own.
+    """
+    for s in complete_steps(directory)[:-keep]:
+        shutil.rmtree(
+            os.path.join(directory, f"step_{s:08d}"), ignore_errors=True
+        )

@@ -22,7 +22,16 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Hashable,
+    Iterable,
+    List,
+    Optional,
+    Tuple,
+)
 
 from repro.checkpoint import store
 
@@ -68,13 +77,16 @@ class FaultTolerantLoop:
         self.stats = LoopStats()
 
     def _restore(self, state: Any) -> Tuple[Any, int]:
-        step = store.latest_step(self.cfg.ckpt_dir)
-        if step is None:
+        # One restore call resolves + loads the newest complete step
+        # (falling back past damaged debris on its own) — a separate
+        # latest_step probe here would race gc_old between the probe
+        # and the load.
+        try:
+            return store.restore(
+                self.cfg.ckpt_dir, state, shardings=self.shardings
+            )
+        except FileNotFoundError:
             return state, 0  # no checkpoint yet: restart from scratch
-        state, step = store.restore(
-            self.cfg.ckpt_dir, state, shardings=self.shardings
-        )
-        return state, step
 
     def run(self, state: Any, n_steps: int, *, start_step: int = 0) -> Any:
         """Run to ``n_steps`` total, recovering from failures."""
@@ -121,15 +133,22 @@ class FaultTolerantLoop:
 
 
 class FailureInjector:
-    """Deterministically fail at given step indices (for tests/examples)."""
+    """Deterministically fail at given crash points (for tests/soaks).
 
-    def __init__(self, fail_at: List[int]):
+    Crash points are arbitrary hashables: step indices for the training
+    loop, or labels like ``("mid_tick", 3)`` / ``"mid_save"`` for the
+    serve-layer crash soak (``tests/test_fault_serve.py``).  Each point
+    fires exactly once, so the recovery path's *replay* of the same
+    point does not re-crash.
+    """
+
+    def __init__(self, fail_at: Iterable[Hashable]):
         self.fail_at = set(fail_at)
         self.seen: set = set()
         self.calls = 0
 
-    def maybe_fail(self, step: int):
+    def maybe_fail(self, point: Hashable):
         self.calls += 1
-        if step in self.fail_at and step not in self.seen:
-            self.seen.add(step)
-            raise WorkerFailure(f"injected failure at step {step}")
+        if point in self.fail_at and point not in self.seen:
+            self.seen.add(point)
+            raise WorkerFailure(f"injected failure at {point!r}")

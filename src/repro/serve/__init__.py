@@ -29,6 +29,11 @@ above it (ROADMAP north-star: production-scale serving):
   StreamTelemetry, tick_readback,
   pool_stream_counters            (telemetry)  per-stream counters, one
                                                batched device_get per tick
+  ServeCheckpointer, save_server,
+  restore_server, snapshot_server (checkpoint) live-slot snapshot into the
+                                               atomic checkpoint store +
+                                               restore into a fresh process
+                                               with zero retraces
   jit_prefill, jit_decode_step,
   greedy_decode_loop              (efm)        the EFM prefill/decode steps
                                                (moved from launch/serve)
@@ -54,6 +59,10 @@ _LAZY = {
     "ChunkQueue": "repro.serve.ingest",
     "StreamServer": "repro.serve.server",
     "ServerConfig": "repro.serve.server",
+    "ServeCheckpointer": "repro.serve.checkpoint",
+    "save_server": "repro.serve.checkpoint",
+    "restore_server": "repro.serve.checkpoint",
+    "snapshot_server": "repro.serve.checkpoint",
     "StreamTelemetry": "repro.serve.telemetry",
     "tick_readback": "repro.serve.telemetry",
     "pool_stream_counters": "repro.serve.telemetry",

@@ -10,11 +10,14 @@ per-stream :class:`~repro.serve.ingest.ChunkQueue`:
                                                      format + session
                                                      control / ACK-NACK
                                                      reply structs
-  IngestServer, Loopback, WireClient      (server)   framed-message demux
+  IngestServer, Loopback, WireClient,
+  ResumableSession, ResumeError           (server)   framed-message demux
                                                      into StreamServer
                                                      queues (asyncio
                                                      TCP/Unix + loopback),
-                                                     backpressure as NACKs
+                                                     backpressure as NACKs,
+                                                     RESUME reconnect with
+                                                     windowed gap replay
   TraceWriter, TraceReader, TraceRecord,
   record_session, replay                  (trace)    append-only .wtrace
                                                      record / playback
@@ -46,12 +49,15 @@ _LAZY = {
     "decode_frame": "repro.wire.codec",
     "encode_control": "repro.wire.codec",
     "decode_control": "repro.wire.codec",
+    "encode_resume": "repro.wire.codec",
     "encode_reply": "repro.wire.codec",
     "decode_reply": "repro.wire.codec",
     "decode_message": "repro.wire.codec",
     "IngestServer": "repro.wire.server",
     "Loopback": "repro.wire.server",
     "WireClient": "repro.wire.server",
+    "ResumableSession": "repro.wire.server",
+    "ResumeError": "repro.wire.server",
     "TraceWriter": "repro.wire.trace",
     "TraceReader": "repro.wire.trace",
     "TraceRecord": "repro.wire.trace",

@@ -27,7 +27,10 @@ truncated, corrupt (CRC), wrong-magic, or wrong-version frames.
 Two small fixed-size companions share the transport framing:
 
 * **control frames** (magic ``b"EPWC"``): session ``OPEN`` / ``CLOSE``
-  for one stream id — the ingest server maps them to slot admit/evict;
+  for one stream id — the ingest server maps them to slot admit/evict —
+  plus ``RESUME`` (one extra u64: the client's seq cursor), which
+  re-binds a dropped connection to its live or just-restored slot and
+  tells the client where to start replaying its send window;
 * **replies** (magic ``b"EPWR"``): per-message ACK/NACK with a status
   code, so producers see backpressure (``NACK_BACKPRESSURE``) and
   admission failures (``NACK_POOL_FULL``) instead of silent drops.
@@ -69,9 +72,14 @@ DATA_HEADER_NBYTES = FRAME_HEADER.size + N_FIELD_SLOTS * FIELD_SLOT.size
 
 # magic, version, op, stream_id
 CONTROL = struct.Struct("<4sHHQ")
+# RESUME rides the control magic with one extra u64: the first seq the
+# client has NOT seen ACKed (``last_acked + 1``, so a fresh session —
+# last_acked = -1 — still packs as unsigned 0).
+RESUME = struct.Struct("<4sHHQQ")
 OP_OPEN = 1
 OP_CLOSE = 2
-_OPS = {OP_OPEN: "open", OP_CLOSE: "close"}
+OP_RESUME = 3
+_OPS = {OP_OPEN: "open", OP_CLOSE: "close", OP_RESUME: "resume"}
 
 # magic, version, status, stream_id, seq
 REPLY = struct.Struct("<4sHHQQ")
@@ -82,6 +90,7 @@ NACK_UNKNOWN_STREAM = 3
 NACK_BAD_FRAME = 4
 NACK_DUP_STREAM = 5
 NACK_OUT_OF_ORDER = 6
+NACK_SEQ_GAP = 7
 STATUS_NAMES = {
     ACK: "ack",
     NACK_BACKPRESSURE: "backpressure",
@@ -90,6 +99,7 @@ STATUS_NAMES = {
     NACK_BAD_FRAME: "bad_frame",
     NACK_DUP_STREAM: "dup_stream",
     NACK_OUT_OF_ORDER: "out_of_order",
+    NACK_SEQ_GAP: "seq_gap",
 }
 
 # Wire dtype codes.  Fixed small vocabulary: the codec fails fast on a
@@ -137,8 +147,11 @@ class WireFrame(NamedTuple):
 
 
 class ControlFrame(NamedTuple):
-    op: int  # OP_OPEN / OP_CLOSE
+    op: int  # OP_OPEN / OP_CLOSE / OP_RESUME
     stream_id: int
+    # RESUME only: the first seq the client has not seen ACKed
+    # (``last_acked + 1``).  0 for OPEN/CLOSE.
+    seq: int = 0
 
     @property
     def op_name(self) -> str:
@@ -322,9 +335,28 @@ def decode_frame(buf: Buffer, *, verify_crc: bool = True) -> WireFrame:
 
 
 def encode_control(op: int, stream_id: int) -> bytes:
+    if op == OP_RESUME:
+        raise WireFormatError(
+            "RESUME carries a seq cursor; use encode_resume()"
+        )
     if op not in _OPS:
         raise WireFormatError(f"unknown control op {op}")
     return CONTROL.pack(CTRL_MAGIC, WIRE_VERSION, op, stream_id)
+
+
+def encode_resume(stream_id: int, last_acked_seq: int) -> bytes:
+    """The reconnect handshake: re-bind a dropped connection to its
+    live (or just-restored) stream, keyed on (stream id, last-acked
+    seq).  ``last_acked_seq`` is the highest seq the *client* has seen
+    ACKed (``-1`` for none); the wire carries ``last_acked_seq + 1`` so
+    the field stays unsigned."""
+    if last_acked_seq < -1:
+        raise WireFormatError(
+            f"last_acked_seq must be >= -1, got {last_acked_seq}"
+        )
+    return RESUME.pack(
+        CTRL_MAGIC, WIRE_VERSION, OP_RESUME, stream_id, last_acked_seq + 1
+    )
 
 
 def decode_control(buf: Buffer) -> ControlFrame:
@@ -336,6 +368,13 @@ def decode_control(buf: Buffer) -> ControlFrame:
         bytes(memoryview(buf)[: CONTROL.size])
     )
     _check_magic_version(magic, CTRL_MAGIC, version)
+    if op == OP_RESUME:
+        if len(buf) < RESUME.size:
+            raise WireFormatError(
+                f"truncated RESUME frame: {len(buf)} < {RESUME.size}"
+            )
+        *_, seq = RESUME.unpack_from(bytes(memoryview(buf)[: RESUME.size]))
+        return ControlFrame(op, stream_id, seq)
     if op not in _OPS:
         raise WireFormatError(f"unknown control op {op}")
     return ControlFrame(op, stream_id)

@@ -23,6 +23,18 @@ Transport layering (relay → queue → pipeline):
   per message, in the event-loop thread.  ``handle_message`` holds the
   server's lock, so a bench thread may call :meth:`tick` concurrently.
 
+**Reconnect/resume**: a ``RESUME`` control frame re-binds a dropped
+connection to its live (or just-restored, see
+:mod:`repro.serve.checkpoint`) stream.  The server answers with the
+next seq it expects; seqs at or below that cursor replayed from the
+client's window are **duplicate-suppressed** (ACKed without
+re-serving).  :class:`ResumableSession` is the producer half: a bounded
+unacked send window, automatic ``reconnect → RESUME → replay`` on
+connection errors, with :class:`WireClient` supplying bounded
+exponential-backoff redials.  Forward seq gaps are always *counted*
+per stream (``n_seq_gaps``); under ``strict_seq=True`` they are also
+refused with ``NACK_SEQ_GAP`` so a lossy uplink must retransmit.
+
 The serving *clock* stays with the caller: the ingest server never
 steps the pool on its own — call :meth:`tick` (or
 ``StreamServer.tick``) at the serving cadence.
@@ -34,7 +46,9 @@ import asyncio
 import socket
 import struct
 import threading
-from typing import Dict, Optional, Tuple
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, Optional, Tuple
 
 from repro.wire import codec
 
@@ -55,16 +69,33 @@ def frame_message(msg: bytes) -> bytes:
 class IngestServer:
     """Demux framed wire messages into a ``StreamServer``'s queues."""
 
-    def __init__(self, stream_server, *, verify_crc: bool = True):
+    def __init__(
+        self,
+        stream_server,
+        *,
+        verify_crc: bool = True,
+        strict_seq: bool = False,
+    ):
         self.srv = stream_server
         self.verify_crc = verify_crc
+        self.strict_seq = strict_seq
         self.lock = threading.Lock()
         self.n_messages = 0
         self.n_frames_in = 0
         self.n_opened = 0
         self.n_closed = 0
+        self.n_resumed = 0
+        self.n_dup_suppressed = 0
         self.nacks: Dict[str, int] = {}
         self._seq_seen: Dict[int, int] = {}
+        # Per-stream count of *missing* seqs skipped forward past
+        # (telemetry even in lax mode; retained after close so a bench
+        # can report end-of-run loss).
+        self.seq_gaps_by_stream: Dict[int, int] = {}
+        # Duplicate-suppression boundary set by RESUME: data seqs at or
+        # below the cursor are ACKed without re-serving (the client's
+        # window replay may overlap frames the server already has).
+        self._resume_cursor: Dict[int, int] = {}
         self._servers: list = []
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
@@ -99,11 +130,25 @@ class IngestServer:
             return self._nack(codec.NACK_UNKNOWN_STREAM, sid, frame.seq)
         last = self._seq_seen[sid]
         if last >= 0 and frame.seq <= last:
+            if frame.seq <= self._resume_cursor.get(sid, -1):
+                # Post-RESUME window replay of a frame the server
+                # already served (the client's ACK was lost in the
+                # drop, or it restored an older cursor): suppress the
+                # duplicate and ACK so the client's window drains.
+                self.n_dup_suppressed += 1
+                return codec.encode_reply(codec.ACK, sid, frame.seq)
             # A duplicate or regressed seq is a producer bug (or a
             # replayed packet): refuse it instead of double-serving the
             # frames.  `_seq_seen` only advances on successful submit,
             # so a backpressure retry of the *same* seq still ACKs.
             return self._nack(codec.NACK_OUT_OF_ORDER, sid, frame.seq)
+        gap = frame.seq - last - 1 if last >= 0 else frame.seq
+        if gap > 0 and self.strict_seq:
+            # Strict mode refuses the jump without serving it — the
+            # producer must retransmit the missing seqs (count before
+            # refusing so the loss is visible either way).
+            self._count_gap(sid, gap)
+            return self._nack(codec.NACK_SEQ_GAP, sid, frame.seq)
         try:
             ok = self.srv.submit(sid, frame.chunk)
         except (ValueError, KeyError):
@@ -112,9 +157,19 @@ class IngestServer:
             return self._nack(codec.NACK_BAD_FRAME, sid, frame.seq)
         if not ok:
             return self._nack(codec.NACK_BACKPRESSURE, sid, frame.seq)
+        if gap > 0:
+            # Lax mode accepts the jump but never silently: counted
+            # once, on the submit that actually advanced the cursor
+            # (a backpressure retry of the same seq is not a new gap).
+            self._count_gap(sid, gap)
         self._seq_seen[sid] = frame.seq
         self.n_frames_in += 1
         return codec.encode_reply(codec.ACK, sid, frame.seq)
+
+    def _count_gap(self, sid: int, gap: int) -> None:
+        self.seq_gaps_by_stream[sid] = (
+            self.seq_gaps_by_stream.get(sid, 0) + gap
+        )
 
     def _handle_control(self, ctl: codec.ControlFrame) -> bytes:
         sid = ctl.stream_id
@@ -130,6 +185,24 @@ class IngestServer:
             self._seq_seen[sid] = -1
             self.n_opened += 1
             return codec.encode_reply(codec.ACK, sid)
+        if ctl.op == codec.OP_RESUME:
+            if sid in self._seq_seen:
+                cursor = self._seq_seen[sid]
+            elif sid in set(self.srv.live_sessions):
+                # The serving slot is live but this ingest frontier has
+                # no wire cursor for it — a freshly restored process
+                # whose checkpoint predates this frontier.  Adopt the
+                # client's claimed last-acked seq (``ctl.seq`` carries
+                # last_acked + 1) as the cursor.
+                cursor = ctl.seq - 1
+                self._seq_seen[sid] = cursor
+            else:
+                return self._nack(codec.NACK_UNKNOWN_STREAM, sid)
+            self._resume_cursor[sid] = cursor
+            self.n_resumed += 1
+            # The ACK's seq is the NEXT seq the server expects; the
+            # client replays its unacked window from there.
+            return codec.encode_reply(codec.ACK, sid, cursor + 1)
         # OP_CLOSE (decode_control rejects anything else)
         if sid not in self._seq_seen:
             return self._nack(codec.NACK_UNKNOWN_STREAM, sid)
@@ -139,6 +212,7 @@ class IngestServer:
             self.srv.tick()
         self.srv.close(sid)
         del self._seq_seen[sid]
+        self._resume_cursor.pop(sid, None)
         self.n_closed += 1
         return codec.encode_reply(codec.ACK, sid)
 
@@ -146,6 +220,7 @@ class IngestServer:
         """Forget a wire session the serving layer evicted on its own
         (idle/LRU policies); later frames NACK ``unknown_stream``."""
         self._seq_seen.pop(stream_id, None)
+        self._resume_cursor.pop(stream_id, None)
 
     def tick(self):
         """Run one serving tick under the ingest lock (safe alongside
@@ -155,6 +230,7 @@ class IngestServer:
             live = set(self.srv.live_sessions)
             for sid in [s for s in self._seq_seen if s not in live]:
                 del self._seq_seen[sid]
+                self._resume_cursor.pop(sid, None)
             return stepped
 
     def counters(self) -> Dict[str, int]:
@@ -163,7 +239,11 @@ class IngestServer:
             "n_frames_in": self.n_frames_in,
             "n_opened": self.n_opened,
             "n_closed": self.n_closed,
+            "n_resumed": self.n_resumed,
+            "n_dup_suppressed": self.n_dup_suppressed,
             "n_out_of_order": self.nacks.get("out_of_order", 0),
+            "n_seq_gaps": sum(self.seq_gaps_by_stream.values()),
+            "seq_gaps_by_stream": dict(self.seq_gaps_by_stream),
             "nacks": dict(self.nacks),
         }
 
@@ -250,7 +330,14 @@ class Loopback:
 
 
 class WireClient:
-    """Minimal blocking socket client (producer side, tests/tools)."""
+    """Minimal blocking socket client (producer side, tests/tools).
+
+    :meth:`reconnect` redials the original address with bounded
+    exponential backoff — the transport half of the resume story
+    (:class:`ResumableSession` calls it before the RESUME handshake).
+    ``sleep`` is injectable so tests can record the backoff schedule
+    without waiting it out.
+    """
 
     def __init__(
         self,
@@ -259,15 +346,55 @@ class WireClient:
         *,
         unix_path: Optional[str] = None,
         timeout: float = 10.0,
+        reconnect_attempts: int = 5,
+        backoff_base: float = 0.05,
+        backoff_max: float = 2.0,
+        sleep: Callable[[float], None] = time.sleep,
     ):
-        if unix_path is not None:
-            self.sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-            self.sock.settimeout(timeout)
-            self.sock.connect(unix_path)
-        else:
-            self.sock = socket.create_connection(
-                (host, port), timeout=timeout
-            )
+        self._host = host
+        self._port = port
+        self._unix_path = unix_path
+        self._timeout = timeout
+        self.reconnect_attempts = reconnect_attempts
+        self.backoff_base = backoff_base
+        self.backoff_max = backoff_max
+        self._sleep = sleep
+        self.n_reconnects = 0
+        self.sock = self._connect()
+
+    def _connect(self) -> socket.socket:
+        if self._unix_path is not None:
+            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            sock.settimeout(self._timeout)
+            sock.connect(self._unix_path)
+            return sock
+        return socket.create_connection(
+            (self._host, self._port), timeout=self._timeout
+        )
+
+    def reconnect(self) -> None:
+        """Redial the original address; exponential backoff between
+        attempts, capped at ``backoff_max``, bounded at
+        ``reconnect_attempts`` tries before giving up."""
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        last: Optional[BaseException] = None
+        for attempt in range(max(1, self.reconnect_attempts)):
+            try:
+                self.sock = self._connect()
+                self.n_reconnects += 1
+                return
+            except OSError as e:
+                last = e
+                self._sleep(
+                    min(self.backoff_base * (2**attempt), self.backoff_max)
+                )
+        raise ConnectionError(
+            f"reconnect failed after {self.reconnect_attempts} "
+            f"attempts: {last}"
+        )
 
     def send(self, msg: bytes) -> codec.Reply:
         self.sock.sendall(frame_message(msg))
@@ -292,3 +419,157 @@ class WireClient:
 
     def __exit__(self, *exc):
         self.close()
+
+
+class ResumeError(ConnectionError):
+    """A dropped wire session could not be resumed: the server refused
+    the RESUME (stream unknown), or the unacked gap outgrew the
+    client's bounded replay window."""
+
+
+class ResumableSession:
+    """Producer-side session: bounded replay window + RESUME recovery.
+
+    Wraps any transport exposing ``send(msg) -> Reply`` (a
+    :class:`WireClient`, a :class:`Loopback`, ...).  Every data frame
+    is retained in a bounded deque until ACKed; when a send raises
+    ``ConnectionError``/``OSError`` the session reconnects the
+    transport (via ``transport.reconnect()`` when it has one — the
+    :class:`WireClient` backs off exponentially), performs the RESUME
+    handshake, replays the server-visible gap from the window in seq
+    order, and carries on.  The server duplicate-suppresses any window
+    entry it already served, so the replay is idempotent.
+
+    ``drain`` (typically ``IngestServer.tick``) is invoked on
+    backpressure NACKs to free queue space before retrying — without
+    it, backpressure replies are returned to the caller as-is.
+    """
+
+    def __init__(
+        self,
+        transport,
+        stream_id: int,
+        *,
+        window: int = 32,
+        drain: Optional[Callable[[], Any]] = None,
+        max_retries: int = 16,
+    ):
+        self.transport = transport
+        self.stream_id = int(stream_id)
+        self.drain = drain
+        self.max_retries = max_retries
+        self._window: Deque[Tuple[int, bytes]] = deque(maxlen=window)
+        self.next_seq = 0
+        self.last_acked = -1
+        self.n_resumes = 0
+        self.n_replayed = 0
+
+    @property
+    def unacked(self) -> Tuple[int, ...]:
+        """Seqs still in the window and not yet ACKed."""
+        return tuple(s for s, _ in self._window if s > self.last_acked)
+
+    def open(self) -> codec.Reply:
+        return self.transport.send(
+            codec.encode_control(codec.OP_OPEN, self.stream_id)
+        )
+
+    def close(self) -> codec.Reply:
+        return self.transport.send(
+            codec.encode_control(codec.OP_CLOSE, self.stream_id)
+        )
+
+    def send_chunk(self, chunk, *, timestamp_ns: int = 0) -> codec.Reply:
+        seq = self.next_seq
+        self.next_seq += 1
+        msg = codec.encode_chunk(
+            chunk,
+            stream_id=self.stream_id,
+            seq=seq,
+            timestamp_ns=timestamp_ns,
+        )
+        self._window.append((seq, msg))
+        return self._deliver(seq, msg)
+
+    def _deliver(self, seq: int, msg: bytes) -> codec.Reply:
+        for _ in range(self.max_retries):
+            try:
+                reply = self.transport.send(msg)
+            except (ConnectionError, OSError):
+                self.resume()
+                if self.last_acked >= seq:
+                    # The replay already covered this frame; synthesize
+                    # the ACK the dropped connection swallowed.
+                    return codec.Reply(codec.ACK, self.stream_id, seq)
+                continue
+            if reply.ok:
+                self.last_acked = max(self.last_acked, seq)
+                return reply
+            if (
+                reply.status == codec.NACK_BACKPRESSURE
+                and self.drain is not None
+            ):
+                self.drain()
+                continue
+            return reply
+        raise ResumeError(
+            f"stream {self.stream_id}: seq {seq} undeliverable after "
+            f"{self.max_retries} attempts"
+        )
+
+    def resume(self) -> int:
+        """Reconnect + RESUME handshake + replay the gap the server
+        reports, in seq order.  Returns the number of frames replayed.
+
+        Raises :class:`ResumeError` if the server refuses (the stream
+        is unknown — evicted while disconnected) or if the server's
+        next-expected seq has already rolled out of the bounded window.
+        """
+        if hasattr(self.transport, "reconnect"):
+            self.transport.reconnect()
+        reply = self.transport.send(
+            codec.encode_resume(self.stream_id, self.last_acked)
+        )
+        if not reply.ok:
+            raise ResumeError(
+                f"stream {self.stream_id}: RESUME refused "
+                f"({reply.status_name})"
+            )
+        next_expected = reply.seq
+        self.n_resumes += 1
+        if next_expected >= self.next_seq:
+            return 0  # server is fully caught up; nothing to replay
+        gap = [(s, m) for s, m in self._window if s >= next_expected]
+        if not gap or gap[0][0] != next_expected:
+            have = gap[0][0] if gap else self.next_seq
+            raise ResumeError(
+                f"stream {self.stream_id}: server resumes at seq "
+                f"{next_expected} but the replay window starts at "
+                f"{have} — the gap outlived the "
+                f"{self._window.maxlen}-frame window"
+            )
+        for s, m in gap:
+            self._replay_one(s, m)
+        self.n_replayed += len(gap)
+        return len(gap)
+
+    def _replay_one(self, seq: int, msg: bytes) -> codec.Reply:
+        for _ in range(self.max_retries):
+            reply = self.transport.send(msg)
+            if reply.ok:
+                self.last_acked = max(self.last_acked, seq)
+                return reply
+            if (
+                reply.status == codec.NACK_BACKPRESSURE
+                and self.drain is not None
+            ):
+                self.drain()
+                continue
+            raise ResumeError(
+                f"stream {self.stream_id}: replay of seq {seq} refused "
+                f"({reply.status_name})"
+            )
+        raise ResumeError(
+            f"stream {self.stream_id}: replay of seq {seq} still "
+            f"backpressured after {self.max_retries} drains"
+        )

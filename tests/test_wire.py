@@ -711,3 +711,273 @@ class TestSocketTransport:
             assert ingest.counters()["n_frames_in"] == len(chunks)
         finally:
             ingest.stop()
+
+
+# ---------------------------------------------------------------------------
+# Reconnect/resume: RESUME handshake, seq gaps, windowed replay
+
+
+from repro.wire.server import ResumableSession, ResumeError  # noqa: E402
+
+
+class _Drop(ConnectionError):
+    pass
+
+
+class _DroppingTransport:
+    """Loopback that drops the connection on scheduled sends:
+    ``after`` seqs are delivered first (the ACK is lost — exercises
+    duplicate suppression); ``before`` seqs are lost entirely (the
+    frame must be replayed)."""
+
+    def __init__(self, loop, *, before=(), after=()):
+        self.loop = loop
+        self.before = set(before)
+        self.after = set(after)
+
+    def _seq(self, msg):
+        kind, frame = codec.decode_message(msg)
+        return frame.seq if kind == "data" else None
+
+    def send(self, msg):
+        seq = self._seq(msg)
+        if seq in self.before:
+            self.before.discard(seq)
+            raise _Drop(f"dropped before delivering seq {seq}")
+        reply = self.loop.send(msg)
+        if seq in self.after:
+            self.after.discard(seq)
+            raise _Drop(f"dropped after delivering seq {seq}")
+        return reply
+
+
+class _StubTransport:
+    def __init__(self, replies):
+        self.replies = list(replies)
+        self.sent = []
+
+    def send(self, msg):
+        self.sent.append(msg)
+        return self.replies.pop(0)
+
+
+class TestResume:
+    def _wire_server(self, **kw):
+        srv = StreamServer(
+            api.EPICCompressor(_ecfg()),
+            ServerConfig(capacity=2, chunk_frames=CHUNK, queue_depth=2),
+        )
+        ingest = IngestServer(srv, **kw)
+        return srv, ingest, Loopback(ingest)
+
+    def test_resume_codec_roundtrip(self):
+        msg = codec.encode_resume(9, 41)
+        ctl = codec.decode_control(msg)
+        assert ctl.op == codec.OP_RESUME
+        assert ctl.op_name == "resume"
+        assert (ctl.stream_id, ctl.seq) == (9, 42)  # wire carries +1
+        fresh = codec.decode_control(codec.encode_resume(9, -1))
+        assert fresh.seq == 0
+        with pytest.raises(codec.WireFormatError, match="encode_resume"):
+            codec.encode_control(codec.OP_RESUME, 9)
+        with pytest.raises(codec.WireFormatError, match=">= -1"):
+            codec.encode_resume(9, -2)
+        with pytest.raises(codec.WireFormatError, match="truncated"):
+            codec.decode_control(msg[: codec.CONTROL.size])
+        kind, ctl2 = codec.decode_message(msg)
+        assert kind == "control" and ctl2 == ctl
+
+    def test_resume_handshake_and_dup_suppression(self):
+        srv, ingest, loop = self._wire_server()
+        chunk = _sensor_chunks(0)[0]
+        assert loop.send(codec.encode_control(codec.OP_OPEN, 5)).ok
+        for seq in range(3):
+            assert loop.send(codec.encode_chunk(
+                chunk, stream_id=5, seq=seq, timestamp_ns=0,
+            )).ok
+            ingest.tick()
+        served = ingest.counters()["n_frames_in"]
+        # client lost ACKs for 1 and 2: RESUME says resume from seq 2
+        r = loop.send(codec.encode_resume(5, 0))
+        assert r.ok and r.seq == 3  # server already has through seq 2
+        for seq in (1, 2):  # window replay overlaps the server cursor
+            r = loop.send(codec.encode_chunk(
+                chunk, stream_id=5, seq=seq, timestamp_ns=0,
+            ))
+            assert r.ok  # suppressed, not out_of_order
+        c = ingest.counters()
+        assert c["n_resumed"] == 1
+        assert c["n_dup_suppressed"] == 2
+        assert c["n_frames_in"] == served  # nothing double-served
+        # beyond the resume cursor a regressed seq is still refused
+        r = loop.send(codec.encode_chunk(
+            chunk, stream_id=5, seq=4, timestamp_ns=0,
+        ))
+        assert r.ok
+        r = loop.send(codec.encode_chunk(
+            chunk, stream_id=5, seq=3, timestamp_ns=0,
+        ))
+        assert r.status_name == "out_of_order"
+
+    def test_resume_unknown_stream_nacked(self):
+        _, _, loop = self._wire_server()
+        r = loop.send(codec.encode_resume(404, 7))
+        assert r.status_name == "unknown_stream"
+
+    def test_resume_adopts_cursor_for_restored_slot(self):
+        """A slot live in the StreamServer but unknown to this ingest
+        frontier (restored from a checkpoint without wire metadata)
+        adopts the client's claimed cursor."""
+        srv, ingest, loop = self._wire_server()
+        srv.admit(8)  # admitted out-of-band, no wire OPEN
+        chunk = _sensor_chunks(1)[0]
+        r = loop.send(codec.encode_resume(8, 4))
+        assert r.ok and r.seq == 5
+        assert ingest._seq_seen[8] == 4
+        r = loop.send(codec.encode_chunk(
+            chunk, stream_id=8, seq=5, timestamp_ns=0,
+        ))
+        assert r.ok
+        assert ingest.counters()["n_seq_gaps"] == 0
+
+    def test_seq_gaps_counted_in_lax_mode(self):
+        srv, ingest, loop = self._wire_server()
+        chunk = _sensor_chunks(0)[0]
+        assert loop.send(codec.encode_control(codec.OP_OPEN, 3)).ok
+        assert loop.send(codec.encode_chunk(
+            chunk, stream_id=3, seq=2, timestamp_ns=0,  # 0,1 lost
+        )).ok
+        ingest.tick()
+        assert loop.send(codec.encode_chunk(
+            chunk, stream_id=3, seq=6, timestamp_ns=0,  # 3,4,5 lost
+        )).ok
+        c = ingest.counters()
+        assert c["n_seq_gaps"] == 5
+        assert c["seq_gaps_by_stream"] == {3: 5}
+        assert c["nacks"] == {}  # lax: counted, never refused
+
+    def test_strict_seq_nacks_gaps(self):
+        srv, ingest, loop = self._wire_server(strict_seq=True)
+        chunk = _sensor_chunks(0)[0]
+        assert loop.send(codec.encode_control(codec.OP_OPEN, 3)).ok
+        assert loop.send(codec.encode_chunk(
+            chunk, stream_id=3, seq=0, timestamp_ns=0,
+        )).ok
+        r = loop.send(codec.encode_chunk(
+            chunk, stream_id=3, seq=2, timestamp_ns=0,
+        ))
+        assert r.status_name == "seq_gap"
+        assert ingest.counters()["n_frames_in"] == 1  # gap not served
+        # the retransmit closes the gap; the original jump then lands
+        for seq in (1, 2):
+            ingest.tick()
+            assert loop.send(codec.encode_chunk(
+                chunk, stream_id=3, seq=seq, timestamp_ns=0,
+            )).ok
+        c = ingest.counters()
+        assert c["n_seq_gaps"] == 1
+        assert c["nacks"]["seq_gap"] == 1
+        assert c["n_frames_in"] == 3
+
+    def test_resumable_session_recovers_both_drop_kinds(self):
+        """Drops before delivery (frame lost) and after delivery (ACK
+        lost) both self-heal through reconnect+RESUME+replay, and the
+        served state stays bitwise identical to a clean session."""
+        chunks = _sensor_chunks(4, n_frames=32)
+        srv, ingest, loop = self._wire_server()
+        sess = ResumableSession(
+            _DroppingTransport(loop, before={1}, after={2}),
+            6,
+            drain=ingest.tick,
+        )
+        assert sess.open().ok
+        for c in chunks:
+            assert sess.send_chunk(c).ok
+            ingest.tick()
+        while any(len(q) for q in srv._queues.values()):
+            ingest.tick()
+        assert sess.n_resumes == 2
+        assert ingest.counters()["n_resumed"] == 2
+        assert ingest.counters()["n_dup_suppressed"] >= 1  # ACK-lost seq
+
+        comp = api.EPICCompressor(_ecfg())
+        step = jax.jit(comp.step)
+        state = comp.init()
+        for c in chunks:
+            state, _ = step(state, c)
+        _assert_tree_bitwise(state, srv.state(6), "resumed session")
+
+    def test_resume_refused_raises(self):
+        stub = _StubTransport(
+            [codec.Reply(codec.NACK_UNKNOWN_STREAM, 1, 0)]
+        )
+        sess = ResumableSession(stub, 1)
+        with pytest.raises(ResumeError, match="unknown_stream"):
+            sess.resume()
+
+    def test_resume_gap_outlives_window(self):
+        """Server wants a seq the bounded window already rolled past."""
+        stub = _StubTransport([codec.Reply(codec.ACK, 1, 1)])
+        sess = ResumableSession(stub, 1, window=2)
+        sess.next_seq = 5
+        sess.last_acked = 0
+        sess._window.append((3, b"m3"))
+        sess._window.append((4, b"m4"))
+        with pytest.raises(ResumeError, match="window"):
+            sess.resume()
+
+    def test_resume_noop_when_server_caught_up(self):
+        stub = _StubTransport([codec.Reply(codec.ACK, 1, 4)])
+        sess = ResumableSession(stub, 1, window=4)
+        sess.next_seq = 4
+        sess.last_acked = 1  # ACKs lost but the server has everything
+        assert sess.resume() == 0
+        assert sess.n_resumes == 1
+
+
+class TestWireClientReconnect:
+    class _FakeSock:
+        def close(self):
+            pass
+
+    def _client(self, monkeypatch, fail_times, **kw):
+        attempts = []
+        sleeps = []
+        fake = self._FakeSock()
+
+        def create(addr, timeout=None):
+            attempts.append(addr)
+            if 0 < len(attempts) <= fail_times + 1 and len(attempts) > 1:
+                if len(attempts) - 1 <= fail_times:
+                    raise OSError("connection refused")
+            return fake
+
+        monkeypatch.setattr(
+            "repro.wire.server.socket.create_connection", create
+        )
+        cli = WireClient(
+            "127.0.0.1", 1, sleep=sleeps.append, **kw
+        )
+        return cli, attempts, sleeps
+
+    def test_backoff_schedule_bounded_and_exponential(self, monkeypatch):
+        cli, attempts, sleeps = self._client(
+            monkeypatch, fail_times=3,
+            reconnect_attempts=5, backoff_base=0.05, backoff_max=0.15,
+        )
+        cli.reconnect()
+        # 1 construction dial + 3 refused + 1 success
+        assert len(attempts) == 5
+        assert cli.n_reconnects == 1
+        assert sleeps == [0.05, 0.1, 0.15]  # doubled, then capped
+
+    def test_reconnect_gives_up_after_bounded_attempts(self, monkeypatch):
+        cli, attempts, sleeps = self._client(
+            monkeypatch, fail_times=99,
+            reconnect_attempts=3, backoff_base=0.01,
+        )
+        with pytest.raises(ConnectionError, match="after 3 attempts"):
+            cli.reconnect()
+        assert len(attempts) == 4  # construction + 3 redials
+        assert len(sleeps) == 3
+        assert cli.n_reconnects == 0
