@@ -175,12 +175,13 @@ def run(quick: bool = False, seed: int = 0, interpret: bool = False) -> Dict:
             prev_methods = json.load(f).get("methods", {})
     except (OSError, json.JSONDecodeError):
         pass
-    for row_name in ("serve", "serve[tiered]", "wire", "restore"):
+    for row_name in ("serve", "serve[tiered]", "wire", "restore",
+                     "overload"):
         if row_name in prev_methods:
             methods[row_name] = prev_methods[row_name]
 
     out = {
-        "schema": "epic-core-bench-v7",
+        "schema": "epic-core-bench-v8",
         "quick": quick,
         "protocol": {
             "n_frames": N_FRAMES,

@@ -1,0 +1,270 @@
+"""Overload behaviour: goodput, shed fraction and latency vs offered load.
+
+The degradation controller (:mod:`repro.serve.degrade`) promises that a
+server pushed past its drain rate sheds work *predictably* — freshest
+data wins, levels step deterministically, and no level transition ever
+retraces a compiled program.  This bench puts a number on that promise:
+a seeded :class:`~repro.wire.loadgen.LoadGen` drives a degrade-enabled
+:class:`~repro.serve.server.StreamServer` at offered-load multiples
+x1 / x2 / x4 of its per-tick drain rate (``submit_per_tick`` chunks per
+live session per tick against a 1-chunk-per-stream drain), and per
+multiple the report is:
+
+* **goodput** — chunks actually served per second (not merely acked
+  into a queue);
+* **shed fraction** — chunks dropped (freshest-wins queue rotation) or
+  shed stale, over chunks accepted;
+* **p50/p99** enqueue→readback latency from the attached
+  :class:`~repro.wire.latency.LatencyRecorder`, plus the worst queue
+  wait in logical ticks.
+
+The seeded x4 run is executed twice and the event log / shed counters
+compared — ``deterministic`` in the merged row is that comparison, and
+``post_warmup_retraces`` asserts the zero-retrace contract across every
+level transition the soak provoked.
+
+``benchmarks/run.py --only overload`` merges the summary as the
+``overload`` row of the repo-root ``BENCH_core.json`` (schema v8) and
+writes full detail to ``benchmarks/results/overload_bench.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Dict
+
+import jax
+
+from repro import api
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+from repro.serve import DegradeConfig, DegradeController, ServerConfig, StreamServer
+from repro.wire import codec
+from repro.wire.latency import LatencyRecorder
+from repro.wire.loadgen import LoadConfig, LoadGen
+from repro.wire.server import IngestServer, Loopback
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FRAME = 64
+PATCH = 16
+CHUNK_FRAMES = 8
+# Same knobs as the core bench's epic[sparse] row and the wire bench,
+# so goodput sits on the same per-stream cost basis.
+CAPACITY = 192
+SPARSE_K = 24
+SPARSE_PATCH_K = 16
+POOL = 8
+BANK_CHUNKS = 6
+LOAD_MULTIPLES = (1, 2, 4)
+
+# Thresholds low enough that the x2/x4 runs actually climb the ladder
+# within a short soak; dwell 1 keeps transitions tight.  The level
+# policies are the library defaults (rung caps + drop-oldest + stale
+# shed + cold-tier deferral).
+DEGRADE = DegradeConfig(enter=(0.3, 0.6), exit=(0.1, 0.25), dwell_ticks=1)
+
+
+def _cfg() -> P.EPICConfig:
+    return P.EPICConfig(
+        frame_hw=(FRAME, FRAME), patch=PATCH, capacity=CAPACITY,
+        tau=0.10, gamma=0.015, theta=8, window=16,
+        prefilter_k=SPARSE_K, patch_k=SPARSE_PATCH_K,
+    )
+
+
+def _bank(seed: int):
+    scfg = SYN.StreamConfig(
+        n_frames=BANK_CHUNKS * CHUNK_FRAMES, hw=(FRAME, FRAME), n_obj=5
+    )
+    s, _ = SYN.generate_stream(jax.random.PRNGKey(seed), scfg)
+    stream = api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
+    return list(api.iter_chunks(stream, CHUNK_FRAMES, remainder="drop"))
+
+
+def _load_cfg(mult: int, seed: int, ticks: int) -> LoadConfig:
+    # Arrivals keep the pool ~fully subscribed; submit_per_tick is the
+    # offered-load multiple (the server drains one chunk per live
+    # stream per tick, so mult > 1 must shed to keep queues bounded).
+    mean_len = 6.0
+    mu = math.log(mean_len) - 0.245
+    return LoadConfig(
+        seed=seed,
+        ticks=ticks,
+        arrival_rate=POOL / mean_len,
+        session_len_mu=mu,
+        session_len_sigma=0.7,
+        submit_per_tick=mult,
+    )
+
+
+def _soak(mult: int, seed: int, ticks: int) -> Dict:
+    srv = StreamServer(
+        api.EPICCompressor(_cfg()),
+        ServerConfig(capacity=POOL, chunk_frames=CHUNK_FRAMES,
+                     queue_depth=2, eviction="lru"),
+    )
+    srv.degrade = DegradeController(DEGRADE)
+    ingest = IngestServer(srv)
+    bank = _bank(seed)
+
+    # Warm up the pool programs so the soak measures shedding and
+    # serving, not XLA compiles (also the zero-retrace baseline).
+    loop = Loopback(ingest)
+    loop.send(codec.encode_control(codec.OP_OPEN, 1 << 32))
+    for seq in range(2):
+        loop.send(codec.encode_chunk(
+            bank[seq], stream_id=1 << 32, seq=seq, timestamp_ns=0
+        ))
+        ingest.tick()
+    loop.send(codec.encode_control(codec.OP_CLOSE, 1 << 32))
+    srv.block_until_ready()
+
+    srv.latency = LatencyRecorder()
+    frames0 = srv.frames_served
+    t0 = time.perf_counter()
+    summary = LoadGen(_load_cfg(mult, seed, ticks), bank, ingest).run()
+    srv.block_until_ready()
+    wall = time.perf_counter() - t0
+
+    sizes = srv.step_cache_sizes()
+    retraces = sum(v - 1 for v in sizes.values())
+    assert retraces == 0, f"degradation retraced: {sizes}"
+
+    counters = srv.server_counters()
+    degrade = srv.degrade.counters()
+    accepted = summary["n_frames_acked"]
+    shed = counters["n_dropped"] + counters["n_shed_stale"]
+    frames = srv.frames_served - frames0
+    return {
+        "latency": srv.latency.summary(),
+        "load": summary,
+        "server": counters,
+        "degrade": degrade,
+        "goodput_fps": round(frames / wall, 2),
+        "shed_fraction": round(shed / max(1, accepted), 4),
+        "max_queue_wait_ticks": srv.max_queue_wait_ticks,
+        "post_warmup_retraces": retraces,
+        "wall_s": round(wall, 2),
+    }
+
+
+def _mult_row(r: Dict) -> Dict:
+    """The flat per-multiple slice of the BENCH_core overload row."""
+    total = r["latency"]["total"]
+    qwait = r["latency"]["queue_wait"]
+    ticks_at = r["degrade"]["ticks_at_level"]
+    return {
+        "goodput_fps": r["goodput_fps"],
+        "shed_fraction": r["shed_fraction"],
+        "p50_ms": total["p50_ms"],
+        "p99_ms": total["p99_ms"],
+        "queue_wait_p99_ms": qwait["p99_ms"],
+        "n_offered": r["load"]["n_frames_sent"],
+        "n_accepted": r["load"]["n_frames_acked"],
+        "n_shed": (r["server"]["n_dropped"] + r["server"]["n_shed_stale"]),
+        "max_level": max(
+            (i for i, n in enumerate(ticks_at) if n), default=0
+        ),
+        "max_queue_wait_ticks": r["max_queue_wait_ticks"],
+    }
+
+
+def _determinism_key(r: Dict) -> Dict:
+    """Everything that must be bit-identical across same-seed runs
+    (latency timings and wall-clock are excluded by construction)."""
+    return {
+        "load": r["load"],
+        "server": {
+            k: v for k, v in r["server"].items() if k != "wall_s"
+        },
+        "degrade": r["degrade"],
+    }
+
+
+def _merge_bench_core(row: Dict) -> None:
+    """Insert/refresh the ``overload`` row of the repo-root trajectory."""
+    path = os.path.join(REPO_ROOT, "BENCH_core.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        doc = {"methods": {}}
+    doc["schema"] = "epic-core-bench-v8"
+    doc.setdefault("methods", {})["overload"] = row
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def run(quick: bool = False, seed: int = 0) -> Dict:
+    t0 = time.time()
+    ticks = 12 if quick else 30
+    mults = {}
+    for m in LOAD_MULTIPLES:
+        mults[f"x{m}"] = _soak(m, seed, ticks)
+        r = _mult_row(mults[f"x{m}"])
+        print(f"[overload] x{m}  goodput={r['goodput_fps']:8.2f} f/s  "
+              f"shed={r['shed_fraction']:.3f}  "
+              f"p99={r['p99_ms']:.2f} ms  level<= {r['max_level']}")
+
+    # Same seed, same config, run twice: the shed/degrade trajectory
+    # must be bit-identical (latency timings are the only noise).
+    rerun = _soak(LOAD_MULTIPLES[-1], seed, ticks)
+    deterministic = _determinism_key(rerun) == _determinism_key(
+        mults[f"x{LOAD_MULTIPLES[-1]}"]
+    )
+
+    row = {
+        "pool": POOL,
+        "chunk_frames": CHUNK_FRAMES,
+        "prefilter_k": SPARSE_K,
+        "patch_k": SPARSE_PATCH_K,
+        "degrade": {
+            "enter": list(DEGRADE.enter),
+            "exit": list(DEGRADE.exit),
+            "dwell_ticks": DEGRADE.dwell_ticks,
+        },
+        "load": "poisson arrivals sized to the pool, lognormal(~6, 0.7) "
+                "chunks/session, submit_per_tick = load multiple",
+        **{f"x{m}": _mult_row(mults[f"x{m}"]) for m in LOAD_MULTIPLES},
+        "deterministic": deterministic,
+        "post_warmup_retraces": sum(
+            mults[f"x{m}"]["post_warmup_retraces"] for m in LOAD_MULTIPLES
+        ),
+    }
+    out = {
+        "schema": "epic-overload-bench-v1",
+        "quick": quick,
+        "protocol": {
+            "frame_hw": FRAME,
+            "patch": PATCH,
+            "epic_capacity": CAPACITY,
+            "chunk_frames": CHUNK_FRAMES,
+            "pool": POOL,
+            "queue_depth": 2,
+            "ticks": ticks,
+            "load_multiples": list(LOAD_MULTIPLES),
+            "timing": "enqueue->readback per served chunk, post-warmup, "
+                      "loopback transport, degrade controller attached",
+            "device": jax.devices()[0].platform,
+        },
+        "multiples": mults,
+        "determinism_rerun": _determinism_key(rerun),
+        "overload_row": row,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "overload_bench.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    _merge_bench_core(row)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--quick" in sys.argv)

@@ -40,16 +40,16 @@ def main():
     )
     ap.add_argument(
         "--only", default=None,
-        help="comma-separated sub-benchmark names "
-             "(core,serve,ingest,fault,table1,figure6,ablation,roofline)",
+        help="comma-separated sub-benchmark names (core,serve,ingest,"
+             "fault,overload,table1,figure6,ablation,roofline)",
     )
     args = ap.parse_args()
 
     t0 = time.time()
     summary = {}
     known = {
-        "core", "serve", "ingest", "fault", "table1", "figure6",
-        "ablation", "roofline",
+        "core", "serve", "ingest", "fault", "overload", "table1",
+        "figure6", "ablation", "roofline",
     }
     selected = None if args.only is None else set(args.only.split(","))
     if selected is not None and not selected <= known:
@@ -93,6 +93,15 @@ def main():
 
         r = fault_bench.run(quick=args.quick)
         summary["fault_restore_ms"] = r["restore_row"]["restore_ms"]
+    if want("overload"):
+        from benchmarks import overload_bench
+
+        r = overload_bench.run(quick=args.quick)
+        summary["overload_goodput_fps"] = {
+            name: r["overload_row"][name]["goodput_fps"]
+            for name in r["overload_row"]
+            if name.startswith("x")
+        }
     if want("figure6"):
         from benchmarks import energy_model
 

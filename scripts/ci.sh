@@ -8,6 +8,7 @@
 #   scripts/ci.sh --serve             # serving-runtime suite + bench smoke
 #   scripts/ci.sh --wire              # wire ingest-frontier suite
 #   scripts/ci.sh --fault             # checkpoint/restore + crash soak lane
+#   scripts/ci.sh --overload          # degradation + lossy-link soak lane
 #   scripts/ci.sh tests/test_api.py   # any extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -91,6 +92,41 @@ if n != 0:
 print(f"[fault] restore row ok: restore={row['restore_ms']}ms "
       f"replay={row['replay_chunks']} chunks @ "
       f"{row['replay_per_chunk_ms']}ms, zero post-restore retraces")
+GUARD
+fi
+
+if [[ "${1:-}" == "--overload" ]]; then
+  # Overload-resilience lane: the degradation-controller suite
+  # (hysteresis levels, rung caps, stale shed, tier deferral), the
+  # seeded lossy-link soaks (drop/dup/reorder/corrupt/truncate through
+  # FaultyTransport must still converge bit-identically), and the
+  # overload soak (deterministic shed, bounded queue wait, zero
+  # retraces across level transitions) — then a smoke of the overload
+  # bench, which lands/refreshes the `overload` row of BENCH_core.json
+  # and guards its determinism + zero-retrace fields.
+  shift
+  python -m pytest -q tests/test_overload.py "$@"
+  python -m benchmarks.run --quick --only overload
+  exec python - <<'GUARD'
+import json
+import sys
+
+d = json.load(open("BENCH_core.json"))
+row = d["methods"].get("overload")
+if row is None:
+    sys.exit("BENCH_core.json: overload row missing "
+             "(overload bench did not land)")
+if row.get("deterministic") is not True:
+    sys.exit(f"BENCH_core.json: overload.deterministic = "
+             f"{row.get('deterministic')!r} — same-seed overload runs "
+             "diverged (shed/degrade trajectory is nondeterministic)")
+n = row.get("post_warmup_retraces")
+if n != 0:
+    sys.exit(f"BENCH_core.json: overload.post_warmup_retraces = {n!r}, "
+             "expected 0 (a degradation level transition retraced)")
+x = row.get("x4", {})
+print(f"[overload] row ok: x4 goodput={x.get('goodput_fps')} f/s, "
+      f"shed={x.get('shed_fraction')}, deterministic, zero retraces")
 GUARD
 fi
 
@@ -181,6 +217,25 @@ if restore.get("post_restore_retraces") != 0:
              f"{restore.get('post_restore_retraces')!r}, expected 0")
 print(f"[bench-smoke] restore row ok: restore={restore['restore_ms']}ms, "
       "zero post-restore retraces")
+
+# Overload guard: the overload row (refreshed by `ci.sh --overload`,
+# preserved across core rewrites) must be present, deterministic and
+# retrace-free — nondeterministic shedding would silently break the
+# reproducibility contract every soak relies on.
+overload = d["methods"].get("overload")
+if overload is None:
+    sys.exit("BENCH_core.json: overload row missing "
+             "(run scripts/ci.sh --overload to land it)")
+if overload.get("deterministic") is not True:
+    sys.exit("BENCH_core.json: overload.deterministic = "
+             f"{overload.get('deterministic')!r} — same-seed overload "
+             "runs diverged")
+if overload.get("post_warmup_retraces") != 0:
+    sys.exit("BENCH_core.json: overload.post_warmup_retraces = "
+             f"{overload.get('post_warmup_retraces')!r}, expected 0")
+print("[bench-smoke] overload row ok: "
+      f"x4 shed={overload.get('x4', {}).get('shed_fraction')}, "
+      "deterministic, zero retraces")
 GUARD
 fi
 

@@ -33,6 +33,8 @@ from typing import (
     Tuple,
 )
 
+import numpy as np
+
 from repro.checkpoint import store
 
 
@@ -152,3 +154,83 @@ class FailureInjector:
         if point in self.fail_at and point not in self.seen:
             self.seen.add(point)
             raise WorkerFailure(f"injected failure at {point!r}")
+
+
+class FaultPlan:
+    """Seeded lossy-link schedule: one action per data-frame send.
+
+    The wire-layer :class:`~repro.wire.fault.FaultyTransport` asks the
+    plan what to do with each data frame it forwards; the answer is one
+    of :data:`ACTIONS`.  Determinism is the whole point — a fixed
+    ``(seed, rates, at, warmup)`` always yields the identical action
+    sequence, so a loss soak's fault pattern (and therefore its
+    retransmit/NACK counts) is pinned run over run:
+
+    * ``rates`` maps fault names to per-send probabilities (the
+      remainder delivers); one uniform draw is consumed per send index
+      *regardless* of overrides, so pinning an index with ``at`` never
+      shifts the rest of the schedule;
+    * ``at`` pins specific send indices to specific actions — a soak
+      can guarantee every fault kind actually fires;
+    * indices below ``warmup`` always deliver (let the programs compile
+      and the session settle before the link turns hostile).
+
+    ``counts`` tallies the actions actually taken.
+    """
+
+    ACTIONS = ("deliver", "drop", "dup", "reorder", "corrupt", "truncate")
+
+    def __init__(
+        self,
+        *,
+        seed: int = 0,
+        rates: Optional[Dict[str, float]] = None,
+        at: Optional[Dict[int, str]] = None,
+        warmup: int = 0,
+    ):
+        self.rates = dict(rates or {})
+        for name, rate in self.rates.items():
+            if name not in self.ACTIONS or name == "deliver":
+                raise ValueError(
+                    f"unknown fault {name!r}; available: "
+                    f"{self.ACTIONS[1:]}"
+                )
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"rate for {name!r} must be in [0, 1]")
+        if sum(self.rates.values()) > 1.0:
+            raise ValueError(
+                f"fault rates sum to {sum(self.rates.values())} > 1"
+            )
+        self.at = dict(at or {})
+        for idx, name in self.at.items():
+            if name not in self.ACTIONS:
+                raise ValueError(
+                    f"at[{idx}]={name!r} is not one of {self.ACTIONS}"
+                )
+        self.warmup = warmup
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+        self.n_sent = 0
+        self.counts: Dict[str, int] = {a: 0 for a in self.ACTIONS}
+
+    def next_action(self) -> str:
+        """The action for the next data-frame send (advances the plan)."""
+        i = self.n_sent
+        self.n_sent += 1
+        # One draw per index no matter what decides the action, so `at`
+        # pins and the warmup window never shift the schedule's tail.
+        u = float(self._rng.random())
+        if i in self.at:
+            action = self.at[i]
+        elif i < self.warmup:
+            action = "deliver"
+        else:
+            action = "deliver"
+            lo = 0.0
+            for name, rate in self.rates.items():
+                if lo <= u < lo + rate:
+                    action = name
+                    break
+                lo += rate
+        self.counts[action] += 1
+        return action

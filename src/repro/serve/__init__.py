@@ -26,6 +26,12 @@ above it (ROADMAP north-star: production-scale serving):
                                                rung-bucketed dispatch,
                                                eviction policies,
                                                backpressure
+  DegradeController, DegradeConfig,
+  LevelPolicy                      (degrade)   graceful degradation under
+                                               overload: hysteresis pressure
+                                               levels capping rungs, shedding
+                                               stale work, deferring cold
+                                               tiers — zero retraces
   StreamTelemetry, tick_readback,
   pool_stream_counters            (telemetry)  per-stream counters, one
                                                batched device_get per tick
@@ -59,6 +65,10 @@ _LAZY = {
     "ChunkQueue": "repro.serve.ingest",
     "StreamServer": "repro.serve.server",
     "ServerConfig": "repro.serve.server",
+    "DegradeController": "repro.serve.degrade",
+    "DegradeConfig": "repro.serve.degrade",
+    "LevelPolicy": "repro.serve.degrade",
+    "validate_degrade": "repro.serve.degrade",
     "ServeCheckpointer": "repro.serve.checkpoint",
     "save_server": "repro.serve.checkpoint",
     "restore_server": "repro.serve.checkpoint",

@@ -93,11 +93,41 @@ class KLadderController:
         #: K used by each past chunk, in order (the controller's
         #: deterministic trajectory; exposed for tests/telemetry).
         self.k_trajectory: List[int] = []
+        # Highest rung update() may grow to.  The default (the top of
+        # the ladder) leaves behaviour bitwise identical to an uncapped
+        # controller; the degradation controller lowers it under
+        # overload (see repro.serve.degrade).
+        self._max_rung = len(self.ladder) - 1
 
     @property
     def k(self) -> int:
         """The current rung's ``prefilter_k``."""
         return self.ladder[self._rung]
+
+    @property
+    def rung_cap(self) -> int:
+        """The highest ladder index :meth:`update` may grow to."""
+        return self._max_rung
+
+    def set_rung_cap(self, rung: Optional[int]) -> None:
+        """Clamp the controller at ladder index ``rung``.
+
+        ``None`` (or the top index) removes the cap.  Capping below the
+        current rung moves the rung down immediately; while the cap
+        holds, :meth:`update` never grows past it.  Because every
+        capped rung is an existing ladder rung, capping changes *which*
+        compiled variants run, never the compiled-program set — the
+        degradation path stays retrace-free.
+        """
+        cap = len(self.ladder) - 1 if rung is None else rung
+        if not 0 <= cap < len(self.ladder):
+            raise ValueError(
+                f"rung cap {rung} out of range for the "
+                f"{len(self.ladder)}-rung ladder"
+            )
+        self._max_rung = cap
+        if self._rung > cap:
+            self._rung = cap
 
     def begin_chunk(self) -> int:
         """Record the K the next chunk will run with, and return it."""
@@ -112,7 +142,7 @@ class KLadderController:
         ``peak_full`` its max per-frame ``n_full_checks``.  Returns the
         K the *next* chunk will use.
         """
-        if overflow > 0 and self._rung < len(self.ladder) - 1:
+        if overflow > 0 and self._rung < self._max_rung:
             self._rung += 1
         elif (
             self._rung > 0

@@ -195,7 +195,7 @@ def _snapshot_locked(
     # preserving it across restore preserves dispatch determinism.
     for i, sid in enumerate(server._queues):
         q = server._queues[sid]
-        chunks = [c for c, _ts in q._q]
+        chunks = [c for c, *_ in q._q]
         queues[f"q{i:04d}"] = chunks
         tier, local = server._locate(sid)
         ctl = server._controllers.get(sid)
@@ -409,6 +409,10 @@ def _restore_one(
         p._host_generation = [int(g) for g in gens]
 
     now = time.monotonic()
+    # The restored logical clock (applied to srv further down): queued
+    # chunks are re-stamped with it so a staleness deadline never sheds
+    # them on the first post-restore tick.
+    tick_now = int(meta["counters"]["n_ticks"])
     zero_src: Optional[SensorChunk] = None
     for i, sess in enumerate(meta["sessions"]):
         sid = _decode_sid(sess["sid"])
@@ -419,7 +423,7 @@ def _restore_one(
 
         q = ChunkQueue(config.queue_depth, policy=config.queue_policy)
         for chunk in tree["queues"][f"q{i:04d}"]:
-            q._q.append((chunk, now))
+            q._q.append((chunk, now, tick_now))
             if zero_src is None:
                 zero_src = chunk
         qc = sess["queue_counters"]

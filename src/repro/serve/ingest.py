@@ -102,6 +102,14 @@ class ChunkQueue:
     ``time.monotonic``), so latency telemetry can split queueing delay
     from compute delay; ``pop_entry`` hands the timestamp back with the
     chunk while ``pop`` keeps the legacy chunk-only signature.
+
+    Entries may additionally carry a **logical tick stamp** (``push``'s
+    ``tick`` argument; the server stamps its ``n_ticks``).
+    :meth:`shed_stale` drops queued chunks whose stamp has fallen
+    behind a staleness deadline — the graceful-degradation
+    controller's load-shedding primitive.  Ticks, not wall seconds,
+    so shed counts are deterministic for a deterministic chunk/tick
+    sequence.
     """
 
     def __init__(
@@ -121,22 +129,29 @@ class ChunkQueue:
         self.maxlen = maxlen
         self.policy = policy
         self.clock = clock
-        self._q: Deque[Tuple[SensorChunk, float]] = deque()
+        self._q: Deque[Tuple[SensorChunk, float, Optional[int]]] = deque()
         self.n_pushed = 0
         self.n_overflow = 0
         self.n_dropped = 0
+        self.n_shed = 0
 
     def __len__(self) -> int:
         return len(self._q)
 
-    def push(self, chunk: SensorChunk, *, ts: Optional[float] = None) -> bool:
+    def push(
+        self,
+        chunk: SensorChunk,
+        *,
+        ts: Optional[float] = None,
+        tick: Optional[int] = None,
+    ) -> bool:
         if len(self._q) >= self.maxlen:
             if self.policy == "refuse":
                 self.n_overflow += 1
                 return False
             self._q.popleft()
             self.n_dropped += 1
-        self._q.append((chunk, self.clock() if ts is None else ts))
+        self._q.append((chunk, self.clock() if ts is None else ts, tick))
         self.n_pushed += 1
         return True
 
@@ -145,7 +160,28 @@ class ChunkQueue:
 
     def pop_entry(self) -> Optional[Tuple[SensorChunk, float]]:
         """Pop ``(chunk, enqueue_ts)`` — ``None`` when empty."""
+        entry = self._q.popleft() if self._q else None
+        return None if entry is None else (entry[0], entry[1])
+
+    def pop_full(self) -> Optional[Tuple[SensorChunk, float, Optional[int]]]:
+        """Pop ``(chunk, enqueue_ts, enqueue_tick)`` — ``None`` when
+        empty; the tick is ``None`` for unstamped pushes."""
         return self._q.popleft() if self._q else None
+
+    def shed_stale(self, before_tick: int) -> int:
+        """Drop queued chunks stamped before ``before_tick`` (FIFO, so
+        stale entries are always at the head).  Unstamped entries are
+        never shed.  Returns the number dropped (also ``n_shed``)."""
+        n = 0
+        while (
+            self._q
+            and self._q[0][2] is not None
+            and self._q[0][2] < before_tick
+        ):
+            self._q.popleft()
+            self.n_shed += 1
+            n += 1
+        return n
 
     def peek(self) -> Optional[SensorChunk]:
         return self._q[0][0] if self._q else None

@@ -215,8 +215,17 @@ class StreamServer:
         # batched readback.  ``None`` keeps the hot path free of clock
         # reads beyond the queue's own enqueue stamp.
         self.latency: Optional[Any] = None
+        # Optional graceful degradation: attach a
+        # ``repro.serve.degrade.DegradeController`` and every tick
+        # feeds it the backlog/arrival/service pressure signals and
+        # applies its level policy (rung caps, drop-oldest + staleness
+        # shedding, cold-tier deferral) before popping work.  ``None``
+        # serves exactly as before.
+        self.degrade: Optional[Any] = None
         self._pop_ts: Dict[Hashable, Tuple[float, float]] = {}
         self._tick_t0 = 0.0
+        self._last_tick_wall: Optional[float] = None
+        self.max_queue_wait_ticks = 0
         self._n_dropped_closed = 0
         self.n_ticks = 0
         self.n_admitted = 0
@@ -337,7 +346,7 @@ class StreamServer:
             raise KeyError(f"session {session_id!r} is not admitted")
         if self._zero_chunk is None:
             self._zero_chunk = jax.tree.map(jnp.zeros_like, chunk)
-        ok = q.push(chunk)
+        ok = q.push(chunk, tick=self.n_ticks)
         if not ok:
             self._telemetry[session_id].n_queue_overflow += 1
             self.n_backpressure += 1
@@ -358,16 +367,62 @@ class StreamServer:
     def _rung_step_fn(self, k: Optional[int]):
         return self.compressor.step if k is None else self._rung_comp(k).step
 
-    def _pop_ready(self) -> Dict[Hashable, SensorChunk]:
+    def _pop_ready(
+        self, deferred: Tuple[int, ...] = ()
+    ) -> Dict[Hashable, SensorChunk]:
         ready = {}
         self._pop_ts = {}
         now = time.monotonic()
         for sid in list(self._queues):
-            entry = self._queues[sid].pop_entry()
+            if deferred and self._locate(sid)[0] in deferred:
+                continue
+            entry = self._queues[sid].pop_full()
             if entry is not None:
                 ready[sid] = entry[0]
                 self._pop_ts[sid] = (entry[1], now)
+                if entry[2] is not None:
+                    self.max_queue_wait_ticks = max(
+                        self.max_queue_wait_ticks, self.n_ticks - entry[2]
+                    )
         return ready
+
+    def _degrade_step(self) -> Tuple[int, ...]:
+        """Feed the attached degradation controller one tick's pressure
+        signals and apply its level policy; returns the tier indices
+        whose dispatch the current level defers (empty when level 0 or
+        no controller).  Every action only reduces or masks work —
+        capped rungs are existing ladder rungs, shedding removes queued
+        chunks, deferral skips pops — so no new program shapes appear
+        across level transitions.
+        """
+        dg = self.degrade
+        if dg is None:
+            return ()
+        backlog = sum(len(q) for q in self._queues.values())
+        capacity = max(1, len(self._queues) * self.cfg.queue_depth)
+        emas = [t.arrival_ema for t in self._telemetry.values()]
+        dg.observe(
+            backlog / capacity,
+            arrival_ema=sum(emas) / len(emas) if emas else 0.0,
+            service_s=self._last_tick_wall,
+        )
+        pol = dg.policy
+        qpol = pol.queue_policy or self.cfg.queue_policy
+        for q in self._queues.values():
+            q.policy = qpol
+            if pol.stale_after_ticks is not None:
+                dg.n_shed += q.shed_stale(
+                    self.n_ticks - pol.stale_after_ticks
+                )
+        if self.cfg.k_ladder is not None and self._controllers:
+            cap = max(0, len(self.cfg.k_ladder) - 1 - pol.rung_cap_down)
+            for ctl in self._controllers.values():
+                ctl.set_rung_cap(cap)
+        if self._tiered and pol.defer_tiers > 0:
+            ntiers = len(self.pool.tiers)
+            # Never defer the hot tier: someone must keep serving.
+            return tuple(range(max(1, ntiers - pol.defer_tiers), ntiers))
+        return ()
 
     def _slot_mask(self, tier: int, sids) -> jax.Array:
         tp = self._tier_pool(tier)
@@ -454,9 +509,8 @@ class StreamServer:
             rb = tick_readback(
                 [stats_by_tier[t] for t in tiers_stepped]
             )
-            self._sched.observe_tick(
-                keys, time.monotonic() - self._tick_t0
-            )
+            self._last_tick_wall = time.monotonic() - self._tick_t0
+            self._sched.observe_tick(keys, self._last_tick_wall)
             base, off = {}, 0
             for t in tiers_stepped:
                 base[t] = off
@@ -578,7 +632,7 @@ class StreamServer:
         Returns the session ids stepped this tick.  A tick with no
         pending work still advances the clock and the idle accounting.
         """
-        ready = self._pop_ready()
+        ready = self._pop_ready(self._degrade_step())
         if not ready:
             self._finish({}, {})
             return []
@@ -609,7 +663,7 @@ class StreamServer:
         ticks = 0
         self._refill(iters)
         while iters or any(len(q) for q in self._queues.values()):
-            ready = self._pop_ready()
+            ready = self._pop_ready(self._degrade_step())
             inflight = self._dispatch(ready) if ready else None
             self._refill(iters)  # overlaps the dispatched compute
             if inflight is not None:
@@ -656,6 +710,12 @@ class StreamServer:
             + sum(q.n_dropped for q in self._queues.values()),
             "n_dispatches": self.n_dispatches,
             "n_coalesced": self._sched.n_coalesced,
+            "n_shed_stale": (
+                0 if self.degrade is None else self.degrade.n_shed
+            ),
+            "degrade_level": (
+                0 if self.degrade is None else self.degrade.level
+            ),
             "n_migrations": (
                 self.pool.n_migrations + self.pool.n_swaps
                 if self._tiered else 0

@@ -19,10 +19,17 @@ per-stream :class:`~repro.serve.ingest.ChunkQueue`:
                                                      RESUME reconnect with
                                                      windowed gap replay
   TraceWriter, TraceReader, TraceRecord,
-  record_session, replay                  (trace)    append-only .wtrace
+  record_session, record_streams, replay  (trace)    append-only .wtrace
                                                      record / playback
-                                                     (as-fast-as-possible
-                                                     or original-timestamp)
+                                                     (as-fast-as-possible,
+                                                     original-timestamp, or
+                                                     multi-stream with tick
+                                                     boundaries preserved)
+  FaultyTransport, FaultPlan              (fault)    seeded lossy-link
+                                                     injector: drop / dup /
+                                                     reorder / corrupt /
+                                                     truncate on a
+                                                     deterministic schedule
   LoadConfig, LoadGen, run_load           (loadgen)  seeded Poisson /
                                                      log-normal synthetic
                                                      traffic driver
@@ -50,9 +57,11 @@ _LAZY = {
     "encode_control": "repro.wire.codec",
     "decode_control": "repro.wire.codec",
     "encode_resume": "repro.wire.codec",
+    "encode_credit": "repro.wire.codec",
     "encode_reply": "repro.wire.codec",
     "decode_reply": "repro.wire.codec",
     "decode_message": "repro.wire.codec",
+    "STATUS_REASONS": "repro.wire.codec",
     "IngestServer": "repro.wire.server",
     "Loopback": "repro.wire.server",
     "WireClient": "repro.wire.server",
@@ -62,7 +71,10 @@ _LAZY = {
     "TraceReader": "repro.wire.trace",
     "TraceRecord": "repro.wire.trace",
     "record_session": "repro.wire.trace",
+    "record_streams": "repro.wire.trace",
     "replay": "repro.wire.trace",
+    "FaultyTransport": "repro.wire.fault",
+    "FaultPlan": "repro.wire.fault",
     "LoadConfig": "repro.wire.loadgen",
     "LoadGen": "repro.wire.loadgen",
     "run_load": "repro.wire.loadgen",

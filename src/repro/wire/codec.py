@@ -30,7 +30,11 @@ Two small fixed-size companions share the transport framing:
   for one stream id — the ingest server maps them to slot admit/evict —
   plus ``RESUME`` (one extra u64: the client's seq cursor), which
   re-binds a dropped connection to its live or just-restored slot and
-  tells the client where to start replaying its send window;
+  tells the client where to start replaying its send window, and
+  ``CREDIT`` (one extra u64: the requested window), the client half of
+  credit-based flow control — the server's ACK carries the number of
+  credits actually granted (sized to the stream's queue headroom, so a
+  paced producer never runs into ``NACK_BACKPRESSURE``);
 * **replies** (magic ``b"EPWR"``): per-message ACK/NACK with a status
   code, so producers see backpressure (``NACK_BACKPRESSURE``) and
   admission failures (``NACK_POOL_FULL``) instead of silent drops.
@@ -76,10 +80,19 @@ CONTROL = struct.Struct("<4sHHQ")
 # client has NOT seen ACKed (``last_acked + 1``, so a fresh session —
 # last_acked = -1 — still packs as unsigned 0).
 RESUME = struct.Struct("<4sHHQQ")
+# CREDIT shares the RESUME layout; the extra u64 is the number of send
+# credits the client requests.  The server's ACK carries the grant.
+CREDIT = RESUME
 OP_OPEN = 1
 OP_CLOSE = 2
 OP_RESUME = 3
-_OPS = {OP_OPEN: "open", OP_CLOSE: "close", OP_RESUME: "resume"}
+OP_CREDIT = 4
+_OPS = {
+    OP_OPEN: "open",
+    OP_CLOSE: "close",
+    OP_RESUME: "resume",
+    OP_CREDIT: "credit",
+}
 
 # magic, version, status, stream_id, seq
 REPLY = struct.Struct("<4sHHQQ")
@@ -100,6 +113,43 @@ STATUS_NAMES = {
     NACK_DUP_STREAM: "dup_stream",
     NACK_OUT_OF_ORDER: "out_of_order",
     NACK_SEQ_GAP: "seq_gap",
+}
+# One producer-visible sentence per status code: what happened and what
+# the producer should do about it.  Every code in STATUS_NAMES has
+# exactly one entry (pinned by a table-driven test), so client logs and
+# error messages never invent their own wording per call site.
+STATUS_REASONS = {
+    ACK: "accepted",
+    NACK_BACKPRESSURE: (
+        "stream queue is full; retry the same seq after a serving tick "
+        "(or pace on a CREDIT window to avoid the round trip)"
+    ),
+    NACK_POOL_FULL: (
+        "no free serving slot for a new stream; close a stream, retry "
+        "later, or serve with an eviction policy"
+    ),
+    NACK_UNKNOWN_STREAM: (
+        "stream id is not open on this server (never opened, closed, "
+        "or evicted); send OPEN — or RESUME if the slot may be live"
+    ),
+    NACK_BAD_FRAME: (
+        "message failed to decode (truncated, corrupt CRC, bad magic "
+        "or version) or is unserveable as submitted; re-encode and "
+        "resend the same seq"
+    ),
+    NACK_DUP_STREAM: (
+        "stream id is already open; pick a fresh id (or RESUME the "
+        "existing session instead of re-opening it)"
+    ),
+    NACK_OUT_OF_ORDER: (
+        "seq regressed or duplicated a frame the server already "
+        "served; the frame was not re-served"
+    ),
+    NACK_SEQ_GAP: (
+        "strict-seq stream is missing earlier seqs; the reply's seq is "
+        "the first missing one — retransmit [reply.seq, attempted seq) "
+        "in order, then resend the attempted frame"
+    ),
 }
 
 # Wire dtype codes.  Fixed small vocabulary: the codec fails fast on a
@@ -147,10 +197,11 @@ class WireFrame(NamedTuple):
 
 
 class ControlFrame(NamedTuple):
-    op: int  # OP_OPEN / OP_CLOSE / OP_RESUME
+    op: int  # OP_OPEN / OP_CLOSE / OP_RESUME / OP_CREDIT
     stream_id: int
-    # RESUME only: the first seq the client has not seen ACKed
-    # (``last_acked + 1``).  0 for OPEN/CLOSE.
+    # RESUME: the first seq the client has not seen ACKed
+    # (``last_acked + 1``).  CREDIT: the requested credit count.
+    # 0 for OPEN/CLOSE.
     seq: int = 0
 
     @property
@@ -339,6 +390,10 @@ def encode_control(op: int, stream_id: int) -> bytes:
         raise WireFormatError(
             "RESUME carries a seq cursor; use encode_resume()"
         )
+    if op == OP_CREDIT:
+        raise WireFormatError(
+            "CREDIT carries a requested window; use encode_credit()"
+        )
     if op not in _OPS:
         raise WireFormatError(f"unknown control op {op}")
     return CONTROL.pack(CTRL_MAGIC, WIRE_VERSION, op, stream_id)
@@ -359,6 +414,24 @@ def encode_resume(stream_id: int, last_acked_seq: int) -> bytes:
     )
 
 
+def encode_credit(stream_id: int, requested: int) -> bytes:
+    """Request send credits for one stream.
+
+    ``requested`` is the window the client would like; the server's ACK
+    reply carries the number actually granted in its ``seq`` field —
+    ``min(requested, queue headroom - credits already outstanding)``,
+    possibly 0 when the stream's queue is full.  A granted credit is
+    consumed by one accepted data frame.
+    """
+    if requested < 1:
+        raise WireFormatError(
+            f"credit request must be >= 1, got {requested}"
+        )
+    return CREDIT.pack(
+        CTRL_MAGIC, WIRE_VERSION, OP_CREDIT, stream_id, requested
+    )
+
+
 def decode_control(buf: Buffer) -> ControlFrame:
     if len(buf) < CONTROL.size:
         raise WireFormatError(
@@ -368,12 +441,14 @@ def decode_control(buf: Buffer) -> ControlFrame:
         bytes(memoryview(buf)[: CONTROL.size])
     )
     _check_magic_version(magic, CTRL_MAGIC, version)
-    if op == OP_RESUME:
-        if len(buf) < RESUME.size:
+    if op in (OP_RESUME, OP_CREDIT):
+        wide = RESUME if op == OP_RESUME else CREDIT
+        name = _OPS[op].upper()
+        if len(buf) < wide.size:
             raise WireFormatError(
-                f"truncated RESUME frame: {len(buf)} < {RESUME.size}"
+                f"truncated {name} frame: {len(buf)} < {wide.size}"
             )
-        *_, seq = RESUME.unpack_from(bytes(memoryview(buf)[: RESUME.size]))
+        *_, seq = wide.unpack_from(bytes(memoryview(buf)[: wide.size]))
         return ControlFrame(op, stream_id, seq)
     if op not in _OPS:
         raise WireFormatError(f"unknown control op {op}")

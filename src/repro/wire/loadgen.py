@@ -23,6 +23,14 @@ The generator drives an :class:`~repro.wire.server.IngestServer`
 through its loopback transport with real encoded wire frames (payloads
 drawn round-robin from a pre-rendered chunk bank), so the measured path
 is codec → demux → queue → pool step, end to end.
+
+Pass a ``trace_writer`` (a :class:`~repro.wire.trace.TraceWriter`) to
+record every message the generator sends — OPENs, data frames, CLOSEs,
+in their exact interleaved order, each stamped with the logical-tick
+timestamp ``tick * chunk_period_ns``.  Replaying that trace through a
+fresh ingest server with ``on_advance=ingest.tick`` (see
+:func:`repro.wire.trace.replay`) reproduces the original multi-stream
+run bit-exactly: same admissions, same NACKs, same per-stream state.
 """
 
 from __future__ import annotations
@@ -60,6 +68,8 @@ class LoadGen:
         cfg: LoadConfig,
         bank: Sequence[SensorChunk],
         ingest: IngestServer,
+        *,
+        trace_writer=None,
     ):
         if not bank:
             raise ValueError("payload bank is empty")
@@ -70,6 +80,9 @@ class LoadGen:
         self.cfg = cfg
         self.ingest = ingest
         self.loop = Loopback(ingest)
+        #: Optional TraceWriter: every sent message is appended with
+        #: the logical-tick timestamp before it goes on the wire.
+        self.trace_writer = trace_writer
         # Pre-encode the payload bank once: the generator measures the
         # server, so per-send work is one header re-pack + a join, not
         # a fresh device_get + CRC of megabytes of pixels per frame.
@@ -120,6 +133,14 @@ class LoadGen:
         )
         return max(1, int(round(n)))
 
+    def _send(self, msg: bytes, tick: int) -> codec.Reply:
+        """Send one message, recording it first when tracing."""
+        if self.trace_writer is not None:
+            self.trace_writer.append(
+                msg, timestamp_ns=tick * self.cfg.chunk_period_ns
+            )
+        return self.loop.send(msg)
+
     def _count_nack(self, reply: codec.Reply) -> None:
         if not reply.ok:
             self.nack_counts[reply.status_name] = (
@@ -139,8 +160,8 @@ class LoadGen:
             for _ in range(n_new):
                 sid = self.n_sessions
                 self.n_sessions += 1
-                reply = self.loop.send(
-                    codec.encode_control(codec.OP_OPEN, sid)
+                reply = self._send(
+                    codec.encode_control(codec.OP_OPEN, sid), t
                 )
                 if reply.ok:
                     self.live[sid] = [
@@ -158,8 +179,8 @@ class LoadGen:
             for sid in list(self.live):
                 length, sent, _ = self.live[sid]
                 for _ in range(min(n_send, length - sent)):
-                    reply = self.loop.send(
-                        self._frame(sid, self.live[sid][1], t)
+                    reply = self._send(
+                        self._frame(sid, self.live[sid][1], t), t
                     )
                     tick_sent += 1
                     self.counters["n_frames_sent"] += 1
@@ -175,8 +196,8 @@ class LoadGen:
             for sid in list(self.live):
                 length, sent, _ = self.live[sid]
                 if sent >= length:
-                    reply = self.loop.send(
-                        codec.encode_control(codec.OP_CLOSE, sid)
+                    reply = self._send(
+                        codec.encode_control(codec.OP_CLOSE, sid), t
                     )
                     self._count_nack(reply)
                     del self.live[sid]

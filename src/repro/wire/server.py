@@ -35,6 +35,28 @@ exponential-backoff redials.  Forward seq gaps are always *counted*
 per stream (``n_seq_gaps``); under ``strict_seq=True`` they are also
 refused with ``NACK_SEQ_GAP`` so a lossy uplink must retransmit.
 
+**Selective retransmit**: a strict-mode ``NACK_SEQ_GAP`` reply carries
+the *first missing* seq, so the missing range is exactly
+``[reply.seq, attempted_seq)``.  :class:`ResumableSession` replays that
+slice from its bounded window (no reconnect needed) and then retries
+the refused frame — a lossy link converges to the bit-identical stream
+as long as the loss does not outlive the window.  Damaged frames
+(``NACK_BAD_FRAME``: corruption or truncation in flight) are resent
+from the window's pristine copy, and a ``NACK_OUT_OF_ORDER`` on a seq
+the session itself sent is absorbed as "already served" (the server's
+duplicate signal for a late-arriving copy).
+
+**Credit flow control**: a ``CREDIT`` control frame asks the server for
+send credits; the grant (the ACK's ``seq``) is sized to the stream's
+queue headroom minus credits already outstanding, and each accepted
+data frame consumes one.  A :class:`ResumableSession` constructed with
+``credit=N`` paces itself on the granted window — requesting more only
+when exhausted, draining a tick on a zero grant — so a well-behaved
+producer never trips ``NACK_BACKPRESSURE`` at all.  Credit-unaware
+producers are unaffected (credits are cooperative pacing; the queue
+bound still backstops them).  Outstanding grants are voided by RESUME:
+a reconnecting client starts from zero credit.
+
 The serving *clock* stays with the caller: the ingest server never
 steps the pool on its own — call :meth:`tick` (or
 ``StreamServer.tick``) at the serving cadence.
@@ -86,8 +108,14 @@ class IngestServer:
         self.n_closed = 0
         self.n_resumed = 0
         self.n_dup_suppressed = 0
+        self.n_credit_requests = 0
+        self.n_credit_granted = 0
         self.nacks: Dict[str, int] = {}
         self._seq_seen: Dict[int, int] = {}
+        # Credits granted but not yet consumed, per stream.  A grant is
+        # bounded by queue headroom minus this balance, so the sum of
+        # outstanding credits never exceeds the space that exists.
+        self._credit: Dict[int, int] = {}
         # Per-stream count of *missing* seqs skipped forward past
         # (telemetry even in lax mode; retained after close so a bench
         # can report end-of-run loss).
@@ -146,9 +174,12 @@ class IngestServer:
         if gap > 0 and self.strict_seq:
             # Strict mode refuses the jump without serving it — the
             # producer must retransmit the missing seqs (count before
-            # refusing so the loss is visible either way).
+            # refusing so the loss is visible either way).  The NACK's
+            # seq is the FIRST missing seq, so the client knows the
+            # missing range is exactly [reply.seq, attempted_seq) and
+            # can replay that slice from its window.
             self._count_gap(sid, gap)
-            return self._nack(codec.NACK_SEQ_GAP, sid, frame.seq)
+            return self._nack(codec.NACK_SEQ_GAP, sid, last + 1)
         try:
             ok = self.srv.submit(sid, frame.chunk)
         except (ValueError, KeyError):
@@ -164,6 +195,9 @@ class IngestServer:
             self._count_gap(sid, gap)
         self._seq_seen[sid] = frame.seq
         self.n_frames_in += 1
+        out = self._credit.get(sid)
+        if out:  # each accepted frame consumes one outstanding credit
+            self._credit[sid] = out - 1
         return codec.encode_reply(codec.ACK, sid, frame.seq)
 
     def _count_gap(self, sid: int, gap: int) -> None:
@@ -199,10 +233,27 @@ class IngestServer:
             else:
                 return self._nack(codec.NACK_UNKNOWN_STREAM, sid)
             self._resume_cursor[sid] = cursor
+            # Grants die with the connection they were issued on: the
+            # resumed client starts from zero and re-requests.
+            self._credit.pop(sid, None)
             self.n_resumed += 1
             # The ACK's seq is the NEXT seq the server expects; the
             # client replays its unacked window from there.
             return codec.encode_reply(codec.ACK, sid, cursor + 1)
+        if ctl.op == codec.OP_CREDIT:
+            if sid not in self._seq_seen:
+                return self._nack(codec.NACK_UNKNOWN_STREAM, sid)
+            self.n_credit_requests += 1
+            q = self.srv._queues.get(sid)
+            headroom = 0 if q is None else max(0, q.maxlen - len(q))
+            outstanding = self._credit.get(sid, 0)
+            grant = max(0, min(ctl.seq, headroom - outstanding))
+            if grant:
+                self._credit[sid] = outstanding + grant
+                self.n_credit_granted += grant
+            # A zero grant is still an ACK — "no space yet, ask again
+            # after a tick" — not an error.
+            return codec.encode_reply(codec.ACK, sid, grant)
         # OP_CLOSE (decode_control rejects anything else)
         if sid not in self._seq_seen:
             return self._nack(codec.NACK_UNKNOWN_STREAM, sid)
@@ -213,6 +264,7 @@ class IngestServer:
         self.srv.close(sid)
         del self._seq_seen[sid]
         self._resume_cursor.pop(sid, None)
+        self._credit.pop(sid, None)
         self.n_closed += 1
         return codec.encode_reply(codec.ACK, sid)
 
@@ -221,6 +273,7 @@ class IngestServer:
         (idle/LRU policies); later frames NACK ``unknown_stream``."""
         self._seq_seen.pop(stream_id, None)
         self._resume_cursor.pop(stream_id, None)
+        self._credit.pop(stream_id, None)
 
     def tick(self):
         """Run one serving tick under the ingest lock (safe alongside
@@ -231,6 +284,7 @@ class IngestServer:
             for sid in [s for s in self._seq_seen if s not in live]:
                 del self._seq_seen[sid]
                 self._resume_cursor.pop(sid, None)
+                self._credit.pop(sid, None)
             return stepped
 
     def counters(self) -> Dict[str, int]:
@@ -241,6 +295,9 @@ class IngestServer:
             "n_closed": self.n_closed,
             "n_resumed": self.n_resumed,
             "n_dup_suppressed": self.n_dup_suppressed,
+            "n_credit_requests": self.n_credit_requests,
+            "n_credit_granted": self.n_credit_granted,
+            "credit_outstanding": sum(self._credit.values()),
             "n_out_of_order": self.nacks.get("out_of_order", 0),
             "n_seq_gaps": sum(self.seq_gaps_by_stream.values()),
             "seq_gaps_by_stream": dict(self.seq_gaps_by_stream),
@@ -337,6 +394,12 @@ class WireClient:
     (:class:`ResumableSession` calls it before the RESUME handshake).
     ``sleep`` is injectable so tests can record the backoff schedule
     without waiting it out.
+
+    ``timeout`` applies to every socket operation: a server that
+    accepts the connection but stops reading or replying (wedged, not
+    dead) surfaces after ``timeout`` seconds as a retriable
+    ``ConnectionError`` — routing into the same reconnect/backoff path
+    as a dropped connection — instead of blocking the producer forever.
     """
 
     def __init__(
@@ -360,6 +423,7 @@ class WireClient:
         self.backoff_max = backoff_max
         self._sleep = sleep
         self.n_reconnects = 0
+        self.n_timeouts = 0
         self.sock = self._connect()
 
     def _connect(self) -> socket.socket:
@@ -397,10 +461,24 @@ class WireClient:
         )
 
     def send(self, msg: bytes) -> codec.Reply:
-        self.sock.sendall(frame_message(msg))
-        head = self._recv_exact(LENGTH_PREFIX.size)
-        (nbytes,) = LENGTH_PREFIX.unpack(head)
-        return codec.decode_reply(self._recv_exact(nbytes))
+        try:
+            self.sock.sendall(frame_message(msg))
+            head = self._recv_exact(LENGTH_PREFIX.size)
+            (nbytes,) = LENGTH_PREFIX.unpack(head)
+            return codec.decode_reply(self._recv_exact(nbytes))
+        except socket.timeout:
+            # A wedged server (accepting but never replying) must look
+            # like a dropped connection, not a hung producer.  The
+            # socket may hold a half-sent or half-received message, so
+            # it cannot be reused — close it; reconnect() redials.
+            self.n_timeouts += 1
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+            raise ConnectionError(
+                f"ingest server unresponsive for {self._timeout}s"
+            ) from None
 
     def _recv_exact(self, n: int) -> bytes:
         out = b""
@@ -443,6 +521,26 @@ class ResumableSession:
     ``drain`` (typically ``IngestServer.tick``) is invoked on
     backpressure NACKs to free queue space before retrying — without
     it, backpressure replies are returned to the caller as-is.
+
+    Loss recovery beyond reconnects (all satisfied from the same
+    bounded window):
+
+    * ``NACK_SEQ_GAP`` (strict-seq server missing earlier frames): the
+      reply's seq is the first missing one; the session replays exactly
+      ``[reply.seq, refused_seq)`` in order, then retries the refused
+      frame (``n_retransmits`` counts the replayed frames);
+    * ``NACK_BAD_FRAME`` (damaged in flight): the window's pristine
+      bytes are resent (``n_damage_retries``);
+    * ``NACK_OUT_OF_ORDER`` on a seq this session sent: the server
+      already served it (a duplicated or late-arriving copy of our own
+      send) — absorbed as an ACK (``n_already_served``).  Producers
+      that hand-roll seqs on a raw transport still see the NACK.
+
+    With ``credit=N`` the session paces on credit-based flow control:
+    before each fresh send it holds at least one granted credit,
+    requesting ``N`` more when exhausted (a zero grant means the queue
+    is full — ``drain`` is invoked and the request retried).  RESUME
+    voids outstanding grants, so the balance resets on reconnect.
     """
 
     def __init__(
@@ -453,16 +551,26 @@ class ResumableSession:
         window: int = 32,
         drain: Optional[Callable[[], Any]] = None,
         max_retries: int = 16,
+        credit: Optional[int] = None,
     ):
+        if credit is not None and credit < 1:
+            raise ValueError(f"credit window must be >= 1, got {credit}")
         self.transport = transport
         self.stream_id = int(stream_id)
         self.drain = drain
         self.max_retries = max_retries
+        self.credit_window = credit
+        self._credits = 0
         self._window: Deque[Tuple[int, bytes]] = deque(maxlen=window)
         self.next_seq = 0
         self.last_acked = -1
         self.n_resumes = 0
         self.n_replayed = 0
+        self.n_retransmits = 0
+        self.n_damage_retries = 0
+        self.n_already_served = 0
+        self.n_credit_requests = 0
+        self.n_credit_waits = 0
 
     @property
     def unacked(self) -> Tuple[int, ...]:
@@ -480,6 +588,8 @@ class ResumableSession:
         )
 
     def send_chunk(self, chunk, *, timestamp_ns: int = 0) -> codec.Reply:
+        if self.credit_window is not None:
+            self._ensure_credit()
         seq = self.next_seq
         self.next_seq += 1
         msg = codec.encode_chunk(
@@ -489,7 +599,46 @@ class ResumableSession:
             timestamp_ns=timestamp_ns,
         )
         self._window.append((seq, msg))
-        return self._deliver(seq, msg)
+        reply = self._deliver(seq, msg)
+        if self.credit_window is not None and reply.ok:
+            self._credits = max(0, self._credits - 1)
+        return reply
+
+    def _ensure_credit(self) -> None:
+        """Block (draining) until at least one granted credit is held."""
+        for _ in range(self.max_retries):
+            if self._credits > 0:
+                return
+            try:
+                reply = self.transport.send(
+                    codec.encode_credit(self.stream_id, self.credit_window)
+                )
+            except (ConnectionError, OSError):
+                self.resume()  # zeroes the balance; re-request below
+                continue
+            self.n_credit_requests += 1
+            if not reply.ok:
+                raise ResumeError(
+                    f"stream {self.stream_id}: CREDIT refused "
+                    f"({reply.status_name})"
+                )
+            if reply.seq > 0:
+                self._credits += reply.seq
+                return
+            # Zero grant: the stream's queue is full.  A serving tick
+            # frees space; without a drain hook there is nothing to
+            # wait on, so surface the starvation.
+            self.n_credit_waits += 1
+            if self.drain is None:
+                raise ResumeError(
+                    f"stream {self.stream_id}: zero credit granted and "
+                    f"no drain hook to free queue space"
+                )
+            self.drain()
+        raise ResumeError(
+            f"stream {self.stream_id}: credit starved after "
+            f"{self.max_retries} requests"
+        )
 
     def _deliver(self, seq: int, msg: bytes) -> codec.Reply:
         for _ in range(self.max_retries):
@@ -511,11 +660,45 @@ class ResumableSession:
             ):
                 self.drain()
                 continue
+            if reply.status == codec.NACK_SEQ_GAP:
+                # Selective retransmit: the server is missing exactly
+                # [reply.seq, seq) — replay that slice, retry this one.
+                self._retransmit(reply.seq, seq)
+                continue
+            if reply.status == codec.NACK_BAD_FRAME:
+                # Damaged in flight; the window holds pristine bytes.
+                self.n_damage_retries += 1
+                continue
+            if reply.status == codec.NACK_OUT_OF_ORDER:
+                # A duplicated/late copy of our own send already served
+                # this seq: the NACK is the server's duplicate signal.
+                self.n_already_served += 1
+                self.last_acked = max(self.last_acked, seq)
+                return codec.Reply(codec.ACK, self.stream_id, seq)
             return reply
         raise ResumeError(
             f"stream {self.stream_id}: seq {seq} undeliverable after "
             f"{self.max_retries} attempts"
         )
+
+    def _retransmit(self, first_missing: int, upto_seq: int) -> None:
+        """Replay the ``[first_missing, upto_seq)`` slice the server
+        reported missing, in seq order, from the bounded window."""
+        gap = [
+            (s, m) for s, m in self._window
+            if first_missing <= s < upto_seq
+        ]
+        if not gap or gap[0][0] != first_missing:
+            have = gap[0][0] if gap else upto_seq
+            raise ResumeError(
+                f"stream {self.stream_id}: server is missing seqs from "
+                f"{first_missing} but the replay window starts at "
+                f"{have} — the loss outlived the "
+                f"{self._window.maxlen}-frame window"
+            )
+        for s, m in gap:
+            self._replay_one(s, m)
+        self.n_retransmits += len(gap)
 
     def resume(self) -> int:
         """Reconnect + RESUME handshake + replay the gap the server
@@ -527,6 +710,8 @@ class ResumableSession:
         """
         if hasattr(self.transport, "reconnect"):
             self.transport.reconnect()
+        # RESUME voids any credit granted on the dropped connection.
+        self._credits = 0
         reply = self.transport.send(
             codec.encode_resume(self.stream_id, self.last_acked)
         )
@@ -565,6 +750,19 @@ class ResumableSession:
             ):
                 self.drain()
                 continue
+            if reply.status == codec.NACK_SEQ_GAP:
+                # The replayed frame itself was lost in flight and a
+                # later one arrived first: recover the nested gap.
+                self._retransmit(reply.seq, seq)
+                continue
+            if reply.status == codec.NACK_BAD_FRAME:
+                self.n_damage_retries += 1
+                continue
+            if reply.status == codec.NACK_OUT_OF_ORDER:
+                # A late copy already served it; the replay is done.
+                self.n_already_served += 1
+                self.last_acked = max(self.last_acked, seq)
+                return codec.Reply(codec.ACK, self.stream_id, seq)
             raise ResumeError(
                 f"stream {self.stream_id}: replay of seq {seq} refused "
                 f"({reply.status_name})"

@@ -31,7 +31,15 @@ from __future__ import annotations
 
 import struct
 import time
-from typing import Callable, Iterable, Iterator, List, NamedTuple, Optional
+from typing import (
+    Callable,
+    Dict,
+    Iterable,
+    Iterator,
+    List,
+    NamedTuple,
+    Optional,
+)
 
 from repro.api.types import SensorChunk
 from repro.wire import codec
@@ -163,6 +171,65 @@ def record_session(
         return w.n_records
 
 
+def record_streams(
+    feeds: Dict[int, Iterable[SensorChunk]],
+    path: str,
+    *,
+    chunk_period_ns: int = 0,
+    open_close: bool = True,
+    start_ns: int = 0,
+) -> int:
+    """Record several interleaved streams into one session trace.
+
+    ``feeds`` maps ``stream_id -> chunks``.  Streams are interleaved
+    round-robin in the dict's iteration order: each "tick" takes the
+    next chunk from every still-live stream, all stamped with the same
+    record timestamp (``start_ns + tick * chunk_period_ns``), matching
+    the one-chunk-per-stream-per-tick shape the load generator offers.
+    An ``OPEN`` is recorded at a stream's first appearance and (with
+    ``open_close``) a ``CLOSE`` when its feed is exhausted, at the
+    exact positions a live multi-session client would have sent them —
+    so a replay through a fresh ingest server reproduces the original
+    interleaving (and therefore per-stream state) bit-exactly.
+    Returns the record count.
+    """
+    with TraceWriter(path) as w:
+        iters = {int(sid): iter(chunks) for sid, chunks in feeds.items()}
+        seqs = {sid: 0 for sid in iters}
+        ts = start_ns
+        while iters:
+            done: List[int] = []
+            for sid, it in iters.items():
+                chunk = next(it, None)
+                if chunk is None:
+                    done.append(sid)
+                    continue
+                if seqs[sid] == 0 and open_close:
+                    w.append(
+                        codec.encode_control(codec.OP_OPEN, sid),
+                        timestamp_ns=ts,
+                    )
+                w.append(
+                    codec.encode_chunk(
+                        chunk,
+                        stream_id=sid,
+                        seq=seqs[sid],
+                        timestamp_ns=ts,
+                    ),
+                    timestamp_ns=ts,
+                )
+                seqs[sid] += 1
+            for sid in done:
+                del iters[sid]
+                if open_close:
+                    w.append(
+                        codec.encode_control(codec.OP_CLOSE, sid),
+                        timestamp_ns=ts,
+                    )
+            ts += chunk_period_ns
+        return w.n_records
+
+
 def replay(
     source,
     send: Callable,
@@ -171,6 +238,7 @@ def replay(
     speed: float = 1.0,
     sleep: Callable[[float], None] = time.sleep,
     on_reply: Optional[Callable] = None,
+    on_advance: Optional[Callable[[], None]] = None,
 ) -> int:
     """Push a trace's messages through a transport ``send``.
 
@@ -179,14 +247,23 @@ def replay(
     ``WireClient.send``; each reply is passed to ``on_reply`` (count
     NACKs there).  ``realtime=True`` paces records by their recorded
     timestamp deltas divided by ``speed``; the default replays
-    as-fast-as-possible (the bit-exact soak mode).  Returns the number
-    of messages sent.
+    as-fast-as-possible (the bit-exact soak mode).
+
+    ``on_advance`` is called (with no arguments) *before* sending a
+    record whose ``timestamp_ns`` strictly exceeds the previous
+    record's.  Traces written by :func:`record_streams` or the load
+    generator stamp every message of one logical tick with the same
+    timestamp, so passing the ingest server's ``tick`` here re-runs
+    the original tick boundaries at the original positions in the
+    message stream — the replayed server drains between ticks exactly
+    as the recorded one did.  Returns the number of messages sent.
     """
     if isinstance(source, str):
         source = TraceReader(source)
     if speed <= 0:
         raise ValueError(f"replay speed must be > 0, got {speed}")
     t0_ns: Optional[int] = None
+    prev_ns: Optional[int] = None
     wall0 = time.monotonic()
     n = 0
     for rec in source:
@@ -197,6 +274,13 @@ def replay(
             lag = due - (time.monotonic() - wall0)
             if lag > 0:
                 sleep(lag)
+        if (
+            on_advance is not None
+            and prev_ns is not None
+            and rec.timestamp_ns > prev_ns
+        ):
+            on_advance()
+        prev_ns = rec.timestamp_ns
         reply = send(rec.message)
         if on_reply is not None:
             on_reply(reply)

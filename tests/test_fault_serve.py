@@ -399,6 +399,10 @@ def _run_soak(tmp_path, fail_at, *, tiers=None, damage_newest=False):
                 s.resume()  # replay everything past the restored cursor
     while any(len(q) for q in srv._queues.values()):
         ingest.tick()
+    if ckpt is not None:
+        # An async save may still be in flight; its step_*.tmp must not
+        # be mistaken for crash debris by the cleanup assertions.
+        ckpt.wait()
     states = {
         sid: jax.tree.map(np.asarray, srv.state(sid)) for sid in chunks
     }

@@ -981,3 +981,395 @@ class TestWireClientReconnect:
         assert len(attempts) == 4  # construction + 3 redials
         assert len(sleeps) == 3
         assert cli.n_reconnects == 0
+
+
+# ---------------------------------------------------------------------------
+# Credit-based flow control + selective retransmit (strict-seq loop)
+
+
+class TestCreditFlow:
+    def _wire_server(self, **kw):
+        srv = StreamServer(
+            api.EPICCompressor(_ecfg()),
+            ServerConfig(
+                capacity=2, chunk_frames=CHUNK,
+                queue_depth=kw.pop("queue_depth", 2),
+            ),
+        )
+        ingest = IngestServer(srv, **kw)
+        return srv, ingest, Loopback(ingest)
+
+    def test_credit_codec_roundtrip(self):
+        msg = codec.encode_credit(7, 12)
+        ctl = codec.decode_control(msg)
+        assert ctl.op == codec.OP_CREDIT
+        assert ctl.op_name == "credit"
+        assert (ctl.stream_id, ctl.seq) == (7, 12)
+        kind, ctl2 = codec.decode_message(msg)
+        assert kind == "control" and ctl2 == ctl
+        with pytest.raises(codec.WireFormatError, match="encode_credit"):
+            codec.encode_control(codec.OP_CREDIT, 7)
+        with pytest.raises(codec.WireFormatError, match=">= 1"):
+            codec.encode_credit(7, 0)
+        with pytest.raises(codec.WireFormatError, match="truncated"):
+            codec.decode_control(msg[: codec.CONTROL.size])
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def test_all_control_frames_roundtrip(self, data):
+        """Property: every control op (OPEN/CLOSE/RESUME/CREDIT)
+        round-trips its stream id and payload bit-exactly."""
+        op = data.draw(st.sampled_from(
+            (codec.OP_OPEN, codec.OP_CLOSE, codec.OP_RESUME,
+             codec.OP_CREDIT)
+        ))
+        sid = data.draw(st.integers(0, 2**64 - 1))
+        if op == codec.OP_RESUME:
+            last_acked = data.draw(st.integers(-1, 2**32))
+            msg = codec.encode_resume(sid, last_acked)
+            expect_seq = last_acked + 1
+        elif op == codec.OP_CREDIT:
+            requested = data.draw(st.integers(1, 2**32))
+            msg = codec.encode_credit(sid, requested)
+            expect_seq = requested
+        else:
+            msg = codec.encode_control(op, sid)
+            expect_seq = 0
+        ctl = codec.decode_control(msg)
+        assert (ctl.op, ctl.stream_id, ctl.seq) == (op, sid, expect_seq)
+        assert ctl.op_name == codec._OPS[op]
+        kind, ctl2 = codec.decode_message(msg)
+        assert kind == "control" and ctl2 == ctl
+
+    def test_every_nack_status_has_exactly_one_reason(self):
+        """Table-driven: STATUS_REASONS covers exactly the codes in
+        STATUS_NAMES, one non-empty, distinct string each."""
+        assert set(codec.STATUS_REASONS) == set(codec.STATUS_NAMES)
+        rows = sorted(
+            (status, codec.STATUS_NAMES[status],
+             codec.STATUS_REASONS[status])
+            for status in codec.STATUS_NAMES
+        )
+        for status, name, reason in rows:
+            assert isinstance(reason, str) and reason.strip(), name
+        assert len({reason for *_, reason in rows}) == len(rows)
+
+    def test_grant_sized_to_queue_headroom(self):
+        srv, ingest, loop = self._wire_server(queue_depth=2)
+        assert loop.send(codec.encode_control(codec.OP_OPEN, 1)).ok
+        # empty queue: grant = min(requested, headroom)
+        r = loop.send(codec.encode_credit(1, 10))
+        assert r.ok and r.seq == 2
+        # the grant is outstanding: no headroom left to re-grant
+        assert loop.send(codec.encode_credit(1, 10)).seq == 0
+        chunk = _sensor_chunks(0)[0]
+        assert loop.send(codec.encode_chunk(
+            chunk, stream_id=1, seq=0, timestamp_ns=0
+        )).ok  # consumes one credit; queue now holds one chunk
+        assert loop.send(codec.encode_credit(1, 10)).seq == 0
+        ingest.tick()  # queue drains: headroom 2, outstanding 1
+        r = loop.send(codec.encode_credit(1, 10))
+        assert r.ok and r.seq == 1
+        c = ingest.counters()
+        assert c["n_credit_requests"] == 4
+        assert c["n_credit_granted"] == 3
+        assert c["credit_outstanding"] == 2
+        # unknown stream: refused with the usual NACK
+        r = loop.send(codec.encode_credit(404, 1))
+        assert r.status_name == "unknown_stream"
+
+    def test_resume_and_close_void_grants(self):
+        srv, ingest, loop = self._wire_server(queue_depth=2)
+        assert loop.send(codec.encode_control(codec.OP_OPEN, 1)).ok
+        assert loop.send(codec.encode_credit(1, 2)).seq == 2
+        assert loop.send(codec.encode_resume(1, -1)).ok
+        assert ingest.counters()["credit_outstanding"] == 0
+        # a fresh request re-grants from scratch
+        assert loop.send(codec.encode_credit(1, 2)).seq == 2
+        assert loop.send(codec.encode_control(codec.OP_CLOSE, 1)).ok
+        assert ingest.counters()["credit_outstanding"] == 0
+
+    def test_session_paces_on_credit_no_backpressure(self):
+        chunks = _sensor_chunks(7, n_frames=48)
+        # without credit: blind sends into a depth-1 queue NACK
+        srv_a, ingest_a, loop_a = self._wire_server(queue_depth=1)
+        sess_a = ResumableSession(loop_a, 3, drain=ingest_a.tick)
+        assert sess_a.open().ok
+        for c in chunks:
+            assert sess_a.send_chunk(c).ok
+        assert srv_a.n_backpressure > 0
+        # with credit: the session asks first and never hits the wall
+        srv_b, ingest_b, loop_b = self._wire_server(queue_depth=1)
+        sess_b = ResumableSession(
+            loop_b, 3, drain=ingest_b.tick, credit=4
+        )
+        assert sess_b.open().ok
+        for c in chunks:
+            assert sess_b.send_chunk(c).ok
+        assert srv_b.n_backpressure == 0
+        assert sess_b.n_credit_requests > 0
+        assert sess_b.n_credit_waits > 0  # zero grants paced via drain
+        while any(len(q) for q in srv_b._queues.values()):
+            ingest_b.tick()
+        while any(len(q) for q in srv_a._queues.values()):
+            ingest_a.tick()
+        _assert_tree_bitwise(
+            srv_a.state(3), srv_b.state(3), "credit pacing"
+        )
+
+    def test_credit_starvation_without_drain_raises(self):
+        srv, ingest, loop = self._wire_server(queue_depth=1)
+        sess = ResumableSession(loop, 2, credit=1, max_retries=3)
+        assert sess.open().ok
+        chunk = _sensor_chunks(0)[0]
+        assert sess.send_chunk(chunk).ok  # grant 1, consume 1
+        with pytest.raises(ResumeError, match="no drain hook"):
+            sess.send_chunk(chunk)  # queue full -> zero grant, no drain
+
+    def test_credit_validation(self):
+        with pytest.raises(ValueError, match="credit window"):
+            ResumableSession(object(), 1, credit=0)
+
+
+class _SwallowingTransport:
+    """Silently loses data frames with scheduled seqs (synthesizing the
+    ACK a fire-and-forget uplink would assume), delivering the rest."""
+
+    def __init__(self, loop, lose=()):
+        self.loop = loop
+        self.lose = set(lose)
+
+    def send(self, msg):
+        if bytes(memoryview(msg)[:4]) == codec.DATA_MAGIC:
+            _, _, _, sid, seq, *_ = codec.FRAME_HEADER.unpack_from(
+                bytes(msg)[: codec.FRAME_HEADER.size]
+            )
+            if seq in self.lose:
+                self.lose.discard(seq)
+                return codec.Reply(codec.ACK, sid, seq)
+        return self.loop.send(msg)
+
+
+class TestSelectiveRetransmit:
+    def _strict(self, **kw):
+        srv = StreamServer(
+            api.EPICCompressor(_ecfg()),
+            ServerConfig(capacity=2, chunk_frames=CHUNK, queue_depth=4),
+        )
+        ingest = IngestServer(srv, strict_seq=True, **kw)
+        return srv, ingest, Loopback(ingest)
+
+    def test_gap_nack_carries_first_missing_seq(self):
+        srv, ingest, loop = self._strict()
+        chunk = _sensor_chunks(0)[0]
+        assert loop.send(codec.encode_control(codec.OP_OPEN, 1)).ok
+        # nothing served yet: the first missing seq is 0
+        r = loop.send(codec.encode_chunk(
+            chunk, stream_id=1, seq=2, timestamp_ns=0
+        ))
+        assert r.status_name == "seq_gap" and r.seq == 0
+        assert loop.send(codec.encode_chunk(
+            chunk, stream_id=1, seq=0, timestamp_ns=0
+        )).ok
+        # served through 0: a jump to 3 is missing [1, 3)
+        r = loop.send(codec.encode_chunk(
+            chunk, stream_id=1, seq=3, timestamp_ns=0
+        ))
+        assert r.status_name == "seq_gap" and r.seq == 1
+
+    def test_session_replays_exactly_the_missing_slice(self):
+        chunks = _sensor_chunks(9, n_frames=48)
+        srv, ingest, loop = self._strict()
+        sess = ResumableSession(
+            _SwallowingTransport(loop, lose={1, 2}),
+            5, window=32, drain=ingest.tick,
+        )
+        assert sess.open().ok
+        for c in chunks:
+            assert sess.send_chunk(c).ok
+            ingest.tick()
+        while any(len(q) for q in srv._queues.values()):
+            ingest.tick()
+        # seqs 1 and 2 were lost in flight; seq 3's NACK named the
+        # range and exactly those two frames were replayed
+        assert sess.n_retransmits == 2
+        assert ingest.counters()["n_frames_in"] == len(chunks)
+        comp = api.EPICCompressor(_ecfg())
+        step = jax.jit(comp.step)
+        state = comp.init()
+        for c in chunks:
+            state, _ = step(state, c)
+        _assert_tree_bitwise(state, srv.state(5), "selective retransmit")
+
+    def test_loss_outliving_window_is_an_error(self):
+        chunks = _sensor_chunks(9, n_frames=40)
+        srv, ingest, loop = self._strict()
+        sess = ResumableSession(
+            _SwallowingTransport(loop, lose={0, 1}),
+            6, window=2, drain=ingest.tick,
+        )
+        assert sess.open().ok
+        assert sess.send_chunk(chunks[0]).ok  # lost, ACK synthesized
+        assert sess.send_chunk(chunks[1]).ok  # lost, ACK synthesized
+        # seq 2 pushes seq 0 out of the 2-frame window; the server's
+        # gap starts at 0, which the window can no longer supply
+        with pytest.raises(ResumeError, match="outlived"):
+            sess.send_chunk(chunks[2])
+
+
+# ---------------------------------------------------------------------------
+# Multi-stream traces: interleaving recorded and replayed bit-exactly
+
+
+class TestMultiStreamTrace:
+    def test_record_streams_message_order(self, tmp_path):
+        feeds = {
+            1: _sensor_chunks(1, n_frames=24),  # 3 chunks
+            2: _sensor_chunks(2, n_frames=16),  # 2 chunks
+        }
+        path = os.path.join(tmp_path, "multi.wtrace")
+        n = trace.record_streams(feeds, path, chunk_period_ns=1000)
+        assert n == 2 + 5 + 2  # OPENs + data + CLOSEs
+        decoded = []
+        for rec in trace.TraceReader(path):
+            kind, frame = codec.decode_message(rec.message)
+            decoded.append((
+                rec.timestamp_ns,
+                frame.op_name if kind == "control" else "data",
+                frame.stream_id,
+                frame.seq if kind == "data" else None,
+            ))
+        assert decoded == [
+            (0, "open", 1, None), (0, "data", 1, 0),
+            (0, "open", 2, None), (0, "data", 2, 0),
+            (1000, "data", 1, 1), (1000, "data", 2, 1),
+            (2000, "data", 1, 2), (2000, "close", 2, None),
+            (3000, "close", 1, None),
+        ]
+
+    def test_interleaved_replay_reaches_bitwise_state_parity(
+        self, tmp_path
+    ):
+        feeds = {
+            1: _sensor_chunks(1, n_frames=32),
+            2: _sensor_chunks(2, n_frames=24),
+        }
+        path = os.path.join(tmp_path, "multi.wtrace")
+        trace.record_streams(
+            feeds, path, chunk_period_ns=1000, open_close=False
+        )
+        srv = StreamServer(
+            api.EPICCompressor(_ecfg()),
+            ServerConfig(capacity=2, chunk_frames=CHUNK, queue_depth=2),
+        )
+        ingest = IngestServer(srv)
+        loop = Loopback(ingest)
+        for sid in feeds:
+            assert loop.send(codec.encode_control(codec.OP_OPEN, sid)).ok
+        ticks = []
+        replies = []
+        trace.replay(
+            path, loop.send,
+            on_reply=replies.append,
+            on_advance=lambda: ticks.append(ingest.tick()),
+        )
+        assert all(r.ok for r in replies)
+        assert len(ticks) == 3  # 4 distinct timestamps -> 3 boundaries
+        while any(len(q) for q in srv._queues.values()):
+            ingest.tick()
+        for sid, chunks in feeds.items():
+            comp = api.EPICCompressor(_ecfg())
+            step = jax.jit(comp.step)
+            state = comp.init()
+            for c in chunks:
+                state, _ = step(state, c)
+            _assert_tree_bitwise(
+                state, srv.state(sid), f"interleaved stream {sid}"
+            )
+
+    def _loaded_server(self, cfg, trace_writer=None):
+        srv = StreamServer(
+            api.EPICCompressor(_ecfg()),
+            ServerConfig(capacity=2, chunk_frames=CHUNK, queue_depth=1),
+        )
+        ingest = IngestServer(srv)
+        gen = LoadGen(
+            cfg, _sensor_chunks(0, n_frames=16), ingest,
+            trace_writer=trace_writer,
+        )
+        summary = gen.run()
+        return srv, ingest, summary
+
+    def test_loadgen_trace_replays_bit_exactly(self, tmp_path):
+        """The load generator's interleaved multi-stream traffic,
+        recorded via ``trace_writer``, replays through a fresh server
+        to the identical admissions, NACKs, and per-stream state."""
+        cfg = LoadConfig(
+            seed=3, ticks=8, arrival_rate=1.0,
+            session_len_mu=1.0, session_len_sigma=0.5,
+            burst_factor=2.0, burst_every=4,
+        )
+        path = os.path.join(tmp_path, "load.wtrace")
+        with trace.TraceWriter(path) as w:
+            srv1, ingest1, summary = self._loaded_server(cfg, w)
+        assert w.n_records == summary["n_frames_sent"] + (
+            summary["n_arrivals"] + summary["n_closed"]
+        )
+
+        srv2 = StreamServer(
+            api.EPICCompressor(_ecfg()),
+            ServerConfig(capacity=2, chunk_frames=CHUNK, queue_depth=1),
+        )
+        ingest2 = IngestServer(srv2)
+        loop2 = Loopback(ingest2)
+        fired = []
+        trace.replay(
+            path, loop2.send,
+            on_advance=lambda: fired.append(ingest2.tick()),
+        )
+        # ticks with no traffic leave no records; make the totals match
+        for _ in range(cfg.ticks - len(fired)):
+            ingest2.tick()
+
+        c1, c2 = ingest1.counters(), ingest2.counters()
+        assert c1 == c2
+        assert srv1.server_counters() == srv2.server_counters()
+        assert sorted(srv1.live_sessions) == sorted(srv2.live_sessions)
+        for sid in srv1.live_sessions:
+            _assert_tree_bitwise(
+                srv1.state(sid), srv2.state(sid), f"replayed stream {sid}"
+            )
+
+
+class TestWireClientTimeout:
+    def test_wedged_server_surfaces_as_retriable_connection_error(self):
+        import socket as _socket
+        import threading as _threading
+
+        srv_sock = _socket.socket()
+        try:
+            srv_sock.bind(("127.0.0.1", 0))
+        except (OSError, PermissionError) as e:  # pragma: no cover
+            pytest.skip(f"cannot bind local TCP socket: {e}")
+        srv_sock.listen(1)
+        host, port = srv_sock.getsockname()
+        accepted = []
+        t = _threading.Thread(  # accept, read nothing, never reply
+            target=lambda: accepted.append(srv_sock.accept()),
+            daemon=True,
+        )
+        t.start()
+        try:
+            client = WireClient(host, port, timeout=0.3)
+            with pytest.raises(ConnectionError, match="unresponsive"):
+                client.send(codec.encode_control(codec.OP_OPEN, 1))
+            assert client.n_timeouts == 1
+            # the poisoned socket was closed: a fresh send fails fast
+            # instead of hanging (reconnect() is the recovery path)
+            with pytest.raises(OSError):
+                client.send(codec.encode_control(codec.OP_OPEN, 1))
+        finally:
+            for conn, _ in accepted:
+                conn.close()
+            srv_sock.close()
+            t.join(timeout=2)
