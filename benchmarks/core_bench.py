@@ -176,12 +176,12 @@ def run(quick: bool = False, seed: int = 0, interpret: bool = False) -> Dict:
     except (OSError, json.JSONDecodeError):
         pass
     for row_name in ("serve", "serve[tiered]", "wire", "restore",
-                     "overload"):
+                     "overload", "obs"):
         if row_name in prev_methods:
             methods[row_name] = prev_methods[row_name]
 
     out = {
-        "schema": "epic-core-bench-v8",
+        "schema": "epic-core-bench-v9",
         "quick": quick,
         "protocol": {
             "n_frames": N_FRAMES,

@@ -232,7 +232,7 @@ def _merge_bench_core(row: Dict) -> None:
             doc = json.load(f)
     except (OSError, json.JSONDecodeError):
         doc = {"methods": {}}
-    doc["schema"] = "epic-core-bench-v8"
+    doc["schema"] = "epic-core-bench-v9"
     doc.setdefault("methods", {})["restore"] = row
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)

@@ -1,0 +1,296 @@
+"""Observability overhead: telemetry-on vs -off serving throughput.
+
+PR 10 moved every serve/wire counter into the
+:class:`~repro.obs.metrics.MetricsRegistry` and added per-tick span
+tracing (:class:`~repro.obs.trace.FlightRecorder`) plus the wire STATUS
+endpoint.  All of it is host-side Python — so the serving contracts
+(one ``device_get`` per tick, zero post-warmup retraces) must hold with
+telemetry attached, and the throughput cost must stay small.  This
+bench pins both:
+
+* the same steady-state pool-8 serve workload as ``serve_bench``
+  (no churn: lowest-variance ticks) runs in both modes — **off** (no
+  recorder, no latency histograms) and **on** (flight recorder +
+  registry-backed latency recorder attached); repeats are
+  *interleaved* (off, on, off, on, ...) and the gated
+  ``overhead_frac`` is the **minimum over the pairs**: a real
+  telemetry cost slows the on-half of every pair, while a machine-wide
+  load spike slows one pair's both halves — so the paired minimum
+  measures instrumentation, not the CI box's scheduler;
+* acceptance gates (hard asserts): telemetry overhead
+  < ``MAX_OVERHEAD_FRAC`` (5%) of frames/sec, and **zero** post-warmup
+  retraces in both modes;
+* the functional round-trips ride along: the wire ``STATUS`` frame is
+  round-tripped over the loopback transport and compared against the
+  host-side :func:`~repro.obs.status.collect_status` truth, and the
+  flight recorder's Chrome-trace dump is written, re-parsed, and
+  summarized (the same artifact a fault-soak kill point leaves).
+
+``benchmarks/run.py --only obs`` merges the ``obs`` row into the
+repo-root ``BENCH_core.json`` (schema v9) and writes the detail to
+``benchmarks/results/obs_bench.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Tuple
+
+import jax
+
+from repro import api
+from repro.core import pipeline as P
+from repro.data import synthetic as SYN
+from repro.obs import dump as obs_dump
+from repro.obs.trace import FlightRecorder
+from repro.serve import Prefetch, ServerConfig, StreamServer
+from repro.wire import codec
+from repro.wire.latency import LatencyRecorder
+from repro.wire.server import IngestServer, Loopback
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FRAME = 64
+PATCH = 16
+CHUNK_FRAMES = 8
+CAPACITY = 192
+SPARSE_K = 24
+SPARSE_PATCH_K = 16
+POOL = 8
+#: Telemetry may cost at most this fraction of telemetry-off f/s.
+MAX_OVERHEAD_FRAC = 0.05
+
+
+def _cfg() -> P.EPICConfig:
+    return P.EPICConfig(
+        frame_hw=(FRAME, FRAME), patch=PATCH, capacity=CAPACITY,
+        tau=0.10, gamma=0.015, theta=8, window=16,
+        prefilter_k=SPARSE_K, patch_k=SPARSE_PATCH_K,
+    )
+
+
+def _chunk_feed(key, n_chunks: int):
+    scfg = SYN.StreamConfig(
+        n_frames=n_chunks * CHUNK_FRAMES, hw=(FRAME, FRAME), n_obj=5
+    )
+    s, _ = SYN.generate_stream(key, scfg)
+    stream = api.SensorChunk(s.frames, s.poses, s.gazes, s.depth)
+    return list(api.iter_chunks(stream, CHUNK_FRAMES, remainder="drop"))
+
+
+def _retraces(warm_sizes: Dict, end_sizes: Dict) -> int:
+    return sum(
+        max(0, n - warm_sizes.get(k, 1)) for k, n in end_sizes.items()
+    )
+
+
+def _build(telemetry: bool) -> StreamServer:
+    srv = StreamServer(
+        api.EPICCompressor(_cfg()),
+        ServerConfig(
+            capacity=POOL, chunk_frames=CHUNK_FRAMES, queue_depth=2
+        ),
+    )
+    if telemetry:
+        srv.recorder = FlightRecorder(capacity=64)
+        srv.latency = LatencyRecorder(metrics=srv.metrics)
+    return srv
+
+
+def _one_run(telemetry: bool, seed: int, warmup: int, timed: int) -> Dict:
+    """One measured steady-state run of one mode."""
+    srv = _build(telemetry)
+    key = jax.random.PRNGKey(seed)
+    n_chunks = warmup + timed + 2
+    feeds = {
+        i: iter(Prefetch(
+            _chunk_feed(jax.random.fold_in(key, i), n_chunks)
+        ))
+        for i in range(POOL)
+    }
+    for i in range(POOL):
+        srv.admit(i)
+
+    def tick():
+        for sid in list(srv.live_sessions):
+            srv.submit(sid, next(feeds[sid]))
+        srv.tick()
+
+    for _ in range(warmup):
+        tick()
+    srv.block_until_ready()
+    warm_sizes = dict(srv.step_cache_sizes())
+
+    frames0 = srv.frames_served
+    t0 = time.perf_counter()
+    for _ in range(timed):
+        tick()
+    srv.block_until_ready()
+    wall = time.perf_counter() - t0
+
+    frames = srv.frames_served - frames0
+    retraces = _retraces(warm_sizes, srv.step_cache_sizes())
+    assert retraces == 0, (
+        f"telemetry={telemetry}: serving path retraced: "
+        f"{srv.step_cache_sizes()}"
+    )
+    run = {
+        "frames_per_sec": round(frames / wall, 2),
+        "tick_ms": round(wall / timed * 1e3, 3),
+        "post_warmup_retraces": retraces,
+    }
+    if telemetry:
+        run["ticks_recorded"] = srv.recorder.n_ticks_recorded
+        run["spans_recorded"] = srv.recorder.n_spans
+        run["latency_samples"] = srv.latency.n
+        run["_recorder"] = srv.recorder  # for the dump check
+    return run
+
+
+def _bench_modes(
+    seed: int, warmup: int, timed: int, repeats: int
+) -> Tuple[Dict, Dict, float]:
+    """Interleaved (off, on) pairs; returns each mode's best run and
+    the paired-minimum overhead fraction (see the module docstring)."""
+    best = {False: None, True: None}
+    pair_overheads = []
+    for rep in range(repeats):
+        pair = {}
+        for telemetry in (False, True):
+            run = _one_run(telemetry, seed + rep, warmup, timed)
+            pair[telemetry] = run["frames_per_sec"]
+            b = best[telemetry]
+            if b is None or run["frames_per_sec"] > b["frames_per_sec"]:
+                best[telemetry] = run
+        pair_overheads.append(1.0 - pair[True] / pair[False])
+    return best[False], best[True], round(min(pair_overheads), 4)
+
+
+def _check_status_roundtrip() -> Dict:
+    """STATUS over loopback must equal the host-side truth."""
+    from repro.obs.status import collect_status
+
+    srv = _build(telemetry=True)
+    ingest = IngestServer(srv)
+    loop = Loopback(ingest)
+    key = jax.random.PRNGKey(7)
+    chunks = _chunk_feed(key, 3)
+    assert loop.send(codec.encode_control(codec.OP_OPEN, 1)).ok
+    for seq, c in enumerate(chunks[:2]):
+        assert loop.send(codec.encode_chunk(
+            c, stream_id=1, seq=seq, timestamp_ns=0
+        )).ok
+    ingest.tick()
+
+    wire_status = loop.status()
+    with ingest.lock:
+        host_status = collect_status(ingest)
+    # identical after one JSON round-trip (collect_status stringifies
+    # its own keys, so the wire codec adds nothing)
+    host_json = json.loads(json.dumps(host_status))
+    assert wire_status == host_json, (
+        "STATUS payload diverged from host-side collect_status"
+    )
+    return {
+        "status_ok": True,
+        "status_keys": sorted(wire_status),
+        "status_tick": wire_status["tick"],
+    }
+
+
+def run(quick: bool = False, seed: int = 0) -> Dict:
+    t0 = time.time()
+    warmup = 2 if quick else 3
+    timed = 6 if quick else 12
+    repeats = 3 if quick else 4
+
+    off, on, overhead = _bench_modes(seed, warmup, timed, repeats)
+    recorder = on.pop("_recorder")
+
+    print(f"[obs] telemetry off {off['frames_per_sec']:9.1f} f/s  "
+          f"on {on['frames_per_sec']:9.1f} f/s  "
+          f"overhead {overhead * 100:+.1f}%")
+    assert overhead < MAX_OVERHEAD_FRAC, (
+        f"telemetry overhead {overhead * 100:.1f}% exceeds the "
+        f"{MAX_OVERHEAD_FRAC * 100:.0f}% budget"
+    )
+    assert on["ticks_recorded"] > 0 and on["spans_recorded"] > 0
+    assert on["latency_samples"] > 0
+
+    # The flight dump a crash handler would leave: write, re-parse,
+    # summarize.
+    os.makedirs(RESULTS, exist_ok=True)
+    dump_path = recorder.dump(os.path.join(RESULTS, "obs_flight.json"))
+    with open(dump_path) as f:
+        doc = json.load(f)
+    n_events = len(doc["traceEvents"])
+    assert n_events > 0
+    obs_dump.summarize(doc)  # must parse as a valid Chrome trace
+
+    status = _check_status_roundtrip()
+    print(f"[obs] STATUS roundtrip ok ({len(status['status_keys'])} "
+          f"top-level keys)  flight dump {n_events} events")
+
+    obs_row = {
+        "backend": "ref",
+        "pool": POOL,
+        "chunk_frames": CHUNK_FRAMES,
+        "fps_off": off["frames_per_sec"],
+        "fps_on": on["frames_per_sec"],
+        "overhead_frac": overhead,
+        "post_warmup_retraces": (
+            off["post_warmup_retraces"] + on["post_warmup_retraces"]
+        ),
+        "ticks_recorded": on["ticks_recorded"],
+        "latency_samples": on["latency_samples"],
+        "flight_dump_events": n_events,
+        "status_ok": status["status_ok"],
+    }
+    out = {
+        "schema": "epic-obs-bench-v1",
+        "quick": quick,
+        "protocol": {
+            "frame_hw": FRAME,
+            "patch": PATCH,
+            "epic_capacity": CAPACITY,
+            "chunk_frames": CHUNK_FRAMES,
+            "pool": POOL,
+            "timing": f"best of {repeats} x {timed} ticks post-warmup "
+                      f"({warmup} warmup) per mode, repeats interleaved",
+            "overhead_budget_frac": MAX_OVERHEAD_FRAC,
+            "device": jax.devices()[0].platform,
+        },
+        "telemetry_off": off,
+        "telemetry_on": on,
+        "overhead_frac": overhead,
+        "status": status,
+        "flight_dump": {"path": dump_path, "n_events": n_events},
+        "obs_row": obs_row,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    with open(os.path.join(RESULTS, "obs_bench.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    _merge_bench_core({"obs": obs_row})
+    return out
+
+
+def _merge_bench_core(rows: Dict[str, Dict]) -> None:
+    path = os.path.join(REPO_ROOT, "BENCH_core.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        doc = {"methods": {}}
+    doc["schema"] = "epic-core-bench-v9"
+    doc.setdefault("methods", {}).update(rows)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--quick" in sys.argv)

@@ -176,9 +176,13 @@ def _mult_row(r: Dict) -> Dict:
 
 def _determinism_key(r: Dict) -> Dict:
     """Everything that must be bit-identical across same-seed runs
-    (latency timings and wall-clock are excluded by construction)."""
+    (latency timings and wall-clock are excluded by construction;
+    ``load["rtt"]`` carries wall-clock percentiles, so only its
+    deterministic sample count participates)."""
+    load = dict(r["load"])
+    load["rtt"] = load["rtt"]["count"]
     return {
-        "load": r["load"],
+        "load": load,
         "server": {
             k: v for k, v in r["server"].items() if k != "wall_s"
         },
@@ -194,7 +198,7 @@ def _merge_bench_core(row: Dict) -> None:
             doc = json.load(f)
     except (OSError, json.JSONDecodeError):
         doc = {"methods": {}}
-    doc["schema"] = "epic-core-bench-v8"
+    doc["schema"] = "epic-core-bench-v9"
     doc.setdefault("methods", {})["overload"] = row
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)

@@ -231,7 +231,7 @@ def _merge_bench_core(rows: Dict[str, Dict]) -> None:
     # v7 only adds rows/fields on top of v6 (restore row, wire
     # n_seq_gaps) — core rows are identical under both, so any merge
     # may relabel the file in place.
-    doc["schema"] = "epic-core-bench-v8"
+    doc["schema"] = "epic-core-bench-v9"
     doc.setdefault("methods", {}).update(rows)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)

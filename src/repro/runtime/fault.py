@@ -20,6 +20,7 @@ matters for correctness of the recovery path:
 
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import (
@@ -142,17 +143,51 @@ class FailureInjector:
     serve-layer crash soak (``tests/test_fault_serve.py``).  Each point
     fires exactly once, so the recovery path's *replay* of the same
     point does not re-crash.
+
+    With a :class:`~repro.obs.trace.FlightRecorder` attached
+    (``recorder=`` + ``dump_dir=``), every kill point writes the
+    recorder's retained tick window as a Chrome-trace post-mortem
+    (``flight-<point>.json``) *before* the injected
+    :class:`WorkerFailure` propagates — the crash the soak exercises
+    leaves the same artifact a production crash handler would.  Dump
+    failures never mask the injected fault.
     """
 
-    def __init__(self, fail_at: Iterable[Hashable]):
+    def __init__(
+        self,
+        fail_at: Iterable[Hashable],
+        *,
+        recorder: Optional[Any] = None,
+        dump_dir: Optional[str] = None,
+    ):
         self.fail_at = set(fail_at)
         self.seen: set = set()
         self.calls = 0
+        self.recorder = recorder
+        self.dump_dir = dump_dir
+        #: Post-mortem dumps written so far, in kill order.
+        self.dump_paths: List[str] = []
+
+    def _dump(self, point: Hashable) -> None:
+        if self.recorder is None or self.dump_dir is None:
+            return
+        safe = "".join(
+            ch if ch.isalnum() or ch in "-_" else "-" for ch in str(point)
+        ).strip("-") or "point"
+        path = os.path.join(
+            self.dump_dir, f"flight-{safe}-{len(self.dump_paths)}.json"
+        )
+        try:
+            self.recorder.dump(path)
+            self.dump_paths.append(path)
+        except OSError:
+            pass  # a failed post-mortem must not mask the fault itself
 
     def maybe_fail(self, point: Hashable):
         self.calls += 1
         if point in self.fail_at and point not in self.seen:
             self.seen.add(point)
+            self._dump(point)
             raise WorkerFailure(f"injected failure at {point!r}")
 
 

@@ -29,7 +29,9 @@ bit-identical to the fixed-K run.
 
 from __future__ import annotations
 
+from collections import deque
 from typing import (
+    Any,
     Dict,
     Hashable,
     List,
@@ -68,6 +70,13 @@ class KLadderController:
         candidate count fits it with this multiplicative margin.
       what: name used in the ``start_k`` error message (callers pass
         the config field the value came from).
+      history_limit: bound on the retained ``k_trajectory`` — ``None``
+        (default) keeps the exact full history (the bitwise-parity
+        tests diff whole trajectories); an int keeps only the most
+        recent that many entries in a ring, so an all-day serve does
+        not grow host memory per chunk.  The *decision rule* is
+        unaffected either way (it reads only the current rung, never
+        the history).
     """
 
     def __init__(
@@ -77,9 +86,14 @@ class KLadderController:
         start_k: int = 0,
         shrink_margin: int = 2,
         what: str = "start_k",
+        history_limit: Optional[int] = None,
     ):
         self.ladder: Tuple[int, ...] = _registry.validate_k_ladder(ladder)
         self.shrink_margin = validate_shrink_margin(shrink_margin)
+        if history_limit is not None and history_limit < 1:
+            raise ValueError(
+                f"history_limit must be >= 1 or None, got {history_limit}"
+            )
         if start_k in self.ladder:
             self._rung = self.ladder.index(start_k)
         elif start_k == 0:
@@ -92,7 +106,11 @@ class KLadderController:
             )
         #: K used by each past chunk, in order (the controller's
         #: deterministic trajectory; exposed for tests/telemetry).
-        self.k_trajectory: List[int] = []
+        #: A plain list when unbounded, a ``deque`` ring under
+        #: ``history_limit`` — both append/iterate identically.
+        self.k_trajectory: Any = (
+            [] if history_limit is None else deque(maxlen=history_limit)
+        )
         # Highest rung update() may grow to.  The default (the top of
         # the ladder) leaves behaviour bitwise identical to an uncapped
         # controller; the degradation controller lowers it under

@@ -290,6 +290,13 @@ def save_server(
     AsyncSaver` the snapshot is taken now, the write happens off the
     tick path, and ``None`` is returned."""
     tree, meta = snapshot_server(server, ingest=ingest)
+    rec = getattr(server, "recorder", None)
+    if rec is not None:
+        rec.event(
+            "checkpoint", step=step,
+            n_sessions=len(meta["sessions"]),
+            asynchronous=saver is not None,
+        )
     if saver is None:
         return store.save(
             directory, step, tree, n_shards=n_shards,
@@ -436,9 +443,12 @@ def _restore_one(
         if sess["controller"] is not None:
             ctl = StreamServer._make_controller(compressor, config)
             ctl._rung = int(sess["controller"]["rung"])
-            ctl.k_trajectory = [
+            # extend(), not assignment: under k_trajectory_limit the
+            # fresh controller holds a bounded deque, and replacing it
+            # with a plain list would silently unbound the history.
+            ctl.k_trajectory.extend(
                 int(k) for k in sess["controller"]["k_trajectory"]
-            ]
+            )
             srv._controllers[sid] = ctl
 
         tele = StreamTelemetry(session_id=sid, **sess["telemetry"])
@@ -489,6 +499,13 @@ def _restore_one(
             for a in _WIRE_COUNTER_ATTRS:
                 setattr(ingest, a, w["counters"][a])
             ingest.nacks = dict(w["nacks"])
+    rec = getattr(srv, "recorder", None)
+    if rec is not None:
+        rec.event(
+            "resume", step=step,
+            n_sessions=len(meta["sessions"]),
+            with_ingest=with_ingest,
+        )
     return RestoredServer(srv, ingest, step)
 
 

@@ -46,8 +46,13 @@ signal cannot flap the policy.
 
 from __future__ import annotations
 
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
+from repro.obs.metrics import (
+    MetricsRegistry,
+    counter_property,
+    gauge_property,
+)
 from repro.serve.ingest import _QUEUE_POLICIES
 
 
@@ -145,18 +150,39 @@ class DegradeController:
     with ``latency_budget_s`` unset its trajectory is a pure function
     of the observed backlog sequence, so two identical runs degrade
     (and shed) identically.
+
+    The counters live in a :class:`~repro.obs.metrics.MetricsRegistry`
+    as the ``degrade_*`` family (pass ``metrics=`` — typically the
+    server's own registry — to co-locate them with ``serve_*`` and
+    ``wire_*``; a private registry backs them otherwise).  The
+    attribute API is unchanged: ``level``/``pressure``/``n_*`` are
+    properties over the same cells every export reads.
     """
 
-    def __init__(self, cfg: DegradeConfig = DegradeConfig()):
+    level = gauge_property("degrade_level", cast=int)
+    pressure = gauge_property("degrade_pressure", cast=float)
+    n_observed = counter_property("degrade_observed_total")
+    n_transitions = counter_property("degrade_transitions_total")
+    #: Chunks shed on this controller's staleness policy (the
+    #: server adds each tick's shed count).
+    n_shed = counter_property("degrade_shed_total")
+
+    def __init__(
+        self,
+        cfg: DegradeConfig = DegradeConfig(),
+        *,
+        metrics: Optional[Any] = None,
+    ):
         self.cfg = validate_degrade(cfg)
+        self.metrics = (
+            metrics if metrics is not None else MetricsRegistry()
+        )
         self.level = 0
         self.pressure = 0.0
         self._up = 0
         self._down = 0
         self.n_observed = 0
         self.n_transitions = 0
-        #: Chunks shed on this controller's staleness policy (the
-        #: server adds each tick's shed count).
         self.n_shed = 0
         self.ticks_at_level: List[int] = [0] * (len(cfg.levels) + 1)
 

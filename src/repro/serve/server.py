@@ -69,6 +69,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.api.types import SensorChunk
+from repro.obs.metrics import MetricsRegistry, counter_property
+from repro.obs.trace import NULL_SPAN
 from repro.serve.adaptive import KLadderController, RungScheduler
 from repro.serve.ingest import _QUEUE_POLICIES, ChunkQueue
 from repro.serve.slots import SlottedPool
@@ -106,6 +108,12 @@ class ServerConfig(NamedTuple):
     ``coalesce_backlog`` chunks are queued.  ``prewarm`` pre-compiles
     the admission/eviction/migration programs at construction so the
     first churn event pays only a device copy.
+
+    ``k_trajectory_limit`` bounds each stream's retained
+    ``k_trajectory`` history to the most recent that many entries
+    (``None``, the default, keeps the exact full history — what the
+    bitwise-parity tests diff).  The adaptive decision rule never reads
+    the history, so bounding it cannot change behaviour, only memory.
     """
 
     capacity: int = 8
@@ -123,10 +131,24 @@ class ServerConfig(NamedTuple):
     coalesce_rungs: bool = False
     coalesce_backlog: int = 0
     prewarm: bool = False
+    k_trajectory_limit: Optional[int] = None
 
 
 class StreamServer:
     """A live serving runtime over a slotted compressor pool."""
+
+    # Registry-backed counters (PR 10): `self.n_ticks += 1` and the
+    # checkpoint restore `setattr` path keep working, but the integer
+    # lives in a `serve_*` MetricsRegistry cell — `server_counters()`,
+    # snapshots and Prometheus export all read the same cell.
+    n_ticks = counter_property("serve_ticks_total")
+    n_admitted = counter_property("serve_admitted_total")
+    n_evicted = counter_property("serve_evicted_total")
+    n_admit_rejected = counter_property("serve_admit_rejected_total")
+    n_backpressure = counter_property("serve_backpressure_total")
+    n_dispatches = counter_property("serve_dispatches_total")
+    frames_served = counter_property("serve_frames_served_total")
+    _n_dropped_closed = counter_property("serve_dropped_closed_total")
 
     def __init__(
         self,
@@ -145,6 +167,14 @@ class StreamServer:
         if config.chunk_frames < 1:
             raise ValueError(
                 f"chunk_frames must be >= 1, got {config.chunk_frames}"
+            )
+        if (
+            config.k_trajectory_limit is not None
+            and config.k_trajectory_limit < 1
+        ):
+            raise ValueError(
+                f"k_trajectory_limit must be >= 1 or None, got "
+                f"{config.k_trajectory_limit}"
             )
         if config.queue_policy not in _QUEUE_POLICIES:
             # Checked here, not at admit time: a per-admit failure
@@ -167,6 +197,16 @@ class StreamServer:
             )
         self.cfg = config
         self.compressor = compressor
+        # The process-wide metrics registry: every serve_* counter
+        # below is a property over one of its cells, and the ingest
+        # frontier adopts it so wire_* lands in the same store.  Must
+        # exist before the first counter attribute is touched.
+        self.metrics = MetricsRegistry()
+        # Optional flight recorder (repro.obs.trace.FlightRecorder):
+        # when attached, every tick records its four phase spans and
+        # the stack's discrete events.  ``None`` keeps the hot path at
+        # two attribute reads per would-be span.
+        self.recorder: Optional[Any] = None
         if config.k_ladder is not None:
             if not hasattr(getattr(compressor, "cfg", None), "prefilter_k"):
                 raise ValueError(
@@ -234,6 +274,32 @@ class StreamServer:
         self.n_backpressure = 0
         self.n_dispatches = 0
         self.frames_served = 0
+        # Derived quantities export as *computed* gauges: reading one
+        # evaluates the same expression `server_counters()` uses, so
+        # the registry can never drift from host-side truth.
+        m = self.metrics
+        m.gauge("serve_live_streams", fn=lambda: len(self._queues))
+        m.gauge(
+            "serve_dropped_total",
+            fn=lambda: self._n_dropped_closed
+            + sum(q.n_dropped for q in self._queues.values()),
+        )
+        m.gauge("serve_coalesced_total", fn=lambda: self._sched.n_coalesced)
+        m.gauge(
+            "serve_shed_stale_total",
+            fn=lambda: 0 if self.degrade is None else self.degrade.n_shed,
+        )
+        m.gauge(
+            "serve_degrade_level",
+            fn=lambda: 0 if self.degrade is None else self.degrade.level,
+        )
+        m.gauge(
+            "serve_migrations_total",
+            fn=lambda: (
+                self.pool.n_migrations + self.pool.n_swaps
+                if self._tiered else 0
+            ),
+        )
 
     # -- tier plumbing -------------------------------------------------------
 
@@ -293,6 +359,7 @@ class StreamServer:
             tier=tier,
         )
         self.n_admitted += 1
+        self._event("admit", stream=session_id, slot=slot, tier=tier)
         return slot
 
     @staticmethod
@@ -302,6 +369,7 @@ class StreamServer:
             start_k=compressor.cfg.prefilter_k,
             shrink_margin=config.shrink_margin,
             what="cfg.prefilter_k",
+            history_limit=config.k_trajectory_limit,
         )
 
     def try_admit(self, session_id: Hashable) -> Optional[int]:
@@ -320,6 +388,7 @@ class StreamServer:
         tele = self._telemetry.pop(session_id)
         self.evicted.append(tele)
         self.n_evicted += 1
+        self._event("evict", stream=session_id, tier=tele.tier)
         return tele
 
     def _lru_session(self) -> Hashable:
@@ -351,6 +420,24 @@ class StreamServer:
             self._telemetry[session_id].n_queue_overflow += 1
             self.n_backpressure += 1
         return ok
+
+    # -- tracing hooks -------------------------------------------------------
+
+    def _span(self, name: str):
+        """A phase span on the attached recorder, or the shared no-op
+        (no allocation, no clock read) when tracing is off."""
+        rec = self.recorder
+        return NULL_SPAN if rec is None else rec.span(name)
+
+    def _event(self, name: str, **args: Any) -> None:
+        rec = self.recorder
+        if rec is not None:
+            rec.event(name, **args)
+
+    def _tick_begin(self) -> None:
+        rec = self.recorder
+        if rec is not None:
+            rec.begin_tick(self.n_ticks)
 
     # -- the serving tick ----------------------------------------------------
 
@@ -401,11 +488,18 @@ class StreamServer:
         backlog = sum(len(q) for q in self._queues.values())
         capacity = max(1, len(self._queues) * self.cfg.queue_depth)
         emas = [t.arrival_ema for t in self._telemetry.values()]
+        level_before = dg.level
         dg.observe(
             backlog / capacity,
             arrival_ema=sum(emas) / len(emas) if emas else 0.0,
             service_s=self._last_tick_wall,
         )
+        if dg.level != level_before:
+            self._event(
+                "degrade_level",
+                level_from=level_before, level_to=dg.level,
+                pressure=round(dg.pressure, 4),
+            )
         pol = dg.policy
         qpol = pol.queue_policy or self.cfg.queue_policy
         for q in self._queues.values():
@@ -436,54 +530,60 @@ class StreamServer:
         (still in-flight) per-tier combined stats, the ``(tier, rung)``
         session groups, and the dispatched variant keys."""
         self._tick_t0 = time.monotonic()
-        groups: Dict[Tuple[int, Optional[int]], List[Hashable]] = {}
-        for sid in ready:
-            tier = self._locate(sid)[0]
-            k = (
-                None if self.cfg.k_ladder is None
-                else self._controllers[sid].begin_chunk()
+        with self._span("schedule"):
+            groups: Dict[Tuple[int, Optional[int]], List[Hashable]] = {}
+            for sid in ready:
+                tier = self._locate(sid)[0]
+                k = (
+                    None if self.cfg.k_ladder is None
+                    else self._controllers[sid].begin_chunk()
+                )
+                groups.setdefault((tier, k), []).append(sid)
+            plans = self._sched.plan(
+                groups,
+                backlog=sum(len(q) for q in self._queues.values()),
             )
-            groups.setdefault((tier, k), []).append(sid)
-        plans = self._sched.plan(
-            groups,
-            backlog=sum(len(q) for q in self._queues.values()),
-        )
 
-        batches: Dict[int, SensorChunk] = {}
-        for tier in {t for t, _ in groups}:
-            rows = [self._zero_chunk] * self._tier_capacity(tier)
-            tp = self._tier_pool(tier)
-            for sid, chunk in ready.items():
-                if self._locate(sid)[0] == tier:
-                    rows[tp.slot_of(sid)] = chunk
-            batches[tier] = jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
+        with self._span("dispatch"):
+            batches: Dict[int, SensorChunk] = {}
+            for tier in {t for t, _ in groups}:
+                rows = [self._zero_chunk] * self._tier_capacity(tier)
+                tp = self._tier_pool(tier)
+                for sid, chunk in ready.items():
+                    if self._locate(sid)[0] == tier:
+                        rows[tp.slot_of(sid)] = chunk
+                batches[tier] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *rows
+                )
 
-        stats_parts: Dict[int, List[Any]] = {}
-        keys: List[Hashable] = []
-        for plan in plans:
-            tp = self._tier_pool(plan.tier)
-            batch = batches[plan.tier]
-            if len(plan.rungs) == 1:
-                k = plan.rungs[0]
-                stats = tp.step(
-                    batch,
-                    mask=self._slot_mask(plan.tier, plan.sids[0]),
-                    step_fn=None if k is None else self._rung_comp(k).step,
-                    key=k,
-                )
-            else:
-                stats = tp.step_multi(
-                    batch,
-                    jnp.stack([
-                        self._slot_mask(plan.tier, sids)
-                        for sids in plan.sids
-                    ]),
-                    [self._rung_step_fn(k) for k in plan.rungs],
-                    key=plan.key,
-                )
-            keys.append(plan.key)
-            self.n_dispatches += 1
-            stats_parts.setdefault(plan.tier, []).append(stats)
+            stats_parts: Dict[int, List[Any]] = {}
+            keys: List[Hashable] = []
+            for plan in plans:
+                tp = self._tier_pool(plan.tier)
+                batch = batches[plan.tier]
+                if len(plan.rungs) == 1:
+                    k = plan.rungs[0]
+                    stats = tp.step(
+                        batch,
+                        mask=self._slot_mask(plan.tier, plan.sids[0]),
+                        step_fn=(
+                            None if k is None else self._rung_comp(k).step
+                        ),
+                        key=k,
+                    )
+                else:
+                    stats = tp.step_multi(
+                        batch,
+                        jnp.stack([
+                            self._slot_mask(plan.tier, sids)
+                            for sids in plan.sids
+                        ]),
+                        [self._rung_step_fn(k) for k in plan.rungs],
+                        key=plan.key,
+                    )
+                keys.append(plan.key)
+                self.n_dispatches += 1
+                stats_parts.setdefault(plan.tier, []).append(stats)
         # Rung masks are disjoint and masked-out slots are zeroed, so
         # the union of a tier's per-rung stats is an elementwise
         # combine.
@@ -506,9 +606,10 @@ class StreamServer:
         stepped = [sid for sids in groups.values() for sid in sids]
         if stepped:
             tiers_stepped = sorted(stats_by_tier)
-            rb = tick_readback(
-                [stats_by_tier[t] for t in tiers_stepped]
-            )
+            with self._span("readback"):
+                rb = tick_readback(
+                    [stats_by_tier[t] for t in tiers_stepped]
+                )
             self._last_tick_wall = time.monotonic() - self._tick_t0
             self._sched.observe_tick(keys, self._last_tick_wall)
             base, off = {}, 0
@@ -534,9 +635,15 @@ class StreamServer:
                 tele.last_step_tick = self.n_ticks
                 ctl = self._controllers.get(sid)
                 if ctl is not None:
+                    k_before = ctl.k
                     ctl.update(
                         int(rb.overflow[row]), int(rb.peak_full[row])
                     )
+                    if ctl.k != k_before:
+                        self._event(
+                            "rung_change",
+                            stream=sid, k_from=k_before, k_to=ctl.k,
+                        )
                     tele.k_trajectory = ctl.k_trajectory
             self.frames_served += len(stepped) * self.cfg.chunk_frames
         stepped_set = set(stepped)
@@ -555,19 +662,27 @@ class StreamServer:
                     self.close(sid)
         if self._tiered:
             self._rebalance()
+        if self.recorder is not None:
+            self.recorder.end_tick()
 
     # -- tier rebalancing ----------------------------------------------------
 
     def _migrate(self, session_id: Hashable, to_tier: int) -> None:
-        slot = self.pool.migrate(session_id, to_tier)
         tele = self._telemetry[session_id]
+        from_tier = tele.tier
+        slot = self.pool.migrate(session_id, to_tier)
         tele.slot = slot
         tele.tier = to_tier
         tele.generation = self.pool.generation_of(slot)
         tele.n_migrations += 1
+        self._event(
+            "demote" if to_tier > from_tier else "promote",
+            stream=session_id, from_tier=from_tier, to_tier=to_tier,
+        )
 
     def _swap(self, session_a: Hashable, session_b: Hashable) -> None:
         self.pool.swap(session_a, session_b)
+        self._event("swap", stream=session_a, with_stream=session_b)
         for sid in (session_a, session_b):
             slot = self.pool.slot_of(sid)
             tele = self._telemetry[sid]
@@ -632,7 +747,9 @@ class StreamServer:
         Returns the session ids stepped this tick.  A tick with no
         pending work still advances the clock and the idle accounting.
         """
-        ready = self._pop_ready(self._degrade_step())
+        self._tick_begin()
+        with self._span("ingest"):
+            ready = self._pop_ready(self._degrade_step())
         if not ready:
             self._finish({}, {})
             return []
@@ -663,7 +780,9 @@ class StreamServer:
         ticks = 0
         self._refill(iters)
         while iters or any(len(q) for q in self._queues.values()):
-            ready = self._pop_ready(self._degrade_step())
+            self._tick_begin()
+            with self._span("ingest"):
+                ready = self._pop_ready(self._degrade_step())
             inflight = self._dispatch(ready) if ready else None
             self._refill(iters)  # overlaps the dispatched compute
             if inflight is not None:

@@ -34,7 +34,12 @@ Two small fixed-size companions share the transport framing:
   ``CREDIT`` (one extra u64: the requested window), the client half of
   credit-based flow control — the server's ACK carries the number of
   credits actually granted (sized to the stream's queue headroom, so a
-  paced producer never runs into ``NACK_BACKPRESSURE``);
+  paced producer never runs into ``NACK_BACKPRESSURE``), and
+  ``STATUS`` (op 5), the introspection request — answered not with an
+  EPWR ack but with a **status reply** (magic ``b"EPWS"``): a small
+  fixed header + a UTF-8 JSON snapshot of the server's occupancy,
+  queues, credit state, degrade level, seq cursors and the
+  ``STATUS_REASONS`` table (see :mod:`repro.obs.status`);
 * **replies** (magic ``b"EPWR"``): per-message ACK/NACK with a status
   code, so producers see backpressure (``NACK_BACKPRESSURE``) and
   admission failures (``NACK_POOL_FULL``) instead of silent drops.
@@ -63,6 +68,7 @@ WIRE_VERSION = 1
 DATA_MAGIC = b"EPWF"
 CTRL_MAGIC = b"EPWC"
 REPLY_MAGIC = b"EPWR"
+STATUS_MAGIC = b"EPWS"
 
 _FLAG_HAS_DEPTH = 1
 
@@ -87,15 +93,29 @@ OP_OPEN = 1
 OP_CLOSE = 2
 OP_RESUME = 3
 OP_CREDIT = 4
+# STATUS (PR 10): request the server's introspection snapshot — tier
+# occupancy, queue depths, credit state, degrade level, seq cursors and
+# the STATUS_REASONS table.  The reply is a STATUS REPLY frame (magic
+# EPWS, JSON payload), not a plain EPWR ack; stream_id is ignored
+# (status is server-wide) and 0 by convention.
+OP_STATUS = 5
 _OPS = {
     OP_OPEN: "open",
     OP_CLOSE: "close",
     OP_RESUME: "resume",
     OP_CREDIT: "credit",
+    OP_STATUS: "status",
 }
 
 # magic, version, status, stream_id, seq
 REPLY = struct.Struct("<4sHHQQ")
+# STATUS REPLY header: magic, version, reserved (0), payload nbytes —
+# followed by a UTF-8 JSON payload (the introspection snapshot of
+# repro.obs.status.collect_status).  Variable length: status is a
+# low-rate diagnostic channel, so a JSON body beats inventing a binary
+# schema for a dict that grows with every serving feature.
+STATUS_REPLY = struct.Struct("<4sHHQ")
+MAX_STATUS_NBYTES = 1 << 24  # fail fast on absurd/corrupt lengths
 ACK = 0
 NACK_BACKPRESSURE = 1
 NACK_POOL_FULL = 2
@@ -471,13 +491,60 @@ def decode_reply(buf: Buffer) -> Reply:
     return Reply(status, stream_id, seq)
 
 
+def encode_status_reply(status: dict) -> bytes:
+    """Serialize one introspection snapshot as a STATUS REPLY frame."""
+    import json
+
+    payload = json.dumps(status, separators=(",", ":")).encode("utf-8")
+    if len(payload) > MAX_STATUS_NBYTES:
+        raise WireFormatError(
+            f"status payload of {len(payload)} bytes exceeds the "
+            f"{MAX_STATUS_NBYTES}-byte limit"
+        )
+    header = STATUS_REPLY.pack(
+        STATUS_MAGIC, WIRE_VERSION, 0, len(payload)
+    )
+    return header + payload
+
+
+def decode_status_reply(buf: Buffer) -> dict:
+    """Decode a STATUS REPLY frame back into the snapshot dict."""
+    import json
+
+    view = memoryview(buf)
+    if len(view) < STATUS_REPLY.size:
+        raise WireFormatError(
+            f"truncated status reply: {len(view)} < {STATUS_REPLY.size}"
+        )
+    magic, version, _reserved, nbytes = STATUS_REPLY.unpack_from(
+        bytes(view[: STATUS_REPLY.size])
+    )
+    _check_magic_version(magic, STATUS_MAGIC, version)
+    if nbytes > MAX_STATUS_NBYTES:
+        raise WireFormatError(
+            f"status payload of {nbytes} bytes exceeds the "
+            f"{MAX_STATUS_NBYTES}-byte limit"
+        )
+    total = STATUS_REPLY.size + nbytes
+    if len(view) < total:
+        raise WireFormatError(
+            f"truncated status reply: header promises {total} bytes, "
+            f"got {len(view)}"
+        )
+    try:
+        return json.loads(bytes(view[STATUS_REPLY.size : total]))
+    except ValueError as e:
+        raise WireFormatError(f"malformed status payload: {e}") from None
+
+
 def decode_message(
     buf: Buffer, *, verify_crc: bool = True
 ) -> Tuple[str, Union[WireFrame, ControlFrame, Reply]]:
     """Dispatch one framed message on its magic.
 
-    Returns ``("data", WireFrame)``, ``("control", ControlFrame)`` or
-    ``("reply", Reply)``; raises :class:`WireFormatError` otherwise.
+    Returns ``("data", WireFrame)``, ``("control", ControlFrame)``,
+    ``("reply", Reply)`` or ``("status", dict)``; raises
+    :class:`WireFormatError` otherwise.
     """
     head = bytes(memoryview(buf)[:4])
     if head == DATA_MAGIC:
@@ -486,4 +553,6 @@ def decode_message(
         return "control", decode_control(buf)
     if head == REPLY_MAGIC:
         return "reply", decode_reply(buf)
+    if head == STATUS_MAGIC:
+        return "status", decode_status_reply(buf)
     raise WireFormatError(f"bad magic {head!r}")

@@ -13,88 +13,40 @@ every stepped chunk into three histograms:
                                     tick that served the chunk)
   ``total``       enqueue→readback (what a producer experiences)
 
-:class:`LatencyHistogram` is a fixed log-spaced bucket histogram
-(1 µs … 120 s), so recording is O(1) per sample with no sample list to
-grow, percentiles interpolate within a bucket (≤ ~9% relative bucket
-width), and two histograms merge by adding counts — the cross-pool
-aggregation the bench uses.
+:class:`LatencyHistogram` is the observability registry's
+:class:`~repro.obs.metrics.Histogram` pinned to the latency bucket
+layout (192 log-spaced buckets over 1 µs … 120 s): O(1) per-sample
+recording with no sample list, percentiles interpolated within a
+bucket (≤ ~9% relative bucket width), ``nan`` on an empty histogram,
+and layout-validated :meth:`~repro.obs.metrics.Histogram.merge` —
+the cross-pool aggregation the bench uses.
+
+Since PR 10 a recorder can live *inside* a
+:class:`~repro.obs.metrics.MetricsRegistry` (pass ``metrics=``): its
+three histograms become the registry's
+``ingest_latency_seconds{phase=...}`` family, so ``summary()`` and the
+registry snapshot/Prometheus export read the very same cells.
 """
 
 from __future__ import annotations
 
-import math
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
-_LO = 1e-6  # 1 µs
-_HI = 120.0  # 2 min: anything slower clamps into the last bucket
-_N_BUCKETS = 192  # ~9% relative width per bucket over [_LO, _HI]
+from repro.obs.metrics import (
+    DEFAULT_HI as _HI,
+    DEFAULT_LO as _LO,
+    DEFAULT_N_BUCKETS as _N_BUCKETS,
+    Histogram,
+)
 
 
-class LatencyHistogram:
-    """Fixed log-spaced histogram of durations in seconds."""
+class LatencyHistogram(Histogram):
+    """Fixed log-spaced histogram of durations in seconds (the
+    latency-telemetry layout of :class:`~repro.obs.metrics.Histogram`;
+    see that class for percentile/merge semantics)."""
 
     def __init__(self):
-        self.counts = [0] * (_N_BUCKETS + 2)  # + underflow + overflow
-        self.n = 0
-        self.max_s = 0.0
-        self._log_lo = math.log(_LO)
-        self._log_ratio = math.log(_HI / _LO)
-
-    def _bucket(self, dt_s: float) -> int:
-        if dt_s < _LO:
-            return 0
-        if dt_s >= _HI:
-            return _N_BUCKETS + 1
-        frac = (math.log(dt_s) - self._log_lo) / self._log_ratio
-        return 1 + min(_N_BUCKETS - 1, int(frac * _N_BUCKETS))
-
-    def _edge(self, i: int) -> float:
-        """Upper edge of bucket ``i`` (seconds)."""
-        if i <= 0:
-            return _LO
-        if i >= _N_BUCKETS + 1:
-            return _HI
-        return _LO * math.exp(self._log_ratio * i / _N_BUCKETS)
-
-    def record(self, dt_s: float) -> None:
-        self.counts[self._bucket(dt_s)] += 1
-        self.n += 1
-        if dt_s > self.max_s:
-            self.max_s = dt_s
-
-    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
-        for i, c in enumerate(other.counts):
-            self.counts[i] += c
-        self.n += other.n
-        self.max_s = max(self.max_s, other.max_s)
-        return self
-
-    def percentile(self, q: float) -> Optional[float]:
-        """The ``q``-quantile (``0 < q <= 1``) in seconds, interpolated
-        within its bucket; ``None`` on an empty histogram."""
-        if self.n == 0:
-            return None
-        target = q * self.n
-        seen = 0
-        for i, c in enumerate(self.counts):
-            if c == 0:
-                continue
-            if seen + c >= target:
-                lo = self._edge(i - 1)
-                hi = min(self._edge(i), self.max_s)
-                frac = (target - seen) / c
-                return lo + (max(hi, lo) - lo) * frac
-            seen += c
-        return self.max_s  # pragma: no cover - rounding fallback
-
-    def summary(self) -> Dict[str, float]:
-        """p50/p95/p99 + max in milliseconds, plus the sample count."""
-        out: Dict[str, float] = {"count": self.n}
-        for name, q in (("p50_ms", 0.50), ("p95_ms", 0.95), ("p99_ms", 0.99)):
-            p = self.percentile(q)
-            out[name] = None if p is None else round(p * 1e3, 4)
-        out["max_ms"] = round(self.max_s * 1e3, 4)
-        return out
+        super().__init__(lo=_LO, hi=_HI, n_buckets=_N_BUCKETS)
 
 
 class LatencyRecorder:
@@ -104,12 +56,30 @@ class LatencyRecorder:
     :meth:`observe` once per stepped chunk with the three monotonic
     timestamps.  NACK/drop events are counted by the wire server and
     queues themselves — :meth:`summary` is latency-only.
+
+    With ``metrics=`` the three histograms are created in (or adopted
+    from) that :class:`~repro.obs.metrics.MetricsRegistry` as the
+    ``ingest_latency_seconds{phase=queue_wait|service|total}`` family —
+    one backing store, every view bit-identical.
     """
 
-    def __init__(self):
-        self.queue_wait = LatencyHistogram()
-        self.service = LatencyHistogram()
-        self.total = LatencyHistogram()
+    METRIC = "ingest_latency_seconds"
+
+    def __init__(self, *, metrics: Optional[Any] = None):
+        if metrics is None:
+            self.queue_wait = LatencyHistogram()
+            self.service = LatencyHistogram()
+            self.total = LatencyHistogram()
+        else:
+            self.queue_wait = metrics.histogram(
+                self.METRIC, cls=_registry_hist, phase="queue_wait"
+            )
+            self.service = metrics.histogram(
+                self.METRIC, cls=_registry_hist, phase="service"
+            )
+            self.total = metrics.histogram(
+                self.METRIC, cls=_registry_hist, phase="total"
+            )
 
     @property
     def n(self) -> int:
@@ -134,6 +104,12 @@ class LatencyRecorder:
             "service": self.service.summary(),
             "total": self.total.summary(),
         }
+
+
+def _registry_hist(**_layout) -> LatencyHistogram:
+    """Registry factory: ignore the default layout kwargs and build the
+    latency-pinned histogram (same layout, canonical class)."""
+    return LatencyHistogram()
 
 
 def merge_recorders(recorders: List[LatencyRecorder]) -> LatencyRecorder:

@@ -37,12 +37,14 @@ from __future__ import annotations
 
 import hashlib
 import math
+import time
 from typing import Dict, List, NamedTuple, Sequence
 
 import numpy as np
 
 from repro.api.types import SensorChunk
 from repro.wire import codec
+from repro.wire.latency import LatencyHistogram
 from repro.wire.server import IngestServer, Loopback
 
 
@@ -108,6 +110,11 @@ class LoadGen:
             "n_closed": 0,
         }
         self.nack_counts: Dict[str, int] = {}
+        #: Client-side enqueue→ACK round-trip latency over every sent
+        #: message (the producer's view; the server's recorder sees the
+        #: queue_wait/service split).  Wall-clock — the sample *counts*
+        #: are deterministic, the timings are not.
+        self.rtt = LatencyHistogram()
 
     # -- wire encoding (header re-stamp over the cached payload) ------------
 
@@ -139,7 +146,10 @@ class LoadGen:
             self.trace_writer.append(
                 msg, timestamp_ns=tick * self.cfg.chunk_period_ns
             )
-        return self.loop.send(msg)
+        t0 = time.perf_counter()
+        reply = self.loop.send(msg)
+        self.rtt.record(time.perf_counter() - t0)
+        return reply
 
     def _count_nack(self, reply: codec.Reply) -> None:
         if not reply.ok:
@@ -224,6 +234,10 @@ class LoadGen:
             "n_sessions": self.n_sessions,
             "n_live_at_end": len(self.live),
             "event_log_sha": digest,
+            # Wall-clock percentiles live under their own key so the
+            # deterministic remainder still compares `==` across runs
+            # (tests pop "rtt" before comparing; its count is pinned).
+            "rtt": self.rtt.summary(),
         }
 
 

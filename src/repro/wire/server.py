@@ -57,6 +57,18 @@ producers are unaffected (credits are cooperative pacing; the queue
 bound still backstops them).  Outstanding grants are voided by RESUME:
 a reconnecting client starts from zero credit.
 
+**Introspection**: a ``STATUS`` control frame (op 5) is answered with
+an ``EPWS`` status reply — the JSON snapshot built by
+:func:`repro.obs.status.collect_status` (occupancy, queues, credit,
+degrade, seq cursors, counters, the ``STATUS_REASONS`` table).
+``Loopback.status()`` / ``WireClient.status()`` wrap the round-trip.
+All ingest counters live in a :class:`~repro.obs.metrics.
+MetricsRegistry` (shared with the ``StreamServer``'s when it has one);
+the ``n_*`` attributes and the ``nacks`` / ``seq_gaps_by_stream`` dicts
+are *views* over the same registry cells, so every surface —
+``counters()``, STATUS payloads, Prometheus export — reports the same
+integers.
+
 The serving *clock* stays with the caller: the ingest server never
 steps the pool on its own — call :meth:`tick` (or
 ``StreamServer.tick``) at the serving cadence.
@@ -72,6 +84,7 @@ import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, Optional, Tuple
 
+from repro.obs.metrics import MetricsRegistry, counter_property
 from repro.wire import codec
 
 LENGTH_PREFIX = struct.Struct("<I")
@@ -91,6 +104,19 @@ def frame_message(msg: bytes) -> bytes:
 class IngestServer:
     """Demux framed wire messages into a ``StreamServer``'s queues."""
 
+    # Registry-backed counters: `self.n_messages += 1` and checkpoint
+    # `setattr` round-trips keep working, but the integer lives in one
+    # `wire_*` registry cell shared by every view (`counters()`, STATUS
+    # payloads, Prometheus export).
+    n_messages = counter_property("wire_messages_total")
+    n_frames_in = counter_property("wire_frames_in_total")
+    n_opened = counter_property("wire_opened_total")
+    n_closed = counter_property("wire_closed_total")
+    n_resumed = counter_property("wire_resumed_total")
+    n_dup_suppressed = counter_property("wire_dup_suppressed_total")
+    n_credit_requests = counter_property("wire_credit_requests_total")
+    n_credit_granted = counter_property("wire_credit_granted_total")
+
     def __init__(
         self,
         stream_server,
@@ -102,24 +128,28 @@ class IngestServer:
         self.verify_crc = verify_crc
         self.strict_seq = strict_seq
         self.lock = threading.Lock()
-        self.n_messages = 0
-        self.n_frames_in = 0
-        self.n_opened = 0
-        self.n_closed = 0
-        self.n_resumed = 0
-        self.n_dup_suppressed = 0
-        self.n_credit_requests = 0
-        self.n_credit_granted = 0
-        self.nacks: Dict[str, int] = {}
+        # One registry per serving process: adopt the StreamServer's
+        # (PR 10) so `wire_*` and `serve_*` families snapshot/export
+        # together; fall back to a private one for bare frontiers.
+        # Must be set before any counter attribute is touched.
+        self.metrics = getattr(stream_server, "metrics", None)
+        if self.metrics is None:
+            self.metrics = MetricsRegistry()
+        for _attr in (
+            "n_messages", "n_frames_in", "n_opened", "n_closed",
+            "n_resumed", "n_dup_suppressed", "n_credit_requests",
+            "n_credit_granted",
+        ):
+            getattr(self, _attr)  # materialize zero-valued cells
         self._seq_seen: Dict[int, int] = {}
         # Credits granted but not yet consumed, per stream.  A grant is
         # bounded by queue headroom minus this balance, so the sum of
         # outstanding credits never exceeds the space that exists.
         self._credit: Dict[int, int] = {}
-        # Per-stream count of *missing* seqs skipped forward past
-        # (telemetry even in lax mode; retained after close so a bench
-        # can report end-of-run loss).
-        self.seq_gaps_by_stream: Dict[int, int] = {}
+        self.metrics.gauge(
+            "wire_credit_outstanding",
+            fn=lambda: sum(self._credit.values()),
+        )
         # Duplicate-suppression boundary set by RESUME: data seqs at or
         # below the cursor are ACKed without re-serving (the client's
         # window replay may overlap frames the server already has).
@@ -128,12 +158,54 @@ class IngestServer:
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._thread: Optional[threading.Thread] = None
 
+    # -- registry-backed dict views -----------------------------------------
+
+    @property
+    def nacks(self) -> Dict[str, int]:
+        """NACK counts by status name — a view over the registry's
+        ``wire_nacks_total{status=...}`` family (a fresh real dict, so
+        ``==`` comparisons against literals keep working)."""
+        return {
+            dict(lk)["status"]: c.value
+            for lk, c in self.metrics.family("wire_nacks_total").items()
+        }
+
+    @nacks.setter
+    def nacks(self, values: Dict[str, int]) -> None:
+        # Checkpoint restore assigns the whole dict: replace the family.
+        self.metrics.clear_family("wire_nacks_total")
+        for status, n in values.items():
+            self.metrics.counter(
+                "wire_nacks_total", status=str(status)
+            ).set(n)
+
+    @property
+    def seq_gaps_by_stream(self) -> Dict[int, int]:
+        """Per-stream count of *missing* seqs skipped forward past
+        (telemetry even in lax mode; retained after close so a bench
+        can report end-of-run loss).  View over
+        ``wire_seq_gaps_total{stream=...}``."""
+        return {
+            int(dict(lk)["stream"]): c.value
+            for lk, c in self.metrics.family("wire_seq_gaps_total").items()
+        }
+
+    @seq_gaps_by_stream.setter
+    def seq_gaps_by_stream(self, values: Dict[int, int]) -> None:
+        self.metrics.clear_family("wire_seq_gaps_total")
+        for sid, n in values.items():
+            self.metrics.counter(
+                "wire_seq_gaps_total", stream=int(sid)
+            ).set(n)
+
     # -- transport-agnostic core --------------------------------------------
 
     def _nack(self, status: int, stream_id: int, seq: int = 0) -> bytes:
-        self.nacks[codec.STATUS_NAMES[status]] = (
-            self.nacks.get(codec.STATUS_NAMES[status], 0) + 1
-        )
+        name = codec.STATUS_NAMES[status]
+        self.metrics.counter("wire_nacks_total", status=name).inc()
+        rec = getattr(self.srv, "recorder", None)
+        if rec is not None:
+            rec.event("nack", status=name, stream=stream_id, seq=seq)
         return codec.encode_reply(status, stream_id, seq)
 
     def handle_message(self, msg) -> bytes:
@@ -201,9 +273,7 @@ class IngestServer:
         return codec.encode_reply(codec.ACK, sid, frame.seq)
 
     def _count_gap(self, sid: int, gap: int) -> None:
-        self.seq_gaps_by_stream[sid] = (
-            self.seq_gaps_by_stream.get(sid, 0) + gap
-        )
+        self.metrics.counter("wire_seq_gaps_total", stream=int(sid)).inc(gap)
 
     def _handle_control(self, ctl: codec.ControlFrame) -> bytes:
         sid = ctl.stream_id
@@ -254,6 +324,13 @@ class IngestServer:
             # A zero grant is still an ACK — "no space yet, ask again
             # after a tick" — not an error.
             return codec.encode_reply(codec.ACK, sid, grant)
+        if ctl.op == codec.OP_STATUS:
+            # Introspection: answered with an EPWS status reply, not an
+            # EPWR ack.  The caller holds the ingest lock, so the
+            # snapshot is consistent w.r.t. concurrent submits/ticks.
+            from repro.obs.status import collect_status
+
+            return codec.encode_status_reply(collect_status(self))
         # OP_CLOSE (decode_control rejects anything else)
         if sid not in self._seq_seen:
             return self._nack(codec.NACK_UNKNOWN_STREAM, sid)
@@ -371,19 +448,38 @@ class IngestServer:
         self._servers.clear()
 
 
+def _decode_status(buf: bytes) -> Dict[str, Any]:
+    kind, payload = codec.decode_message(buf)
+    if kind != "status":
+        raise codec.WireFormatError(
+            f"expected a status reply, got {kind!r}"
+        )
+    return payload
+
+
 class Loopback:
     """In-process transport: the same framed messages, no sockets.
 
     ``send`` runs the full frame→reply path synchronously and returns
     the decoded :class:`~repro.wire.codec.Reply` — what the trace
-    replayer and the load generator drive.
+    replayer and the load generator drive.  ``roundtrip`` returns the
+    raw encoded reply bytes (EPWR *or* EPWS), and ``status()`` performs
+    the STATUS round-trip and decodes the JSON payload.
     """
 
     def __init__(self, ingest: IngestServer):
         self.ingest = ingest
 
+    def roundtrip(self, msg) -> bytes:
+        return self.ingest.handle_message(msg)
+
     def send(self, msg) -> codec.Reply:
-        return codec.decode_reply(self.ingest.handle_message(msg))
+        return codec.decode_reply(self.roundtrip(msg))
+
+    def status(self) -> Dict[str, Any]:
+        return _decode_status(
+            self.roundtrip(codec.encode_control(codec.OP_STATUS, 0))
+        )
 
 
 class WireClient:
@@ -461,11 +557,21 @@ class WireClient:
         )
 
     def send(self, msg: bytes) -> codec.Reply:
+        return codec.decode_reply(self._roundtrip(msg))
+
+    def status(self) -> Dict[str, Any]:
+        """STATUS round-trip: the server's JSON introspection snapshot
+        (see :func:`repro.obs.status.collect_status`)."""
+        return _decode_status(
+            self._roundtrip(codec.encode_control(codec.OP_STATUS, 0))
+        )
+
+    def _roundtrip(self, msg: bytes) -> bytes:
         try:
             self.sock.sendall(frame_message(msg))
             head = self._recv_exact(LENGTH_PREFIX.size)
             (nbytes,) = LENGTH_PREFIX.unpack(head)
-            return codec.decode_reply(self._recv_exact(nbytes))
+            return self._recv_exact(nbytes)
         except socket.timeout:
             # A wedged server (accepting but never replying) must look
             # like a dropped connection, not a hung producer.  The

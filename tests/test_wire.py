@@ -324,7 +324,9 @@ class TestLatency:
 
     def test_empty_and_extremes(self):
         h = LatencyHistogram()
-        assert h.percentile(0.5) is None
+        # empty percentiles are nan (defined, propagating); summaries
+        # render them as None to stay JSON-safe
+        assert math.isnan(h.percentile(0.5))
         assert h.summary()["p99_ms"] is None
         h.record(0.0)  # below the 1 µs floor -> underflow bucket
         h.record(1e9)  # absurd -> overflow bucket, max preserved
@@ -641,6 +643,11 @@ class TestLoadGen:
     def test_seeded_run_is_deterministic(self):
         s1, srv1 = self._run()
         s2, srv2 = self._run()
+        # client-side RTT percentiles are wall-clock (their *count* is
+        # deterministic, the timings are not): compare them apart from
+        # the seeded-deterministic remainder
+        rtt1, rtt2 = s1.pop("rtt"), s2.pop("rtt")
+        assert rtt1["count"] == rtt2["count"] > 0
         assert s1 == s2
         # the latency sample count is part of the deterministic shape
         assert (
